@@ -1,0 +1,118 @@
+"""Beyond-paper ablations on the flow protocol.
+
+1. **Partial peer views** (paper Sec. III assumes partial membership
+   knowledge but never quantifies it): flow quality vs the number of
+   next-stage peers each node knows (DHT lookup size k).
+2. **Annealing temperature**: T=0 (greedy local search) vs the paper's
+   T=1.7/alpha=0.95 vs hot T=5.
+3. **Timeout sensitivity** (Sec. V-D): time/mb vs the COMPLETE-timeout
+   under churn — too short wastes reroutes, too long stalls recovery.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.flow.decentralized import GWTFProtocol
+from repro.core.flow.graph import geo_distributed_network, synthetic_network
+from repro.core.flow.mincost import solve_training_flow
+from repro.core.simulator import ModelProfile, TrainingSimulator
+
+
+def _net(seed):
+    rng = np.random.default_rng(seed)
+    return synthetic_network(
+        num_stages=8, relays_per_stage=5,
+        capacities=lambda r: int(r.uniform(1, 3)),
+        link_costs=lambda r: float(int(r.uniform(1, 20))),
+        num_sources=1, source_capacity=4, rng=rng)
+
+
+def peer_view_ablation(reps=5, verbose=True):
+    rows = []
+    if verbose:
+        print("\n=== ablation: partial peer views (k next-stage peers) ===")
+    for k in (1, 2, 3, 5, None):
+        ratios, flows = [], []
+        for seed in range(reps):
+            net, cost = _net(seed)
+            proto = GWTFProtocol(net, cost_matrix=cost, objective="sum",
+                                 peer_view=k,
+                                 rng=np.random.default_rng(seed + 11))
+            proto.run(max_rounds=200)
+            n = len(proto.complete_flows())
+            flows.append(n)
+            if n:
+                opt = solve_training_flow(net, cost_matrix=cost, max_flow=n)
+                ratios.append(proto.total_cost() / max(opt.cost, 1e-9))
+        lab = "full" if k is None else str(k)
+        r = float(np.mean(ratios)) if ratios else float("nan")
+        f = float(np.mean(flows))
+        if verbose:
+            print(f"  view={lab:4s}  flows={f:.1f}  cost/optimal={r:.2f}")
+        rows.append(csv_row(f"ablate_peerview_{lab}", r, f"flows={f:.1f}"))
+    return rows
+
+
+def annealing_ablation(reps=5, verbose=True):
+    rows = []
+    if verbose:
+        print("\n=== ablation: simulated annealing temperature ===")
+    for T, alpha, lab in ((0.0, 0.95, "greedy"), (1.7, 0.95, "paper"),
+                          (5.0, 0.99, "hot")):
+        ratios = []
+        for seed in range(reps):
+            net, cost = _net(seed + 100)
+            proto = GWTFProtocol(net, cost_matrix=cost, objective="sum",
+                                 temperature=T, alpha=alpha,
+                                 rng=np.random.default_rng(seed + 21))
+            proto.run(max_rounds=200)
+            n = len(proto.complete_flows())
+            if n:
+                opt = solve_training_flow(net, cost_matrix=cost, max_flow=n)
+                ratios.append(proto.total_cost() / max(opt.cost, 1e-9))
+        r = float(np.mean(ratios))
+        if verbose:
+            print(f"  {lab:7s} (T={T}, a={alpha})  cost/optimal={r:.3f}")
+        rows.append(csv_row(f"ablate_anneal_{lab}", r))
+    return rows
+
+
+def timeout_ablation(reps=3, verbose=True):
+    rows = []
+    if verbose:
+        print("\n=== ablation: COMPLETE-timeout under 10% churn ===")
+    prof = ModelProfile(fwd_compute=0.05)
+    for timeout in (5.0, 30.0, 120.0, 600.0):
+        tpm, waste = [], []
+        for seed in range(reps):
+            rng = np.random.default_rng(seed)
+            caps = [int(rng.uniform(1, 4)) for _ in range(16)]
+            net = geo_distributed_network(
+                num_stages=4, relay_capacities=caps, num_data_nodes=2,
+                data_capacity=4, compute_cost=0.05,
+                rng=np.random.default_rng(seed))
+            sim = TrainingSimulator(net, scheduler="gwtf", profile=prof,
+                                    churn=0.1, timeout=timeout,
+                                    rng=np.random.default_rng(seed + 5))
+            ms = sim.run(8)[1:]
+            tpm.append(np.mean([m.time_per_microbatch for m in ms]))
+            waste.append(np.mean([m.wasted_gpu for m in ms]))
+        t, w = float(np.mean(tpm)), float(np.mean(waste))
+        if verbose:
+            print(f"  timeout={timeout:6.0f}s  time/mb={t:7.1f}s "
+                  f"waste={w:6.1f}s")
+        rows.append(csv_row(f"ablate_timeout_{int(timeout)}", t,
+                            f"waste={w:.1f}s"))
+    return rows
+
+
+def run(reps: int = 5, verbose: bool = True):
+    return (peer_view_ablation(reps, verbose)
+            + annealing_ablation(reps, verbose)
+            + timeout_ablation(max(3, reps // 2), verbose))
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

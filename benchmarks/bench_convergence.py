@@ -1,0 +1,55 @@
+"""Paper Fig. 6: loss convergence — GWTF at 10% churn vs centralized.
+
+Real JAX training through GWTF-routed stage replicas (reduced model scale
+for CPU).  The claim: GWTF does not alter training semantics, so the loss
+curves coincide up to the microbatches dropped by churn.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import get_config
+from repro.core.executor import CentralizedTrainer, DecentralizedTrainer
+from repro.core.flow.graph import geo_distributed_network
+from repro.data.pipeline import DataConfig, DataNodeShard
+
+
+def run(iterations: int = 30, verbose: bool = True):
+    cfg = get_config("gwtf-llama-300m").reduced(num_layers=4, d_model=128)
+    cfg = dataclasses.replace(cfg, vocab_size=512)
+    stages = 4
+    net = geo_distributed_network(
+        num_stages=stages, relay_capacities=[3] * 12, num_data_nodes=1,
+        data_capacity=8, rng=np.random.default_rng(0))
+    dec = DecentralizedTrainer(cfg, net, churn=0.1, lr=2e-3, seed=0)
+    cen = CentralizedTrainer(cfg, stages, lr=2e-3, seed=0)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, batch_size=16,
+                    microbatch_size=2, seed=0)
+    shard = DataNodeShard(dc, 0, 1)
+    dn = net.data_nodes()[0].id
+
+    for it in range(iterations):
+        mbs = shard.microbatches()
+        r = dec.iteration({dn: mbs})
+        cl = cen.iteration(mbs)
+        if verbose and it % 5 == 0:
+            print(f"iter {it:3d}: gwtf(10% churn)={r.loss:.4f} "
+                  f"[{r.completed}/{r.launched}]  centralized={cl:.4f}")
+
+    g = float(np.mean([l for l in dec.losses[-5:] if l > 0]))
+    c = float(np.mean(cen.losses[-5:]))
+    gap = abs(g - c)
+    if verbose:
+        print(f"final-5 mean: gwtf={g:.4f} centralized={c:.4f} gap={gap:.4f}")
+        print("paper Fig. 6: curves coincide — same SGD semantics.")
+    return [csv_row("fig6_final_loss_gwtf", g, f"centralized={c:.4f}"),
+            csv_row("fig6_convergence_gap", gap,
+                    "loss-gap after equal iterations")]
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

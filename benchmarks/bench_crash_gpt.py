@@ -1,0 +1,25 @@
+"""Paper Table III: the same crash-prone grid on the GPT-like model —
+demonstrates model-agnosticism (Sec. VI 'GWTF is model-agnostic')."""
+from benchmarks.common import crash_table, csv_row, print_crash_table
+
+
+def run(reps: int = 5, iterations: int = 12, verbose: bool = True):
+    rows = crash_table("gwtf-gpt-300m", reps=reps, iterations=iterations)
+    if verbose:
+        print_crash_table("Table III — GPT-like, crash-prone", rows)
+    out = []
+    for r in rows:
+        lab = f"tableIII_{r['setting']}{int(r['churn']*100)}"
+        s = r["swarm"]["time_per_mb_min"][0]
+        g = r["gwtf"]["time_per_mb_min"][0]
+        out.append(csv_row(f"{lab}_time_reduction", (s - g) / s if s else 0,
+                           f"swarm={s:.2f}min gwtf={g:.2f}min"))
+        out.append(csv_row(f"{lab}_gwtf_throughput",
+                           r["gwtf"]["throughput"][0],
+                           f"swarm={r['swarm']['throughput'][0]:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,31 @@
+"""Paper Table II: crash-prone training of the LLaMA-like model.
+
+GWTF vs SWARM, homogeneous/heterogeneous capacities x {0, 10, 20}% churn.
+Reported: time per microbatch (min), throughput (#mb/iteration),
+communication time, wasted GPU time.  Target claims: up to 45% training-
+time reduction in heterogeneous churn settings; wasted GPU time ~0.
+"""
+from benchmarks.common import crash_table, csv_row, print_crash_table
+
+
+def run(reps: int = 5, iterations: int = 12, verbose: bool = True):
+    rows = crash_table("gwtf-llama-300m", reps=reps, iterations=iterations)
+    if verbose:
+        print_crash_table("Table II — LLaMA-like, crash-prone", rows)
+    out = []
+    for r in rows:
+        lab = f"tableII_{r['setting']}{int(r['churn']*100)}"
+        s = r["swarm"]["time_per_mb_min"][0]
+        g = r["gwtf"]["time_per_mb_min"][0]
+        red = (s - g) / s if s else 0.0
+        out.append(csv_row(f"{lab}_time_reduction", red,
+                           f"swarm={s:.2f}min gwtf={g:.2f}min"))
+        out.append(csv_row(f"{lab}_gwtf_waste_min",
+                           r["gwtf"]["wasted_min"][0],
+                           f"swarm_waste={r['swarm']['wasted_min'][0]:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

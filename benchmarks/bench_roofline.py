@@ -1,0 +1,107 @@
+"""Roofline analysis from the dry-run compile artifacts (harness req.).
+
+For every (arch x shape x mesh) record in experiments/dryrun_*.json:
+
+  compute term    = HLO dot FLOPs / peak_FLOP/s          (per chip)
+  memory term     = HLO bytes accessed / HBM bandwidth   (per chip)
+  collective term = collective bytes / ICI link bandwidth
+
+(our HLO numbers are already per-partition, i.e. per chip — the SPMD
+module is the per-device program).  MODEL_FLOPS uses 6ND (train) /
+2ND (prefill) / 2N per token (decode) with N_active for MoE; the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat & dense-MoE waste.
+
+v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import csv_row
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.config import INPUT_SHAPES
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: shared + top-k experts only)."""
+    n = cfg.param_count()
+    if not cfg.is_moe:
+        return n
+    e_ff = 3 * cfg.d_model * cfg.d_ff
+    routed_total = cfg.num_experts * e_ff * cfg.num_layers
+    routed_active = cfg.num_experts_per_tok * e_ff * cfg.num_layers
+    return n - routed_total + routed_active
+
+
+def model_flops_per_chip(cfg, shape, chips: int) -> float:
+    n_act = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch / chips
+
+
+def roofline_row(rec: Dict) -> Dict:
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    compute_s = rec["dot_flops"] / PEAK_FLOPS_BF16
+    memory_s = rec["bytes_accessed"] / HBM_BW
+    collective_s = rec["collective_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_chip(cfg, shape, chips)
+    ratio = mf / rec["dot_flops"] if rec["dot_flops"] else float("nan")
+    return dict(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                moe_impl=rec.get("moe_impl", "dense"),
+                compute_s=compute_s, memory_s=memory_s,
+                collective_s=collective_s, dominant=dominant,
+                model_flops=mf, hlo_flops=rec["dot_flops"],
+                useful_ratio=ratio,
+                temp_gb=rec["memory"]["temp_size"] / 1e9,
+                analytic_gb=rec.get("analytic_memory", {}).get("total", 0) / 1e9)
+
+
+def load(path: str) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    return json.load(open(path))
+
+
+def run(verbose: bool = True,
+        paths=("experiments/dryrun_singlepod.json",)):
+    rows = []
+    for p in paths:
+        rows += [roofline_row(r) for r in load(p)]
+    if verbose and rows:
+        print("\n=== Roofline (per chip, seconds per step) ===")
+        print(f"{'arch':22s} {'shape':12s} {'mesh':8s} {'compute':>9s} "
+              f"{'memory':>9s} {'collect':>9s} {'dominant':>10s} "
+              f"{'useful':>7s}")
+        for r in rows:
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+                  f"{r['compute_s']:9.2e} {r['memory_s']:9.2e} "
+                  f"{r['collective_s']:9.2e} {r['dominant']:>10s} "
+                  f"{r['useful_ratio']:7.2f}")
+    out = []
+    for r in rows:
+        out.append(csv_row(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]),
+            f"dom={r['dominant']} c={r['compute_s']:.2e} "
+            f"m={r['memory_s']:.2e} x={r['collective_s']:.2e} "
+            f"useful={r['useful_ratio']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

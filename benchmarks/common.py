@@ -1,0 +1,87 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.flow.graph import geo_distributed_network
+from repro.core.simulator import ModelProfile, TrainingSimulator
+
+
+def paper_network(model_arch: str, *, het: bool, seed: int,
+                  num_stages: int = 6, relays: int = 16,
+                  data_nodes: int = 2, data_capacity: int = 4):
+    """The Sec. VI 'Node Crashes' setup: 18 nodes (2 data + 16 relays),
+    6 stages, microbatch 4 x seq 512, activations x32, 10 locations,
+    50-500 Mb/s links.  Heterogeneous caps U(1,3); homogeneous cap 4."""
+    cfg = get_config(model_arch)
+    prof = ModelProfile.from_config(cfg, num_stages=num_stages)
+    rng = np.random.default_rng(seed)
+    caps = ([int(rng.uniform(1, 4)) for _ in range(relays)] if het
+            else [4] * relays)
+    # 16 relays over 6 stages does not divide; the paper's first stage is
+    # folded into the data node — we use 4 pipeline stages of 4 relays to
+    # keep stages balanced (relative GWTF/SWARM ratios are the target).
+    stages = 4
+    net = geo_distributed_network(
+        num_stages=stages, relay_capacities=caps,
+        num_data_nodes=data_nodes, data_capacity=data_capacity,
+        compute_cost=prof.fwd_compute,
+        activation_size=prof.activation_bytes,
+        rng=np.random.default_rng(seed))
+    return net, prof
+
+
+def crash_table(model_arch: str, *, reps: int = 5, iterations: int = 12,
+                warmup: int = 2) -> List[Dict]:
+    """One paper crash table (II or III): hom/het x {0,10,20}% churn,
+    GWTF vs SWARM; metrics averaged over reps x iterations."""
+    rows = []
+    for het in (False, True):
+        for churn in (0.0, 0.1, 0.2):
+            cells = {}
+            for sched in ("swarm", "gwtf"):
+                tm, th, cm, wg = [], [], [], []
+                for rep in range(reps):
+                    net, prof = paper_network(model_arch, het=het, seed=rep)
+                    sim = TrainingSimulator(
+                        net, scheduler=sched, profile=prof, churn=churn,
+                        rng=np.random.default_rng(rep + 1000))
+                    ms = sim.run(iterations)[warmup:]
+                    tm.append(np.mean([m.time_per_microbatch for m in ms]))
+                    th.append(np.mean([m.completed for m in ms]))
+                    cm.append(np.mean([m.comm_time for m in ms]))
+                    wg.append(np.mean([m.wasted_gpu for m in ms]))
+                cells[sched] = dict(
+                    time_per_mb_min=(np.mean(tm) / 60, np.std(tm) / 60),
+                    throughput=(np.mean(th), np.std(th)),
+                    comm_min=(np.mean(cm) / 60, np.std(cm) / 60),
+                    wasted_min=(np.mean(wg) / 60, np.std(wg) / 60))
+            rows.append(dict(setting=("het" if het else "hom"),
+                             churn=churn, **cells))
+    return rows
+
+
+def print_crash_table(title: str, rows: List[Dict]):
+    print(f"\n=== {title} ===")
+    hdr = f"{'setting':10s} {'metric':16s} {'SWARM':>16s} {'GWTF':>16s} {'GWTF win':>9s}"
+    print(hdr)
+    for r in rows:
+        lab = f"{r['setting']} {int(r['churn']*100)}%"
+        for metric, nice in (("time_per_mb_min", "min/microbatch"),
+                             ("throughput", "throughput"),
+                             ("comm_min", "comm time (min)"),
+                             ("wasted_min", "wasted gpu (min)")):
+            s_m, s_s = r["swarm"][metric]
+            g_m, g_s = r["gwtf"][metric]
+            better = g_m >= s_m if metric == "throughput" else g_m <= s_m
+            print(f"{lab:10s} {nice:16s} {s_m:8.2f}±{s_s:5.2f} "
+                  f"{g_m:8.2f}±{g_s:5.2f} {'GWTF' if better else 'SWARM':>9s}")
+            lab = ""
+
+
+def csv_row(name: str, value: float, derived: str = "") -> str:
+    return f"{name},{value:.6g},{derived}"

@@ -1,0 +1,53 @@
+"""Churn-tolerance demo: GWTF vs SWARM under crash-heavy conditions.
+
+Reproduces the paper's core claim interactively: with 20% of relays
+crashing/rejoining each iteration, GWTF's flow repair keeps wasted GPU
+time near zero while SWARM's full-pipeline recomputes burn compute.
+
+    PYTHONPATH=src python examples/churn_recovery.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.flow.graph import geo_distributed_network
+from repro.core.simulator import ModelProfile, TrainingSimulator
+
+
+def run(scheduler: str, churn: float, seed: int = 0):
+    cfg = get_config("gwtf-llama-300m")
+    prof = ModelProfile.from_config(cfg, num_stages=6)
+    rng = np.random.default_rng(seed)
+    caps = [int(rng.uniform(1, 4)) for _ in range(16)]
+    net = geo_distributed_network(num_stages=4, relay_capacities=caps,
+                                  num_data_nodes=2, data_capacity=4,
+                                  compute_cost=prof.fwd_compute,
+                                  activation_size=prof.activation_bytes,
+                                  rng=np.random.default_rng(seed))
+    sim = TrainingSimulator(net, scheduler=scheduler, profile=prof,
+                            churn=churn, rng=np.random.default_rng(seed + 7))
+    ms = sim.run(15)[3:]
+    return {
+        "time/mb (min)": np.mean([m.time_per_microbatch for m in ms]) / 60,
+        "throughput": np.mean([m.completed for m in ms]),
+        "comm (min)": np.mean([m.comm_time for m in ms]) / 60,
+        "wasted gpu (min)": np.mean([m.wasted_gpu for m in ms]) / 60,
+    }
+
+
+def main():
+    for churn in (0.0, 0.1, 0.2):
+        print(f"\n=== churn {int(churn*100)}% (heterogeneous capacities) ===")
+        g = run("gwtf", churn)
+        s = run("swarm", churn)
+        for k in g:
+            better = "GWTF" if g[k] <= s[k] else "SWARM"
+            if k == "throughput":
+                better = "GWTF" if g[k] >= s[k] else "SWARM"
+            print(f"  {k:18s} GWTF={g[k]:6.2f}  SWARM={s[k]:6.2f}  [{better}]")
+        speedup = (s["time/mb (min)"] - g["time/mb (min)"]) / s["time/mb (min)"]
+        print(f"  GWTF training-time reduction: {speedup:+.0%} "
+              f"(paper: up to 45%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Checkpointing: pytree save/restore (paper Sec. VII-b).
+
+npz-based, dependency-free.  Supports per-stage checkpoints so a stage
+replica can bootstrap a joining node ("downloads the weights of the stage
+it will serve", Sec. V-E), plus full-model checkpoints for the launcher.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = {}
+    for i, l in enumerate(leaves):
+        a = np.asarray(l)
+        if a.dtype.name == "bfloat16":       # npz cannot store bf16
+            a = a.view(np.uint16)
+            flat[f"bf16_{i}"] = np.asarray(1)
+        flat[f"leaf_{i}"] = a
+    return flat, treedef
+
+
+def save(path: str, tree, step: int = 0, meta: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, treedef = _flatten(tree)
+    flat["__step"] = np.asarray(step)
+    np.savez(path, **flat)
+    sidecar = {"treedef": str(treedef), "num_leaves": len(flat) - 1,
+               "step": step, **(meta or {})}
+    with open(path + ".json", "w") as f:
+        json.dump(sidecar, f)
+
+
+def restore(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves, treedef = jax.tree.flatten(like)
+    import ml_dtypes
+    loaded = []
+    for i, l in enumerate(leaves):
+        a = data[f"leaf_{i}"]
+        if f"bf16_{i}" in data:
+            a = a.view(ml_dtypes.bfloat16)
+        loaded.append(a.astype(np.asarray(l).dtype))
+    for got, want in zip(loaded, leaves):
+        if got.shape != np.asarray(want).shape:
+            raise ValueError(f"shape mismatch: {got.shape} vs "
+                             f"{np.asarray(want).shape}")
+    step = int(data["__step"]) if "__step" in data else 0
+    return jax.tree.unflatten(treedef, loaded), step
+
+
+def save_stage(dirpath: str, stage: int, params, step: int = 0):
+    save(os.path.join(dirpath, f"stage_{stage:03d}.npz"), params, step=step)
+
+
+def restore_stage(dirpath: str, stage: int, like):
+    return restore(os.path.join(dirpath, f"stage_{stage:03d}.npz"), like)

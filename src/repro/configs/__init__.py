@@ -1,0 +1,55 @@
+"""Architecture config registry.
+
+One module per assigned architecture (``--arch <id>``); each exposes
+``CONFIG`` with the exact published dimensions plus ``input_specs(shape)``
+helpers via the registry.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "musicgen_medium",
+    "mamba2_130m",
+    "qwen1_5_4b",
+    "gemma_7b",
+    "tinyllama_1_1b",
+    "hymba_1_5b",
+    "granite_moe_3b_a800m",
+    "llama3_2_vision_90b",
+    "qwen2_moe_a2_7b",
+    "starcoder2_7b",
+    # the paper's own evaluation models
+    "gwtf_llama_300m",
+    "gwtf_gpt_300m",
+    "gwtf_llama_7b",
+]
+
+_ALIASES = {
+    "musicgen-medium": "musicgen_medium",
+    "mamba2-130m": "mamba2_130m",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "gemma-7b": "gemma_7b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "hymba-1.5b": "hymba_1_5b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "llama-3.2-vision-90b": "llama3_2_vision_90b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "starcoder2-7b": "starcoder2_7b",
+    "gwtf-llama-300m": "gwtf_llama_300m",
+    "gwtf-gpt-300m": "gwtf_gpt_300m",
+    "gwtf-llama-7b": "gwtf_llama_7b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = _ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,188 @@
+"""Flow-network model of a decentralized training system (paper Sec. III/IV).
+
+Nodes are data nodes or relay nodes, grouped into pipeline stages.  Link
+costs follow Eq. 1:
+
+    d_ij = (c_i + c_j)/2 + (lambda_ij + lambda_ji)/2 + 2*size/(beta_ij + beta_ji)
+
+with asymmetric latency/bandwidth averaged because every link is used once
+forward and once backward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Node:
+    id: int
+    stage: int                  # 0..S-1 for relays; -1 for data nodes
+    capacity: int               # max concurrent microbatches (cap_i)
+    compute_cost: float         # c_i: time to process one microbatch
+    is_data: bool = False
+    alive: bool = True
+
+    def __hash__(self):
+        return self.id
+
+
+@dataclass
+class FlowNetwork:
+    """Global network description — the *simulator's* ground truth.
+
+    Decentralized protocol code only ever reads local slices of this
+    (a node's own row/column and its known peers), preserving the paper's
+    partial-knowledge property.
+    """
+    nodes: Dict[int, Node]
+    num_stages: int
+    latency: np.ndarray          # (N, N) lambda_ij, seconds
+    bandwidth: np.ndarray        # (N, N) beta_ij, bytes/s
+    activation_size: float       # bytes per microbatch activation
+
+    def edge_cost(self, i: int, j: int, size: Optional[float] = None) -> float:
+        """Eq. 1 cost of moving one microbatch between nodes i and j."""
+        size = self.activation_size if size is None else size
+        ni, nj = self.nodes[i], self.nodes[j]
+        comp = 0.5 * (ni.compute_cost + nj.compute_cost)
+        lat = 0.5 * (self.latency[i, j] + self.latency[j, i])
+        bw = self.bandwidth[i, j] + self.bandwidth[j, i]
+        return comp + lat + 2.0 * size / bw
+
+    def comm_cost(self, i: int, j: int, size: Optional[float] = None) -> float:
+        """Communication-only part of Eq. 1 (no compute term)."""
+        size = self.activation_size if size is None else size
+        lat = 0.5 * (self.latency[i, j] + self.latency[j, i])
+        bw = self.bandwidth[i, j] + self.bandwidth[j, i]
+        return lat + 2.0 * size / bw
+
+    # ------------------------------------------------------------------
+    def stage_nodes(self, stage: int, alive_only: bool = True) -> List[Node]:
+        return [n for n in self.nodes.values()
+                if n.stage == stage and not n.is_data
+                and (n.alive or not alive_only)]
+
+    def data_nodes(self) -> List[Node]:
+        return [n for n in self.nodes.values() if n.is_data]
+
+    def alive_nodes(self) -> List[Node]:
+        return [n for n in self.nodes.values() if n.alive]
+
+    def stage_capacity(self, stage: int) -> int:
+        return sum(n.capacity for n in self.stage_nodes(stage))
+
+    def add_node(self, node: Node, latency_row=None, latency_col=None,
+                 bandwidth_row=None, bandwidth_col=None):
+        """Grow the matrices for a joining node."""
+        n = max(self.nodes) + 1 if self.nodes else 0
+        assert node.id == n, f"node ids must be dense ({node.id} != {n})"
+        size = n + 1
+        for name, row, col, fill in (("latency", latency_row, latency_col, 0.05),
+                                     ("bandwidth", bandwidth_row, bandwidth_col, 500e6 / 8)):
+            old = getattr(self, name)
+            new = np.full((size, size), fill)
+            new[:n, :n] = old
+            if row is not None:
+                new[n, :n] = row
+            if col is not None:
+                new[:n, n] = col
+            setattr(self, name, new)
+        self.nodes[node.id] = node
+
+
+# ---------------------------------------------------------------------------
+# Topology builders (paper Sec. VI setup)
+# ---------------------------------------------------------------------------
+
+def geo_distributed_network(
+    *,
+    num_stages: int,
+    relay_capacities: List[int],
+    num_data_nodes: int = 2,
+    data_capacity: int = 4,
+    rng: Optional[np.random.Generator] = None,
+    num_locations: int = 10,
+    min_bandwidth: float = 50e6 / 8,     # 50 Mb/s in bytes/s
+    max_bandwidth: float = 500e6 / 8,    # 500 Mb/s
+    compute_cost: float = 6.0,           # seconds per microbatch fwd+bwd
+    compute_jitter: float = 0.3,
+    activation_size: float = 4 * 512 * 1024 * 2 * 32,  # mb=4, seq=512, x32 scale
+) -> FlowNetwork:
+    """Build the paper's geo-distributed evaluation topology.
+
+    Relay nodes are spread over ``num_locations`` simulated locations;
+    intra-location links get max bandwidth / low latency, inter-location
+    links get degraded bandwidth (down to 50 Mb/s) and higher latency.
+    ``activation_size`` bakes in the paper's x32 bandwidth-reduction trick.
+    """
+    rng = rng or np.random.default_rng(0)
+    nodes: Dict[int, Node] = {}
+    nid = 0
+    for _ in range(num_data_nodes):
+        nodes[nid] = Node(nid, -1, data_capacity, 0.0, is_data=True)
+        nid += 1
+    per_stage = len(relay_capacities) // num_stages
+    for s in range(num_stages):
+        for k in range(per_stage):
+            cap = relay_capacities[s * per_stage + k]
+            c = compute_cost * (1.0 + compute_jitter * rng.standard_normal())
+            nodes[nid] = Node(nid, s, cap, max(0.5, c))
+            nid += 1
+
+    N = nid
+    loc = rng.integers(0, num_locations, size=N)
+    lat = np.empty((N, N))
+    bw = np.empty((N, N))
+    for i in range(N):
+        for j in range(N):
+            if loc[i] == loc[j]:
+                lat[i, j] = rng.uniform(0.001, 0.005)
+                bw[i, j] = max_bandwidth
+            else:
+                lat[i, j] = rng.uniform(0.02, 0.15)
+                bw[i, j] = rng.uniform(min_bandwidth, max_bandwidth)
+    np.fill_diagonal(lat, 0.0)
+    np.fill_diagonal(bw, max_bandwidth)
+    return FlowNetwork(nodes=nodes, num_stages=num_stages, latency=lat,
+                       bandwidth=bw, activation_size=activation_size)
+
+
+def synthetic_network(
+    *,
+    num_stages: int,
+    relays_per_stage: int,
+    capacities,                   # callable(rng) -> int
+    link_costs,                   # callable(rng) -> float (total d_ij directly)
+    num_sources: int = 1,
+    source_capacity: int = 100,
+    rng: Optional[np.random.Generator] = None,
+) -> Tuple[FlowNetwork, np.ndarray]:
+    """Abstract flow-test network (paper Tables IV/V): d_ij drawn directly.
+
+    Returns (network, cost_matrix) where cost_matrix[i, j] *is* d_ij —
+    edge_cost is bypassed by storing costs in the latency matrix with
+    zero compute and infinite bandwidth.
+    """
+    rng = rng or np.random.default_rng(0)
+    nodes: Dict[int, Node] = {}
+    nid = 0
+    for _ in range(num_sources):
+        nodes[nid] = Node(nid, -1, source_capacity, 0.0, is_data=True)
+        nid += 1
+    for s in range(num_stages):
+        for _ in range(relays_per_stage):
+            nodes[nid] = Node(nid, s, int(capacities(rng)), 0.0)
+            nid += 1
+    N = nid
+    cost = np.empty((N, N))
+    for i in range(N):
+        for j in range(N):
+            cost[i, j] = link_costs(rng) if i != j else 0.0
+    net = FlowNetwork(nodes=nodes, num_stages=num_stages,
+                      latency=cost, bandwidth=np.full((N, N), np.inf),
+                      activation_size=0.0)
+    return net, cost

@@ -1,0 +1,89 @@
+"""SWARM parallelism baseline (Ryabinin et al., ICML'23) — as characterised
+in the GWTF paper:
+
+* stochastic greedy wiring: each node independently forwards a microbatch
+  to the closest (lowest comm-cost) *responsive* node of the next stage —
+  no flow construction, no capacity planning;
+* assumes homogeneous memory: nodes are considered available regardless of
+  their real capacity, so heterogeneous nodes over-commit and queue;
+* forward-pass crash: timeout + resend to a different next-stage node;
+* backward-pass crash: the WHOLE pipeline for that microbatch is
+  recomputed from the data node (the paper's key inefficiency claim).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.flow.graph import FlowNetwork
+
+
+class SwarmRouter:
+    """Greedy next-stage selection with optional stochastic tie-breaking."""
+
+    def __init__(self, net: FlowNetwork, *,
+                 cost_matrix: Optional[np.ndarray] = None,
+                 stochastic: bool = False,
+                 rng: Optional[np.random.Generator] = None):
+        self.net = net
+        self.cost_matrix = cost_matrix
+        self.stochastic = stochastic
+        self.rng = rng or np.random.default_rng(0)
+
+    def d(self, i: int, j: int) -> float:
+        if self.cost_matrix is not None:
+            return float(self.cost_matrix[i, j])
+        return self.net.edge_cost(i, j)
+
+    def next_hop(self, current: int, next_stage: int, data_node: int,
+                 exclude: Optional[set] = None) -> Optional[int]:
+        """Greedy: closest alive node of the next stage (or the data node
+        when the pipeline is done).  ``exclude`` = peers already timed out."""
+        exclude = exclude or set()
+        if next_stage >= self.net.num_stages:
+            return data_node if self.net.nodes[data_node].alive else None
+        cands = [n.id for n in self.net.stage_nodes(next_stage)
+                 if n.id not in exclude]
+        if not cands:
+            return None
+        costs = np.array([self.d(current, j) for j in cands])
+        if self.stochastic:
+            # SWARM prioritises faster peers stochastically
+            w = 1.0 / np.maximum(costs, 1e-9)
+            w = w / w.sum()
+            return int(self.rng.choice(cands, p=w))
+        return int(cands[int(np.argmin(costs))])
+
+    def route(self, data_node: int) -> Optional[List[int]]:
+        """A full greedy path for one microbatch (no capacity checks)."""
+        path = [data_node]
+        cur = data_node
+        for s in range(self.net.num_stages):
+            nxt = self.next_hop(cur, s, data_node)
+            if nxt is None:
+                return None
+            path.append(nxt)
+            cur = nxt
+        path.append(data_node)
+        return path
+
+    def route_with_capacity(self, data_node: int, used: dict
+                            ) -> Optional[List[int]]:
+        """Greedy path that only uses nodes with remaining capacity
+        (``used`` is a shared node_id -> consumed-slots dict).  This is
+        the *feasible* SWARM baseline of Fig. 7 — a schedule that
+        over-commits capacity is not executable."""
+        path = [data_node]
+        cur = data_node
+        for s in range(self.net.num_stages):
+            full = {nid for nid, u in used.items()
+                    if u >= self.net.nodes[nid].capacity}
+            nxt = self.next_hop(cur, s, data_node, exclude=full)
+            if nxt is None:
+                return None
+            path.append(nxt)
+            used[nxt] = used.get(nxt, 0) + 1
+            cur = nxt
+        path.append(data_node)
+        return path

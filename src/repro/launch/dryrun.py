@@ -1,0 +1,286 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); 512 host devices back the production meshes:
+
+  * single-pod (16, 16)   ("data", "model")          = 256 chips
+  * multi-pod  (2, 16, 16) ("pod", "data", "model")  = 512 chips
+
+For each combination this lowers the appropriate step (train_4k ->
+train_step, prefill_32k -> prefill_step, decode_32k / long_500k ->
+serve_step), compiles it, and records memory_analysis / cost_analysis /
+collective byte counts parsed from the compiled HLO — the inputs to
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod|--both-meshes]
+"""
+from __future__ import annotations
+
+# The env var MUST be set before any jax import — jax locks the device
+# count at first init.  These are the required "first two lines" modulo
+# the module docstring (a string literal cannot execute after imports).
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.hlo_analysis import (COLLECTIVES, analyze_hlo,
+                                       f32_legalization_bytes)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_params, decode_cache_len,
+                                input_specs)
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step, serve_shardings,
+                                train_shardings)
+from repro.models.config import INPUT_SHAPES
+from repro.optim.adamw import AdamW
+from repro.parallel.sharding import ShardingRules
+
+
+def analytic_memory(cfg, shape, *, chips: int, grad_accum: int) -> Dict[str, float]:
+    """Model-based per-chip TPU memory estimate (bytes).
+
+    The compile-side memory_analysis() on the CPU backend includes
+    bf16->f32 legalization copies that do not exist on the TPU MXU; this
+    analytic model is the TPU-side "fits" evidence (cross-checked against
+    the measured temp minus the detected legalization buffers).
+    """
+    n_params = cfg.param_count()
+    out: Dict[str, float] = {}
+    if shape.kind == "train":
+        micro_rows = max(1, shape.global_batch // grad_accum // 16)
+        act = micro_rows * shape.seq_len * cfg.d_model * 2
+        layers_live = cfg.num_layers          # remat carry, seq/16 sharded
+        out["params"] = n_params * 2 / chips
+        out["optimizer"] = n_params * 8 / chips
+        out["grad_accum_f32"] = n_params * 4 / chips
+        out["activations"] = act * layers_live / 16      # seq-parallel
+        out["workspace"] = 2e9
+    elif shape.kind == "prefill":
+        rows = max(1, shape.global_batch // 16)
+        out["params"] = n_params * 2 / chips * 16        # TP-sharded only
+        cache = (2 * cfg.num_layers * shape.global_batch * shape.seq_len
+                 * cfg.kv_dim * 2) if cfg.num_heads else 0
+        out["kv_cache"] = cache / chips
+        out["activations"] = rows * shape.seq_len * cfg.d_model * 2 * 4 / 16
+        out["workspace"] = 1e9
+    else:
+        from repro.launch.specs import decode_cache_len
+        clen = decode_cache_len(cfg, shape)
+        cache = (2 * cfg.num_layers * shape.global_batch * clen
+                 * cfg.kv_dim * 2) if cfg.num_heads else 0
+        if cfg.has_ssm:
+            di = cfg.d_inner
+            cache += (cfg.num_layers * shape.global_batch
+                      * (cfg.ssm_heads * (di // max(1, cfg.ssm_heads))
+                         * cfg.ssm_state * 4 + (cfg.ssm_conv - 1)
+                         * (di + 2 * cfg.ssm_state) * 2))
+        out["params"] = n_params * 2 / chips * 16
+        out["kv_cache"] = cache / chips                  # donated in place
+        out["workspace"] = 1e9
+    out["total"] = sum(out.values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one combination
+# ---------------------------------------------------------------------------
+
+DEFAULT_GRAD_ACCUM = 8
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            moe_impl: str = "dense", grad_accum: Optional[int] = None,
+            infer_params: str = "fsdp",
+            rules: Optional[ShardingRules] = None,
+            verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if rules is None:
+        # sequence-parallel residual stream for train/prefill (S >= 4096);
+        # decode steps have S == 1 (the seq rule no-ops there anyway).
+        rules = ShardingRules(seq="model" if shape.kind != "decode" else None)
+    if infer_params == "replicated" and shape.kind != "train":
+        # weight-stationary inference: params TP-sharded only (no FSDP),
+        # eliminating per-layer weight all-gathers at serving time.
+        rules = ShardingRules(seq=rules.seq, fsdp=None)
+    t0 = time.time()
+    if grad_accum is None:
+        if shape.kind != "train":
+            grad_accum = 1
+        else:
+            # keep per-device microbatch rows x d_model bounded, but the
+            # per-microstep batch must stay divisible by the DP degree
+            # (pod x data) or GSPMD silently replicates the batch.
+            dp = 32 if multi_pod else 16
+            grad_accum = DEFAULT_GRAD_ACCUM
+            if cfg.d_model >= 8192 or cfg.is_moe:
+                grad_accum = 16
+            grad_accum = min(grad_accum, shape.global_batch // dp)
+
+    params_abs = abstract_params(cfg)
+    batch_abs = input_specs(cfg, shape_name, grad_accum=grad_accum)
+
+    donate = ()
+    if shape.kind == "train":
+        opt = AdamW()
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        in_sh, out_sh = train_shardings(cfg, params_abs, opt_abs, batch_abs,
+                                        rules, mesh, grad_accum=grad_accum)
+        step = make_train_step(cfg, opt, mesh=mesh, rules=rules,
+                               moe_impl=moe_impl, grad_accum=grad_accum)
+        args = (params_abs, opt_abs, batch_abs)
+        donate = (0, 1)          # params + optimizer state are updated in place
+    elif shape.kind == "prefill":
+        cache_len = shape.seq_len
+        cache_abs = jax.eval_shape(
+            lambda: __import__("repro.models.transformer",
+                               fromlist=["init_cache"]).init_cache(
+                                   cfg, shape.global_batch, cache_len))
+        in_sh, out_sh = serve_shardings(cfg, params_abs, batch_abs, rules,
+                                        mesh, global_batch=shape.global_batch,
+                                        cache_abstract=cache_abs)
+        step = make_prefill_step(cfg, cache_len, mesh=mesh, rules=rules,
+                                 moe_impl=moe_impl)
+        args = (params_abs, batch_abs)
+    else:
+        window = (cfg.sliding_window
+                  if decode_cache_len(cfg, shape) != shape.seq_len else None)
+        in_sh, out_sh = serve_shardings(cfg, params_abs, batch_abs, rules,
+                                        mesh, global_batch=shape.global_batch)
+        step = make_decode_step(cfg, window=window, mesh=mesh, rules=rules,
+                                moe_impl=moe_impl)
+        args = (params_abs, batch_abs)
+        donate = (1,)            # the KV cache is updated in place
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    hlo = analyze_hlo(hlo_text)
+    f32_legal = f32_legalization_bytes(hlo_text)
+    elapsed = time.time() - t0
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "moe_impl": moe_impl,
+        "grad_accum": grad_accum,
+        "infer_params": infer_params,
+        "compile_s": round(elapsed, 1),
+        "xla_flops_raw": cost.get("flops", 0.0),   # scan bodies counted once
+        "dot_flops": hlo.dot_flops,                # scan-aware (per device)
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collective_bytes": hlo.total_collective_bytes,
+        "collective_detail": dict(hlo.collective_bytes),
+        "collective_count": hlo.collective_count,
+        "while_loops": hlo.while_loops,
+        "unparsed_dots": hlo.unparsed_dots,
+        "memory": {
+            "argument_size": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_size": getattr(mem, "alias_size_in_bytes", 0),
+            # XLA:CPU legalises bf16 GEMMs via f32 converts (often
+            # loop-hoisted into full-tensor copies); the TPU MXU consumes
+            # bf16 natively, so those buffers vanish there.
+            "f32_legalization": f32_legal,
+            "tpu_temp_estimate": max(
+                0, getattr(mem, "temp_size_in_bytes", 0) - f32_legal),
+            "peak": (getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "analytic_memory": analytic_memory(
+            cfg, shape, chips=512 if multi_pod else 256,
+            grad_accum=grad_accum),
+    }
+    if verbose:
+        chips = 512 if multi_pod else 256
+        print(f"[{arch} x {shape_name} x {result['mesh']}] "
+              f"compile={elapsed:.1f}s dot_flops={result['dot_flops']:.3e} "
+              f"bytes={result['bytes_accessed']:.3e} "
+              f"coll={result['collective_bytes']:.3e} "
+              f"temp/device={result['memory']['temp_size']/1e9:.2f}GB "
+              f"(tpu-est {result['memory']['tpu_temp_estimate']/1e9:.2f}GB, "
+              f"analytic {result['analytic_memory']['total']/1e9:.2f}GB) "
+              f"args/device={result['memory']['argument_size']/1e9:.2f}GB")
+        print(f"  memory_analysis: {mem}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 multi-pod mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-impl", default="dense",
+                    choices=("dense", "ragged", "capacity"))
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--infer-params", default="fsdp",
+                    choices=("fsdp", "replicated"))
+    ap.add_argument("--out", default="experiments/dryrun_results.json")
+    args = ap.parse_args()
+
+    assigned = [a for a in ARCH_IDS if not a.startswith("gwtf_")]
+    archs = [args.arch] if args.arch else assigned
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_one(arch, shape, multi_pod=mp,
+                                           moe_impl=args.moe_impl,
+                                           grad_accum=args.grad_accum,
+                                           infer_params=args.infer_params))
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, repr(e)))
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    mode = "a" if os.path.exists(args.out) else "w"
+    existing = []
+    if mode == "a":
+        try:
+            existing = json.load(open(args.out))
+        except Exception:
+            existing = []
+    keyset = {(r["arch"], r["shape"], r["mesh"], r["moe_impl"],
+               r.get("infer_params", "fsdp"))
+              for r in results}
+    existing = [r for r in existing
+                if (r["arch"], r["shape"], r["mesh"],
+                    r.get("moe_impl", "dense"), r.get("infer_params", "fsdp"))
+                not in keyset]
+    json.dump(existing + results, open(args.out, "w"), indent=1)
+    print(f"\n{len(results)} OK, {len(failures)} failed -> {args.out}")
+    for f in failures:
+        print("FAIL:", f)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

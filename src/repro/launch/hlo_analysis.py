@@ -1,0 +1,250 @@
+"""Scan-aware HLO cost analysis for the roofline report.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once*,
+which under-reports FLOPs and collective bytes by ~num_layers for scanned
+models.  This module parses the compiled HLO text, recovers while-loop
+trip counts from their condition computations, and propagates execution
+multipliers through the call graph (body= / condition= / calls= /
+to_apply=), yielding:
+
+* ``dot_flops``          — 2 * prod(result_dims) * contraction, x trips
+* ``collective_bytes``   — per collective type (result-shape bytes), x trips
+* ``collective_count``
+
+These feed EXPERIMENTS.md §Roofline.  Parsing is defensive: anything that
+fails to parse contributes at multiplier 1 (never silently dropped).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "f64": 8, "s64": 8, "pred": 1, "s16": 2, "u16": 2,
+          "c64": 8, "c128": 16, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_BYTES) + r")\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_COLL_RE = re.compile(
+    r"\b(" + "|".join(COLLECTIVES) + r")(-start)?\(")
+
+
+def _dims_of(shape_str: str) -> List[Tuple[str, List[int]]]:
+    """All (dtype, dims) annotations in a string."""
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+def _elems(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclass
+class _Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    symbols: Dict[str, Tuple[str, List[int]]] = field(default_factory=dict)
+
+
+def _split_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for raw in text.splitlines():
+        stripped = raw.strip()
+        if cur is None or not raw.startswith(" "):
+            hdr = _COMP_HDR.match(stripped)
+            if hdr and stripped.endswith("{"):
+                cur = _Computation(hdr.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if not stripped:
+            continue
+        cur.lines.append(stripped)
+        d = _DEF_RE.match(stripped)
+        if d:
+            shapes = _dims_of(d.group(2).split("(")[0])
+            if shapes:
+                cur.symbols[d.group(1)] = shapes[0]
+    return comps
+
+
+def _find_entry(text: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond: _Computation) -> int:
+    """while-condition: compare(iter, constant(N)) direction=LT -> N."""
+    consts = [int(m.group(1)) for line in cond.lines
+              for m in _CONST_RE.finditer(line)]
+    return max(consts) if consts else 1
+
+
+@dataclass
+class HLOCosts:
+    dot_flops: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    collective_count: float = 0.0
+    while_loops: int = 0
+    unparsed_dots: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _dot_flops_line(line: str, symbols) -> Tuple[float, bool]:
+    m = re.search(r"=\s+(.*?)\s*dot\(([^)]*)\)", line)
+    if not m:
+        return 0.0, False
+    res = _dims_of(m.group(1))
+    if not res:
+        return 0.0, False
+    res_elems = _elems(res[0][1])
+    ops = [o.strip().lstrip("%") for o in m.group(2).split(",")]
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    lhs = symbols.get(ops[0]) if ops else None
+    if cm is not None and lhs is not None:
+        cdims = [int(x) for x in cm.group(1).split(",") if x]
+        k = 1
+        for d in cdims:
+            if d < len(lhs[1]):
+                k *= lhs[1][d]
+        return 2.0 * res_elems * k, True
+    return 0.0, True        # dot seen but contraction unknown
+
+
+def analyze_hlo(text: str) -> HLOCosts:
+    comps = _split_computations(text)
+    entry = _find_entry(text)
+    costs = HLOCosts()
+    if entry is None or entry not in comps:
+        return costs
+
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        name = order.pop(0)
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m = mult[name]
+        for line in comp.lines:
+            if " while(" in line or line.startswith("while("):
+                costs.while_loops += 1
+                body = re.search(r"body=%?([\w\.\-]+)", line)
+                cond = re.search(r"condition=%?([\w\.\-]+)", line)
+                trip = 1
+                if cond and cond.group(1) in comps:
+                    trip = _trip_count(comps[cond.group(1)])
+                if body:
+                    b = body.group(1)
+                    mult[b] += m * trip
+                    if b not in seen:
+                        seen.add(b)
+                        order.append(b)
+                continue
+            for _, target in re.findall(r"(calls|to_apply)=%?([\w\.\-]+)",
+                                        line):
+                mult[target] += m
+                if target not in seen:
+                    seen.add(target)
+                    order.append(target)
+            cm = re.search(r"(?:conditional|case)\(", line)
+            if cm:
+                for t in re.findall(r"branch_computations=\{([^}]*)\}", line):
+                    for target in t.replace("%", "").split(","):
+                        target = target.strip()
+                        mult[target] += m
+                        if target and target not in seen:
+                            seen.add(target)
+                            order.append(target)
+
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for line in comp.lines:
+            if "dot(" in line:
+                f, ok = _dot_flops_line(line, comp.symbols)
+                costs.dot_flops += m * f
+                if not ok:
+                    costs.unparsed_dots += 1
+                continue
+            cm = _COLL_RE.search(line)
+            if cm and "-done(" not in line:
+                mres = re.search(r"=\s+(.*?)\s*" + cm.group(1), line)
+                b = 0
+                if mres:
+                    for dt, dims in _dims_of(mres.group(1)):
+                        b += _elems(dims) * _BYTES[dt]
+                # fallback: whole-line first shape
+                if b == 0:
+                    shapes = _dims_of(line)
+                    if shapes:
+                        b = _elems(shapes[0][1]) * _BYTES[shapes[0][0]]
+                costs.collective_bytes[cm.group(1)] += m * b
+                costs.collective_count += m
+    return costs
+
+
+_CONVERT_RE = re.compile(
+    r"(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*f32\[([0-9,]+)\]\S*\s+"
+    r"(?:convert\(|fusion\((?=[^)]*\)[^\n]*calls=%?wrapped_convert))")
+
+
+def f32_legalization_bytes(text: str, min_bytes: int = 100_000_000) -> float:
+    """Bytes of large f32 buffers produced by bf16->f32 converts.
+
+    XLA:CPU has no native bf16 GEMM: it legalises by converting operands
+    to f32, and LICM hoists loop-invariant converts into full-tensor f32
+    copies (e.g. an entire KV-cache stack).  On TPU the MXU consumes bf16
+    directly, so these buffers do not exist.  Each buffer is counted once
+    (memory, not executions).  Used to derive ``tpu_temp_estimate`` in the
+    dry-run records; see EXPERIMENTS.md §Dry-run notes.
+    """
+    total = 0.0
+    seen = set()
+    in_wrapped_convert = False
+    for raw in text.splitlines():
+        ls = raw.strip()
+        if not raw.startswith(" ") and ls.endswith("{"):
+            in_wrapped_convert = "wrapped_convert_computation" in ls
+            continue
+        if in_wrapped_convert:
+            continue          # inner body duplicates the fusion result
+        m = _CONVERT_RE.match(ls)
+        if not m:
+            continue
+        name, dims = m.group(1), m.group(2)
+        if name in seen or "convert(%convert" in ls:
+            continue          # chained converts share a transient buffer
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * 4
+        if b >= min_bytes:
+            seen.add(name)
+            total += b
+    return total

@@ -1,0 +1,96 @@
+"""Serving driver: batched prefill + decode with a KV cache.
+
+Complements launch/train.py — the decode_32k / long_500k dry-run shapes
+lower exactly this step.  On CPU it serves a reduced config for real:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --batch 4 --prompt-len 32 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
+      --reduced --long    # sliding-window/SSM-state long-context mode
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--long", action="store_true",
+                    help="sliding-window ring-buffer mode (long_500k path)")
+    ap.add_argument("--window", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route prefill attention through the Pallas kernel")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models.transformer import (decode_step, init_cache,
+                                          init_params, prefill)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(num_layers=args.layers, d_model=args.d_model)
+    window = args.window if args.long else None
+    cache_len = window if args.long else args.prompt_len + args.gen
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    B = args.batch
+    prompt = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
+    vision = (jax.random.normal(key, (B, cfg.num_image_tokens,
+                                      cfg.vision_dim))
+              if cfg.arch_type == "vlm" else None)
+
+    cache = init_cache(cfg, B, cache_len, dtype=jnp.float32)
+    t0 = time.time()
+    if cfg.audio_frontend:
+        embeds = jax.random.normal(key, (B, args.prompt_len, cfg.d_model))
+        logits, cache = prefill(params, cfg, embeds=embeds, cache=cache)
+    else:
+        logits, cache = prefill(params, cfg, tokens=prompt, vision=vision,
+                                cache=cache)
+    print(f"prefill: bs={B} len={args.prompt_len} "
+          f"({time.time()-t0:.2f}s incl. compile)")
+
+    step = jax.jit(lambda p, tok, c, i: decode_step(
+        p, cfg, tokens=tok, vision=vision, cache=c, index=i, window=window))
+
+    def sample(logits, k):
+        if args.temperature <= 0:
+            return jnp.argmax(logits, -1)[:, None]
+        return jax.random.categorical(
+            k, logits / args.temperature)[:, None]
+
+    tok = sample(logits, key)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen):
+        key, sk = jax.random.split(key)
+        logits, cache = step(params, tok, cache,
+                             jnp.int32(args.prompt_len + i))
+        tok = sample(logits, sk)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.gen} steps x {B} seqs in {dt:.2f}s "
+          f"({B*args.gen/dt:.1f} tok/s{' , ring-buffer' if args.long else ''})")
+    print("sample:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair.
+
+No device allocation: the dry-run lowers against these abstract values.
+The audio/VLM modality frontends are stubs — ``input_specs`` supplies the
+precomputed frame/patch embeddings the decoder consumes (the one carve-out
+to "no stubs"; see DESIGN.md Sec. 4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.transformer import init_cache
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape,
+                      grad_accum: int = 1) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    lead: Tuple[int, ...] = ()
+    if grad_accum > 1:
+        assert B % grad_accum == 0, (B, grad_accum)
+        lead, B = (grad_accum,), B // grad_accum
+    batch: Dict[str, Any] = {"labels": sds(lead + (B, S), "int32")}
+    if cfg.audio_frontend:
+        batch["embeds"] = sds(lead + (B, S, cfg.d_model), "bfloat16")
+    else:
+        batch["tokens"] = sds(lead + (B, S), "int32")
+    if cfg.arch_type == "vlm":
+        batch["vision"] = sds(lead + (B, cfg.num_image_tokens, cfg.vision_dim),
+                              "bfloat16")
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.audio_frontend:
+        batch["embeds"] = sds((B, S, cfg.d_model), "bfloat16")
+    else:
+        batch["tokens"] = sds((B, S), "int32")
+    if cfg.arch_type == "vlm":
+        batch["vision"] = sds((B, cfg.num_image_tokens, cfg.vision_dim),
+                              "bfloat16")
+    return batch
+
+
+def decode_cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """long_500k uses the sliding-window ring buffer (sub-quadratic)."""
+    if shape.seq_len > 65536 and cfg.sliding_window:
+        return cfg.sliding_window
+    return shape.seq_len
+
+
+def pad_kv_heads(cfg: ModelConfig, tp: int = 16) -> int:
+    """Decode-cache head padding (hillclimb D): when kvH does not divide
+    the model axis, the flattened kv_dim sharding splits head_dim and XLA
+    all-gathers the whole per-layer cache (~GBs/step).  Padding kvH up to
+    the next multiple of tp gives fully local per-head attention.  Only
+    worth it when the memory overhead is small (<= 1.7x): kvH 20 -> 32
+    (qwen1.5), 24 -> 32 (musicgen).  Returns 0 for "no padding"."""
+    if not cfg.has_attention or cfg.num_kv_heads % tp == 0:
+        return 0
+    padded = ((cfg.num_kv_heads + tp - 1) // tp) * tp
+    if padded / cfg.num_kv_heads <= 1.7:
+        return padded
+    return 0
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B = shape.global_batch
+    cache_len = decode_cache_len(cfg, shape)
+    pad = pad_kv_heads(cfg)
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, cache_len, dtype=jnp.bfloat16,
+                           kv_heads_override=pad or None))
+    batch: Dict[str, Any] = {"cache": cache,
+                             "index": sds((), "int32")}
+    if cfg.audio_frontend:
+        batch["tokens"] = sds((B, 1), "int32")   # decode feeds back tokens
+    else:
+        batch["tokens"] = sds((B, 1), "int32")
+    if cfg.arch_type == "vlm":
+        batch["vision"] = sds((B, cfg.num_image_tokens, cfg.vision_dim),
+                              "bfloat16")
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                grad_accum: int = 1) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape, grad_accum)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)
+
+
+def abstract_params(cfg: ModelConfig):
+    from repro.models.transformer import init_params
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,204 @@
+"""pjit-able train / prefill / decode steps + their sharding specs."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import INPUT_SHAPES, ModelConfig
+from repro.models.transformer import (decode_step, prefill, train_loss)
+from repro.optim.adamw import AdamW, AdamWState
+from repro.parallel.sharding import ShardingRules, param_spec_tree, use_rules
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt: Optional[AdamW] = None,
+                    mesh=None, rules: Optional[ShardingRules] = None,
+                    moe_impl: str = "dense", grad_accum: int = 1):
+    """grad_accum > 1: batch leaves carry a leading (grad_accum,) dim —
+    microbatches are scanned with an f32 gradient accumulator (the paper's
+    microbatch model applied on-chip), bounding live activation memory."""
+    opt = opt or AdamW()
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules, mesh):
+            if grad_accum > 1:
+                def micro(carry, mb):
+                    gacc, lacc = carry
+                    loss, g = jax.value_and_grad(train_loss)(
+                        params, mb, cfg, moe_impl=moe_impl)
+                    gacc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                    return (gacc, lacc + loss), None
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+                (gsum, lsum), _ = jax.lax.scan(
+                    micro, (g0, jnp.float32(0.0)), batch)
+                grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+                loss = lsum / grad_accum
+            else:
+                loss, grads = jax.value_and_grad(train_loss)(
+                    params, batch, cfg, moe_impl=moe_impl)
+            new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int, mesh=None,
+                      rules: Optional[ShardingRules] = None,
+                      moe_impl: str = "dense"):
+    from repro.models.transformer import init_cache
+
+    def prefill_step(params, batch):
+        with use_rules(rules, mesh):
+            cache = init_cache(cfg, next(iter(batch.values())).shape[0],
+                               cache_len)
+            logits, new_cache = prefill(
+                params, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), vision=batch.get("vision"),
+                cache=cache, moe_impl=moe_impl)
+        return logits, new_cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, window=None, mesh=None,
+                     rules: Optional[ShardingRules] = None,
+                     moe_impl: str = "dense"):
+    def serve_step(params, batch):
+        with use_rules(rules, mesh):
+            logits, new_cache = decode_step(
+                params, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), vision=batch.get("vision"),
+                cache=batch["cache"], index=batch["index"], window=window,
+                moe_impl=moe_impl)
+        return logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs for step inputs/outputs
+# ---------------------------------------------------------------------------
+
+def _axes(rules: ShardingRules, mesh, logical):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    r = rules.resolve(logical)
+    if r is None:
+        return None
+    axes = tuple(ax for ax in (r if isinstance(r, tuple) else (r,))
+                 if ax in sizes)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def batch_shardings(batch_abstract, rules: ShardingRules, mesh,
+                    grad_accum: int = 1):
+    """Batch dim -> ('pod','data') when divisible, else replicated.
+
+    With grad_accum > 1 batch leaves carry a leading (grad_accum,) scan
+    dim that stays unsharded; the batch dim is index 1."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    baxes = _axes(rules, mesh, "batch")
+    bsize = 1
+    if baxes is not None:
+        for ax in (baxes if isinstance(baxes, tuple) else (baxes,)):
+            bsize *= sizes[ax]
+    b_idx = 1 if grad_accum > 1 else 0
+
+    def spec_for(path, leaf):
+        names = [getattr(k, "key", None) for k in path]
+        if "index" in names or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if "cache" in names:
+            return NamedSharding(mesh, _cache_spec(names, leaf, rules, mesh,
+                                                   baxes, bsize))
+        spec = [None] * leaf.ndim
+        if (baxes is not None and leaf.ndim > b_idx
+                and leaf.shape[b_idx] % bsize == 0 and leaf.shape[b_idx] > 1):
+            spec[b_idx] = baxes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_abstract)
+
+
+def _cache_spec(names, leaf, rules, mesh, baxes, bsize):
+    """KV cache (L, B, C, kvd) / conv (L, B, K, cd) / ssm (L, B, H, P, N).
+
+    VLM self-cache has an extra leading dim.  Batch dim = the one sized
+    like global batch — identified positionally: k/v/conv are ndim-3,
+    ssm state is ndim-4.
+    """
+    taxes = _axes(rules, mesh, "tp")
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tsize = 1
+    if taxes is not None:
+        for ax in (taxes if isinstance(taxes, tuple) else (taxes,)):
+            tsize *= sizes[ax]
+    spec = [None] * leaf.ndim
+    if "ssm" in names and leaf.ndim >= 4 and names[-1] == "ssm":
+        b_idx, t_idx = leaf.ndim - 4, leaf.ndim - 2      # (.., B, H, P, N)
+    else:
+        b_idx, t_idx = leaf.ndim - 3, leaf.ndim - 1      # (.., B, C, kvd)
+    if baxes is not None and leaf.shape[b_idx] % bsize == 0 and leaf.shape[b_idx] > 1:
+        spec[b_idx] = baxes
+    if taxes is not None and leaf.shape[t_idx] % tsize == 0:
+        spec[t_idx] = taxes
+    return P(*spec)
+
+
+def optimizer_shardings(opt_state_abstract, param_shardings, mesh):
+    """m/v mirror the parameter shardings; step is replicated."""
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=param_shardings,
+        v=param_shardings,
+    )
+
+
+def train_shardings(cfg: ModelConfig, params_abstract, opt_state_abstract,
+                    batch_abstract, rules: ShardingRules, mesh,
+                    grad_accum: int = 1):
+    pspec = param_spec_tree(params_abstract, rules, mesh)
+    ospec = optimizer_shardings(opt_state_abstract, pspec, mesh)
+    bspec = batch_shardings(batch_abstract, rules, mesh, grad_accum)
+    scalar = NamedSharding(mesh, P())
+    return (pspec, ospec, bspec), (pspec, ospec, scalar)
+
+
+def _div_axes(rules, mesh, logical, dim):
+    """Axes for ``logical`` only when they divide ``dim`` (else replicate)."""
+    axes = _axes(rules, mesh, logical)
+    if axes is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 1
+    for ax in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= sizes[ax]
+    return axes if (dim % total == 0 and dim > 1) else None
+
+
+def serve_shardings(cfg: ModelConfig, params_abstract, batch_abstract,
+                    rules: ShardingRules, mesh, *, global_batch: int,
+                    cache_abstract=None):
+    """Shardings for prefill (cache_abstract given) or decode steps."""
+    pspec = param_spec_tree(params_abstract, rules, mesh)
+    bspec = batch_shardings(batch_abstract, rules, mesh)
+    logits = NamedSharding(mesh, P(
+        _div_axes(rules, mesh, "batch", global_batch),
+        _div_axes(rules, mesh, "tp", cfg.vocab_size)))
+    if cache_abstract is not None:     # prefill: cache is an output
+        cspec = batch_shardings({"cache": cache_abstract}, rules, mesh)["cache"]
+        return (pspec, bspec), (logits, cspec)
+    # decode: cache rides in and out through batch["cache"]
+    return (pspec, bspec), (logits, bspec["cache"])

@@ -1,0 +1,177 @@
+"""Mixture-of-Experts layer (granite-moe, qwen2-moe style).
+
+Two execution modes:
+
+* ``dense``  — every expert computes every token; router combine-weights
+  zero out the non-selected ones.  Simple, shards trivially (expert d_ff on
+  the 'model' axis), but wastes E/topk of the FLOPs.  This is the paper-
+  faithful baseline mode (GWTF does not optimise intra-stage compute).
+* ``ragged`` — tokens are sorted by expert and computed with
+  ``jax.lax.ragged_dot`` so only active (token, expert) pairs cost FLOPs.
+  This is the beyond-paper optimisation used in the §Perf hillclimb.
+
+Router load-balance auxiliary loss (Switch-style) is returned so training
+can keep experts balanced — GWTF's bottleneck-stage argument applied to
+experts.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32, scale=0.02),
+        "w_gate": dense_init(ks[1], (E, D, F), dtype),
+        "w_up": dense_init(ks[2], (E, D, F), dtype),
+        "w_down": dense_init(ks[3], (E, F, D), dtype),
+    }
+    if cfg.num_shared_experts:
+        Fs = F * cfg.num_shared_experts
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sk[0], (D, Fs), dtype),
+            "w_up": dense_init(sk[1], (D, Fs), dtype),
+            "w_down": dense_init(sk[2], (Fs, D), dtype),
+        }
+    return p
+
+
+def _route(p, x, cfg: ModelConfig):
+    """Returns (weights (T,E) combine weights, aux_loss). x: (T, D)."""
+    logits = x.astype(jnp.float32) @ p["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    k = cfg.num_experts_per_tok
+    topv, topi = jax.lax.top_k(probs, k)                  # (T, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)   # renormalise
+    combine = jnp.zeros_like(probs).at[
+        jnp.arange(x.shape[0])[:, None], topi].set(topv)  # (T, E)
+    # Switch aux loss: E * sum_e (frac_tokens_e * mean_prob_e)
+    frac = jnp.mean((combine > 0).astype(jnp.float32), axis=0)
+    aux = cfg.num_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return combine, topi, topv, aux
+
+
+def _expert_mlp_dense(p, x, combine, cfg: ModelConfig):
+    """All-experts path as a scan over experts. x: (T, D); combine: (T, E).
+
+    A naive ``einsum('td,edf->tef')`` makes XLA broadcast x to every
+    expert ((E, D, T) — tens of GB at 32k context) and materialise a
+    (T, E, D) output.  Scanning experts keeps the live set to one
+    (T, F) block; combine-weights fold in *before* the down-projection so
+    the output accumulates directly into (T, D).  FLOPs are identical
+    (this is the paper-faithful dense baseline the §Perf ragged
+    optimisation is measured against).
+    """
+    from repro.parallel.sharding import shard
+
+    def one_expert(acc, ewc):
+        wg, wu, wd, c_e = ewc                  # (D,F), (D,F), (F,D), (T,)
+        g = shard(x @ wg, "batch", "tp")
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g)
+        h = act * (x @ wu)                     # (T, F)
+        h = h * c_e[:, None].astype(h.dtype)
+        return acc + h @ wd, None
+
+    acc0 = jnp.zeros_like(x)
+    out, _ = jax.lax.scan(
+        one_expert, acc0,
+        (p["w_gate"], p["w_up"], p["w_down"], combine.T.astype(x.dtype)))
+    return out
+
+
+def _expert_mlp_ragged(p, x, topi, topv, cfg: ModelConfig):
+    """Active-only path: sort (token, expert) pairs by expert, ragged_dot.
+
+    FLOPs ~ T*topk*D*F instead of T*E*D*F.
+    """
+    T, D = x.shape
+    k = cfg.num_experts_per_tok
+    E = cfg.num_experts
+    flat_e = topi.reshape(-1)                              # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)                  # (T*k,)
+    flat_w = topv.reshape(-1)
+    order = jnp.argsort(flat_e)                            # stable sort by expert
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    xs = x[st]                                             # (T*k, D) gathered
+    group_sizes = jnp.bincount(se, length=E).astype(jnp.int32)
+    g = jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)
+    u = jax.lax.ragged_dot(xs, p["w_up"], group_sizes)
+    act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g)
+    y = jax.lax.ragged_dot((act * u).astype(xs.dtype), p["w_down"], group_sizes)
+    y = y * sw[:, None].astype(y.dtype)
+    return jnp.zeros_like(x).at[st].add(y)
+
+
+def _expert_mlp_capacity(p, x, topi, topv, cfg: ModelConfig,
+                         capacity_factor: float = 2.0):
+    """Active-only path via capacity-bounded dispatch (Switch-style).
+
+    Tokens are sorted by expert; each expert processes at most
+    C = capacity_factor * T * topk / E tokens (overflow dropped, weights
+    renormalised by construction).  All shapes static, all ops standard
+    (gather / batched dot / scatter) — lowers everywhere and keeps FLOPs
+    at ~capacity_factor x the active compute instead of E/topk x.
+    """
+    from repro.parallel.sharding import shard
+    T, D = x.shape
+    k = cfg.num_experts_per_tok
+    E = cfg.num_experts
+    C = max(8, int(capacity_factor * T * k / E))
+    flat_e = topi.reshape(-1)                       # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = topv.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(T * k) - starts[se]            # slot within expert
+    keep = pos < C
+    pos = jnp.where(keep, pos, 0)
+    wk = jnp.where(keep, sw, 0.0)
+    buf = jnp.zeros((E, C, D), x.dtype).at[se, pos].set(
+        jnp.where(keep[:, None], x[st], 0))
+    g = shard(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]),
+              None, None, "tp")
+    act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g)
+    h = act * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E, C, D)
+    out = jnp.zeros_like(x).at[st].add(
+        y[se, pos] * wk[:, None].astype(y.dtype))
+    return out
+
+
+def apply_moe(p, x, cfg: ModelConfig, impl: str = "dense"):
+    """x: (B, S, D) -> (out, aux_loss).
+
+    The MoE block runs with the sequence dim *gathered* (no seq sharding):
+    merging a batch-sharded dim with a seq-sharded dim would force GSPMD
+    into pathological resharding of the (T, E, F) expert tensors.  The
+    surrounding block re-applies the sequence-parallel constraint.
+    """
+    from repro.parallel.sharding import shard
+    x = shard(x, "batch", None, None)
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    combine, topi, topv, aux = _route(p, xt, cfg)
+    if impl == "ragged":
+        out = _expert_mlp_ragged(p, xt, topi, topv, cfg)
+    elif impl == "capacity":
+        out = _expert_mlp_capacity(p, xt, topi, topv, cfg)
+    else:
+        out = _expert_mlp_dense(p, xt, combine, cfg)
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        g = xt @ sp["w_gate"]
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g)
+        out = out + (act * (xt @ sp["w_up"])) @ sp["w_down"]
+    return out.reshape(B, S, D), aux

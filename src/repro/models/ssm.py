@@ -1,0 +1,196 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Implements the chunked SSD algorithm: intra-chunk quadratic (attention-like)
+term + inter-chunk recurrence carried by ``lax.scan``.  A single-step decode
+path maintains (conv_state, ssm_state) caches for O(1) per-token decoding —
+this is what makes ``long_500k`` tractable for the ssm/hybrid archs.
+
+The pure-jnp math here doubles as the oracle for the Pallas ``ssd_scan``
+kernel (see repro/kernels/ref.py which re-exports ``ssd_reference``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_reference(x, dt, A, B, C, h0=None):
+    """Sequential SSD recurrence — the oracle.
+
+    x: (b, S, H, P); dt: (b, S, H); A: (H,); B, C: (b, S, N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t * x_t (x) B_t ;  y_t = h_t . C_t
+    Returns y: (b, S, H, P), h_final: (b, H, P, N).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp           # (b,H,P), (b,H), (b,N), (b,N)
+        a = jnp.exp(dtt * A)            # (b,H)
+        h = a[..., None, None] * h + (dtt[..., None] * xt)[..., None] * Bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2), C.transpose(1, 0, 2))
+    hf, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), hf
+
+
+def ssd_chunked(x, dt, A, B, C, h0=None, chunk: int = 64):
+    """Chunked SSD: O(S*Q) intra-chunk matmuls + O(S/Q) sequential scan.
+
+    Same signature/semantics as ``ssd_reference`` (float32 internal math).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, f"S={S} % chunk={chunk}"
+    nc = S // chunk
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, H)
+    Bf = B.astype(jnp.float32).reshape(b, nc, chunk, N)
+    Cf = C.astype(jnp.float32).reshape(b, nc, chunk, N)
+
+    # move chunk dim to front for scan
+    xs = (xf.transpose(1, 0, 2, 3, 4), dtf.transpose(1, 0, 2, 3),
+          Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3))
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]                 # (Q, Q) s <= t
+
+    def per_chunk(h, inp):
+        xc, dtc, Bc, Cc = inp            # (b,Q,H,P) (b,Q,H) (b,Q,N) (b,Q,N)
+        loga = dtc * A                   # (b,Q,H) log decay per step
+        L = jnp.cumsum(loga, axis=1)     # inclusive cumulative log decay
+        # intra-chunk: M[t,s] = exp(L[t]-L[s]) * dt[s] * (C[t].B[s]), s<=t
+        CB = jnp.einsum("btn,bsn->bts", Cc, Bc)            # (b,Q,Q)
+        delta = L[:, :, None, :] - L[:, None, :, :]        # (b,t,s,H)
+        # mask the exponent *before* exp: the s>t half would overflow to
+        # +inf (L is non-increasing) and poison gradients through where().
+        delta = jnp.where(causal[None, :, :, None], delta, 0.0)
+        M = CB[..., None] * jnp.exp(delta) * dtc[:, None, :, :]
+        M = jnp.where(causal[None, :, :, None], M, 0.0)
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xc)
+        # contribution of the incoming state: y += exp(L[t]) * C[t] . h
+        y_state = jnp.einsum("bhpn,btn->bthp", h, Cc) * jnp.exp(L)[..., None]
+        # new state: h' = exp(L[Q-1]) h + sum_s exp(L[Q-1]-L[s]) dt_s x_s (x) B_s
+        last = L[:, -1:, :]                                # (b,1,H)
+        w = jnp.exp(last - L) * dtc                        # (b,Q,H)
+        h_new = jnp.exp(last[:, 0])[:, :, None, None] * h + \
+            jnp.einsum("bqh,bqhp,bqn->bhpn", w, xc, Bc)
+        return h_new, y_intra + y_state
+
+    hf, ys = jax.lax.scan(per_chunk, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, S, H, P)
+    return y.astype(x.dtype), hf
+
+
+def ssd_decode_step(h, xt, dtt, A, Bt, Ct):
+    """One-token SSD update. h: (b,H,P,N); xt: (b,H,P); dtt: (b,H)."""
+    a = jnp.exp(dtt * A)
+    h = a[..., None, None] * h + (dtt[..., None] * xt)[..., None] * Bt[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Ct)
+    return h, y
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    di = cfg.d_inner
+    N, H = cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+    conv_dim = di + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * di + 2 * N + H), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[3], (di, D), dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C). Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return y, new_state
+
+
+def apply_mamba(p, x, cfg: ModelConfig, *, cache=None, chunk: int = 64):
+    """x: (B, S, D). cache: dict(conv=(B,K-1,conv_dim), ssm=(B,H,P,N)) or None.
+    Returns (out, new_cache)."""
+    B_, S, D = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                        # (H,)
+    xh = xs.reshape(B_, S, H, P)
+
+    if cache is not None and S == 1:
+        h, y = ssd_decode_step(cache["ssm"], xh[:, 0].astype(jnp.float32),
+                               dt[:, 0], A, Bc[:, 0].astype(jnp.float32),
+                               Cc[:, 0].astype(jnp.float32))
+        y = y[:, None].astype(x.dtype)                              # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": h}
+    else:
+        ck = chunk if S % chunk == 0 else S
+        h0 = cache["ssm"] if cache is not None else None
+        y, h = ssd_chunked(xh, dt, A, Bc, Cc, h0=h0, chunk=ck)
+        new_cache = {"conv": new_conv, "ssm": h} if cache is not None else None
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, S, di)
+    # gated RMSNorm (mamba2 style)
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"]
+    return g.astype(x.dtype) @ p["out_proj"], new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+    conv_dim = di + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }

@@ -1,0 +1,95 @@
+"""AdamW optimizer (pure JAX, optax-free) with FSDP-friendly state.
+
+State mirrors the parameter pytree (m, v in float32) so the same
+PartitionSpecs shard optimizer state across the 'data' axis (ZeRO-style) —
+parameters can stay bf16 while moments and the update math run in f32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params):
+        """Returns (new_params, new_state)."""
+        if self.grad_clip is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1t = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m / b1t
+            vh = v / b2t
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:  # decoupled decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - self.lr * delta).astype(p.dtype)
+            return new_p, m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+@dataclass(frozen=True)
+class SGD:
+    """Plain SGD — the paper's convergence argument is stated for SGD."""
+    lr: float = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params):
+        if self.momentum:
+            return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return ()
+
+    def update(self, grads, state, params):
+        if self.momentum:
+            new_state = jax.tree.map(
+                lambda s, g: self.momentum * s + g.astype(jnp.float32),
+                state, grads)
+            new_p = jax.tree.map(
+                lambda p, s: (p.astype(jnp.float32) - self.lr * s).astype(p.dtype),
+                params, new_state)
+            return new_p, new_state
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - self.lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_p, state

@@ -1,0 +1,231 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Model code annotates tensors with *logical* axis names via ``shard(x,
+"batch", None, "tp")``; the active :class:`ShardingRules` maps logical
+names to physical mesh axes.  With no active rules (unit tests, the
+simulator) every annotation is a no-op, so the model code runs unchanged
+on one CPU device.
+
+Physical axes of the production mesh (see launch/mesh.py):
+  * ``pod``   — outer data-parallel axis across pods (multi-pod only)
+  * ``data``  — data parallel + FSDP (params/optimizer sharded here)
+  * ``model`` — tensor parallel (d_ff, flattened head dims, vocab)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+_state = threading.local()
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical -> physical axis mapping."""
+    batch: AxisName = ("pod", "data")
+    fsdp: AxisName = "data"          # parameter / optimizer-state sharding
+    tp: AxisName = "model"           # tensor parallel
+    seq: AxisName = None             # sequence (context) parallel — off by default
+    expert: AxisName = None          # expert parallel — off by default (tp shards d_ff)
+
+    def resolve(self, logical: AxisName) -> AxisName:
+        if logical is None:
+            return None
+        if isinstance(logical, tuple):
+            parts = []
+            for l in logical:
+                r = self.resolve(l)
+                if r is None:
+                    continue
+                parts.extend(r if isinstance(r, tuple) else (r,))
+            return tuple(parts) if parts else None
+        return getattr(self, logical)
+
+
+def _mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules], mesh=None):
+    prev = getattr(_state, "rules", None), getattr(_state, "mesh", None)
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def active_rules():
+    return getattr(_state, "rules", None)
+
+
+def active_mesh():
+    return getattr(_state, "mesh", None)
+
+
+def logical_spec(*logical_axes: AxisName) -> Optional[P]:
+    rules = active_rules()
+    if rules is None:
+        return None
+    return P(*(rules.resolve(a) for a in logical_axes))
+
+
+def shard(x, *logical_axes: AxisName):
+    """Annotate ``x`` with a sharding constraint; no-op without rules.
+
+    Drops mesh axes that do not divide the dimension (keeps lowering
+    robust for reduced smoke configs)."""
+    rules = active_rules()
+    mesh = active_mesh()
+    if rules is None or mesh is None:
+        return x
+    sizes = _mesh_axis_sizes(mesh)
+    resolved = []
+    for dim, a in zip(x.shape, logical_axes):
+        r = rules.resolve(a)
+        if r is None:
+            resolved.append(None)
+            continue
+        axes = tuple(ax for ax in (r if isinstance(r, tuple) else (r,))
+                     if ax in sizes)
+        total = 1
+        for ax in axes:
+            total *= sizes[ax]
+        if not axes or total <= 1 or dim % total != 0:
+            resolved.append(None)
+        elif len(axes) == 1:
+            resolved.append(axes[0])
+        else:
+            resolved.append(axes)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*resolved)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs
+# ---------------------------------------------------------------------------
+
+# rules keyed by parameter leaf name -> spec over the *trailing* dims.
+_PARAM_RULES = {
+    # attention
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",), "bk": ("tp",), "bv": ("tp",),
+    # dense mlp / shared expert
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"), "w_down": ("tp", "fsdp"),
+    # mamba
+    "in_proj": ("fsdp", "tp"), "out_proj": ("tp", "fsdp"),
+    "conv_w": (None, "tp"), "conv_b": ("tp",),
+    "A_log": (None,), "D": (None,), "dt_bias": (None,), "norm_scale": (None,),
+    # moe (3-D expert-stacked) — handled by ndim below
+    "router": ("fsdp", None),
+    # embeddings
+    "table": ("tp", "fsdp"),
+    "lm_head": ("fsdp", "tp"),
+    # vision projector
+    "w_proj": (None, "fsdp"),
+    # norms
+    "scale": (None,), "bias": (None,),
+}
+
+_MOE_RULES = {
+    "w_gate": ("expert", "fsdp", "tp"), "w_up": ("expert", "fsdp", "tp"),
+    "w_down": ("expert", "tp", "fsdp"),
+}
+
+
+def param_spec_tree(params, rules: ShardingRules, mesh):
+    """Build a PartitionSpec pytree for a params pytree.
+
+    Leaves are matched by name; leading stacking dims (layer scan) get
+    ``None``.  Mesh axes that do not divide a dim are dropped.
+    """
+    sizes = _mesh_axis_sizes(mesh)
+
+    def present(axis):
+        axes = tuple(ax for ax in (axis if isinstance(axis, tuple) else (axis,))
+                     if ax in sizes)
+        if not axes:
+            return None
+        return axes[0] if len(axes) == 1 else axes
+
+    def divides(axis, dim):
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        total = 1
+        for ax in axes:
+            total *= sizes.get(ax, 1)
+        return dim % total == 0
+
+    def spec_for(path, leaf):
+        name = None
+        moe = False
+        for k in path:
+            key = getattr(k, "key", getattr(k, "name", None))
+            if key in ("w_gate", "w_up", "w_down") and leaf.ndim >= 3:
+                moe = "shared" not in [getattr(kk, "key", None) for kk in path]
+            if key in _PARAM_RULES or key in _MOE_RULES:
+                name = key
+        if name is None:
+            return jax.sharding.NamedSharding(mesh, P())
+        rule = _MOE_RULES[name] if (moe and name in _MOE_RULES) else _PARAM_RULES[name]
+        ndim = leaf.ndim
+        trailing = len(rule)
+        spec = [None] * (ndim - trailing)
+        for dim, logical in zip(leaf.shape[ndim - trailing:], rule):
+            r = rules.resolve(logical)
+            r = present(r) if r is not None else None
+            if r is not None and divides(r, dim):
+                spec.append(r)
+            else:
+                spec.append(None)
+        return jax.sharding.NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def shard_heads(x, head_dim_index: int):
+    """Shard the heads dim over the tp axis, allowing uneven head counts
+    (GSPMD pads).  Used for train/prefill attention where K/V stay
+    replicated (GQA K/V are small) so Q.K^T needs no partial-sum
+    all-reduce — the alternative (sharding head_dim) turns every score
+    tensor into a giant all-reduce."""
+    rules = active_rules()
+    mesh = active_mesh()
+    if rules is None or mesh is None:
+        return x
+    sizes = _mesh_axis_sizes(mesh)
+    r = rules.resolve("tp")
+    if r is None:
+        return x
+    axes = tuple(ax for ax in (r if isinstance(r, tuple) else (r,))
+                 if ax in sizes)
+    if not axes:
+        return x
+    spec = [None] * x.ndim
+    spec[head_dim_index] = axes[0] if len(axes) == 1 else axes
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*spec)))
+
+
+def tp_size() -> int:
+    """Size of the resolved tp axes on the active mesh (1 if none)."""
+    rules = active_rules()
+    mesh = active_mesh()
+    if rules is None or mesh is None:
+        return 1
+    sizes = _mesh_axis_sizes(mesh)
+    r = rules.resolve("tp")
+    if r is None:
+        return 1
+    total = 1
+    for ax in (r if isinstance(r, tuple) else (r,)):
+        total *= sizes.get(ax, 1)
+    return total

@@ -1,0 +1,171 @@
+"""Unit + property tests for the GWTF flow layer (paper Sec. V-A/V-C)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.flow.decentralized import GWTFProtocol
+from repro.core.flow.graph import FlowNetwork, Node, synthetic_network
+from repro.core.flow.mincost import MinCostFlow, solve_training_flow
+
+
+def build(seed=0, stages=4, relays=4, cap_lo=1, cap_hi=3, sources=1,
+          source_cap=4, cost_hi=20.0):
+    rng = np.random.default_rng(seed)
+    return synthetic_network(
+        num_stages=stages, relays_per_stage=relays,
+        capacities=lambda r: int(r.uniform(cap_lo, cap_hi + 1)),
+        link_costs=lambda r: float(int(r.uniform(1, cost_hi))),
+        num_sources=sources, source_capacity=source_cap, rng=rng)
+
+
+# ---------------------------------------------------------------------------
+# Min-cost-flow oracle
+# ---------------------------------------------------------------------------
+
+class TestMinCostFlow:
+    def test_simple_path(self):
+        mc = MinCostFlow(3)
+        mc.add_edge(0, 1, 2, 1.0)
+        mc.add_edge(1, 2, 2, 1.0)
+        flow, cost = mc.solve(0, 2)
+        assert flow == 2 and cost == 4.0
+
+    def test_chooses_cheap_path(self):
+        mc = MinCostFlow(4)
+        mc.add_edge(0, 1, 1, 10.0)
+        mc.add_edge(0, 2, 1, 1.0)
+        mc.add_edge(1, 3, 1, 1.0)
+        mc.add_edge(2, 3, 1, 1.0)
+        flow, cost = mc.solve(0, 3)
+        assert flow == 2 and cost == 13.0
+
+    def test_capacity_bound(self):
+        mc = MinCostFlow(2)
+        mc.add_edge(0, 1, 3, 2.0)
+        flow, cost = mc.solve(0, 1, max_flow=10)
+        assert flow == 3
+
+    def test_training_graph_flow_bounded_by_stage_capacity(self):
+        net, cost = build(seed=3, cap_lo=1, cap_hi=2, source_cap=50)
+        plan = solve_training_flow(net, cost_matrix=cost)
+        min_stage = min(net.stage_capacity(s) for s in range(net.num_stages))
+        assert plan.flow <= min_stage
+
+
+# ---------------------------------------------------------------------------
+# Decentralized protocol
+# ---------------------------------------------------------------------------
+
+class TestGWTFProtocol:
+    def test_builds_max_flows(self):
+        net, cost = build(seed=42, source_cap=4)
+        proto = GWTFProtocol(net, cost_matrix=cost,
+                             rng=np.random.default_rng(1))
+        proto.run(max_rounds=150)
+        flows = proto.complete_flows()
+        min_stage = min(net.stage_capacity(s) for s in range(net.num_stages))
+        assert len(flows) == min(4, min_stage)
+
+    def test_flows_are_valid_chains(self):
+        net, cost = build(seed=7, source_cap=4)
+        proto = GWTFProtocol(net, cost_matrix=cost,
+                             rng=np.random.default_rng(2))
+        proto.run(max_rounds=150)
+        for chain in proto.complete_flows():
+            assert chain[0] == chain[-1]               # returns to origin
+            assert net.nodes[chain[0]].is_data
+            relays = chain[1:-1]
+            assert len(relays) == net.num_stages
+            for s, nid in enumerate(relays):
+                assert net.nodes[nid].stage == s       # stage order
+
+    def test_capacity_never_exceeded(self):
+        net, cost = build(seed=11, source_cap=8, cap_lo=1, cap_hi=2)
+        proto = GWTFProtocol(net, cost_matrix=cost,
+                             rng=np.random.default_rng(3))
+        proto.run(max_rounds=150)
+        for p in proto.protos.values():
+            assert p.used <= p.capacity
+
+    def test_near_optimal_cost(self):
+        """Paper: GWTF is never more than 25% worse than the optimum."""
+        ratios = []
+        for seed in range(5):
+            net, cost = build(seed=seed, stages=6, relays=5, source_cap=4)
+            proto = GWTFProtocol(net, cost_matrix=cost, objective="sum",
+                                 rng=np.random.default_rng(seed + 100))
+            proto.run(max_rounds=200)
+            opt = solve_training_flow(net, cost_matrix=cost,
+                                      max_flow=len(proto.complete_flows()))
+            if opt.flow and proto.complete_flows():
+                ratios.append(proto.total_cost() / max(opt.cost, 1e-9))
+        assert ratios, "no comparable runs"
+        assert np.mean(ratios) < 1.5, ratios
+
+    def test_crash_recovery_rebuilds_flows(self):
+        net, cost = build(seed=5, relays=5, cap_lo=2, cap_hi=3, source_cap=4)
+        proto = GWTFProtocol(net, cost_matrix=cost,
+                             rng=np.random.default_rng(4))
+        proto.run(max_rounds=150)
+        before = len(proto.complete_flows())
+        assert before > 0
+        # crash one relay on a flow
+        victim = proto.complete_flows()[0][2]
+        net.nodes[victim].alive = False
+        proto.remove_node(victim)
+        proto.reclaim_sink_slots()
+        proto.run(max_rounds=60)
+        after = len(proto.complete_flows())
+        min_stage = min(net.stage_capacity(s) for s in range(net.num_stages))
+        assert after >= min(before, min_stage, 4) - 1
+        # no flow touches the dead node
+        for chain in proto.complete_flows():
+            assert victim not in chain
+
+    def test_annealing_temperature_decays(self):
+        net, cost = build(seed=9)
+        proto = GWTFProtocol(net, cost_matrix=cost, temperature=1.7,
+                             alpha=0.95, rng=np.random.default_rng(5))
+        proto.run(max_rounds=100)
+        assert proto.T <= 1.7
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), stages=st.integers(2, 6),
+       relays=st.integers(2, 5), source_cap=st.integers(1, 6))
+def test_property_protocol_invariants(seed, stages, relays, source_cap):
+    """For any topology: capacities respected, chains well-formed, cost
+    of every complete flow equals the sum of its edge costs."""
+    net, cost = build(seed=seed, stages=stages, relays=relays,
+                      source_cap=source_cap)
+    proto = GWTFProtocol(net, cost_matrix=cost,
+                         rng=np.random.default_rng(seed + 1))
+    proto.run(max_rounds=120)
+    for p in proto.protos.values():
+        assert p.used <= p.capacity
+    flows = proto.complete_flows()
+    min_stage = min(net.stage_capacity(s) for s in range(net.num_stages))
+    assert len(flows) <= min(source_cap, min_stage)
+    for chain, c in zip(flows, proto.flow_costs()):
+        manual = sum(cost[chain[i], chain[i + 1]]
+                     for i in range(len(chain) - 1))
+        assert abs(manual - c) < 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_protocol_never_beats_optimal(seed):
+    """Decentralized cost >= centralized optimum at the same flow value."""
+    net, cost = build(seed=seed, stages=3, relays=3, source_cap=3)
+    proto = GWTFProtocol(net, cost_matrix=cost, objective="sum",
+                         rng=np.random.default_rng(seed + 7))
+    proto.run(max_rounds=120)
+    k = len(proto.complete_flows())
+    if k == 0:
+        return
+    opt = solve_training_flow(net, cost_matrix=cost, max_flow=k)
+    assert proto.total_cost() >= opt.cost - 1e-6

@@ -1,0 +1,56 @@
+"""Pod-slice scheduling: the paper's flow algorithm on the TPU target."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.podmap import (carve_pod, ici_hop_distance, lose_slice,
+                               pod_flow_network, schedule_pipelines)
+
+
+def test_carve_pod():
+    slices = carve_pod((16, 16), (4, 4))
+    assert len(slices) == 16
+    assert all(s.chips == 16 for s in slices)
+
+
+def test_torus_distance_symmetric_and_wrapping():
+    slices = carve_pod((16, 16), (4, 4))
+    a, b = slices[0], slices[3]          # opposite edge: torus wrap
+    assert ici_hop_distance(a, b) == ici_hop_distance(b, a)
+    # wrap-around shorter than straight-line
+    assert ici_hop_distance(a, b) <= 12
+
+
+def test_schedule_builds_flows():
+    cfg = get_config("gemma-7b")
+    proto, net = schedule_pipelines(cfg, num_stages=5, seed=0)
+    flows = proto.complete_flows()
+    assert len(flows) >= 4
+    for f in flows:
+        assert f[0] == f[-1] == 0                # back to the data slice
+        stages = [net.nodes[n].stage for n in f[1:-1]]
+        assert stages == sorted(stages)          # stage order
+
+def test_slice_preemption_repair():
+    cfg = get_config("gemma-7b")
+    proto, net = schedule_pipelines(cfg, num_stages=5, seed=1)
+    before = proto.complete_flows()
+    victim = before[0][2]
+    after = lose_slice(proto, net, victim)
+    assert after, "no flows survived repair"
+    assert all(victim not in f for f in after)
+
+
+def test_data_slice_loss_rejected():
+    cfg = get_config("tinyllama-1.1b")
+    proto, net = schedule_pipelines(cfg, num_stages=3, seed=2)
+    with pytest.raises(ValueError):
+        lose_slice(proto, net, 0)
+
+
+def test_costs_scale_with_model():
+    small = get_config("tinyllama-1.1b")
+    big = get_config("gemma-7b")
+    n_small = pod_flow_network(small, num_stages=5, microbatch_tokens=4096)
+    n_big = pod_flow_network(big, num_stages=5, microbatch_tokens=4096)
+    # bigger model -> higher compute cost per slice
+    assert (n_big.nodes[1].compute_cost > n_small.nodes[1].compute_cost)

@@ -1,0 +1,167 @@
+"""Discrete-event simulator + churn/recovery behaviour (paper Sec. VI)."""
+import numpy as np
+import pytest
+
+from repro.core.flow.graph import geo_distributed_network
+from repro.core.join import assign_joiners, flood_utilization, StageReport
+from repro.core.membership import DHT, Contact, elect_leader
+from repro.core.simulator import ModelProfile, TrainingSimulator
+from repro.core.swarm import SwarmRouter
+from repro.configs import get_config
+
+
+def make_net(seed=0, het=False, stages=4, relays=16, data_capacity=4):
+    rng = np.random.default_rng(seed)
+    caps = ([int(rng.uniform(1, 4)) for _ in range(relays)] if het
+            else [4] * relays)
+    return geo_distributed_network(
+        num_stages=stages, relay_capacities=caps, num_data_nodes=2,
+        data_capacity=data_capacity, compute_cost=0.05,
+        rng=np.random.default_rng(seed))
+
+
+class TestSimulator:
+    def test_no_churn_all_complete(self):
+        net = make_net()
+        sim = TrainingSimulator(net, scheduler="gwtf", churn=0.0,
+                                rng=np.random.default_rng(1))
+        ms = sim.run(5)
+        for m in ms:
+            assert m.completed == m.launched
+            assert m.wasted_gpu == 0.0
+            assert m.duration > 0
+
+    def test_swarm_no_churn_all_complete(self):
+        net = make_net()
+        sim = TrainingSimulator(net, scheduler="swarm", churn=0.0,
+                                rng=np.random.default_rng(1))
+        ms = sim.run(5)
+        for m in ms:
+            assert m.completed == m.launched == 8
+
+    def test_churn_degrades_but_survives(self):
+        net = make_net(seed=2)
+        sim = TrainingSimulator(net, scheduler="gwtf", churn=0.1,
+                                rng=np.random.default_rng(3))
+        ms = sim.run(10)
+        assert sum(m.completed for m in ms) > 0
+
+    def test_gwtf_wastes_less_than_swarm_under_churn(self):
+        """The paper's headline: GWTF wasted GPU time ~0 vs SWARM > 0."""
+        waste = {}
+        for sched in ("gwtf", "swarm"):
+            totals = []
+            for seed in range(3):
+                net = make_net(seed=seed, het=True)
+                sim = TrainingSimulator(net, scheduler=sched, churn=0.15,
+                                        rng=np.random.default_rng(seed + 9))
+                ms = sim.run(8)
+                totals.append(np.mean([m.wasted_gpu for m in ms]))
+            waste[sched] = np.mean(totals)
+        assert waste["gwtf"] <= waste["swarm"]
+
+    def test_gwtf_faster_than_swarm_heterogeneous(self):
+        """Time per microbatch: GWTF < SWARM on heterogeneous capacities."""
+        tpm = {}
+        cfg = get_config("gwtf-llama-300m")
+        prof = ModelProfile.from_config(cfg, num_stages=4)
+        for sched in ("gwtf", "swarm"):
+            vals = []
+            for seed in range(3):
+                rng = np.random.default_rng(seed)
+                caps = [int(rng.uniform(1, 4)) for _ in range(16)]
+                net = geo_distributed_network(
+                    num_stages=4, relay_capacities=caps, num_data_nodes=2,
+                    data_capacity=4, compute_cost=prof.fwd_compute,
+                    activation_size=prof.activation_bytes,
+                    rng=np.random.default_rng(seed))
+                sim = TrainingSimulator(net, scheduler=sched, profile=prof,
+                                        churn=0.0,
+                                        rng=np.random.default_rng(seed + 5))
+                ms = sim.run(6)[1:]
+                vals.append(np.mean([m.time_per_microbatch for m in ms]))
+            tpm[sched] = np.mean(vals)
+        assert tpm["gwtf"] < tpm["swarm"]
+
+    def test_metrics_are_finite(self):
+        net = make_net(seed=4, het=True)
+        sim = TrainingSimulator(net, scheduler="gwtf", churn=0.2,
+                                rng=np.random.default_rng(5))
+        for m in sim.run(6):
+            assert np.isfinite(m.duration)
+            assert np.isfinite(m.comm_time)
+            assert m.completed <= m.launched
+
+
+class TestSwarmRouter:
+    def test_route_is_stagewise(self):
+        net = make_net()
+        r = SwarmRouter(net, rng=np.random.default_rng(0))
+        path = r.route(0)
+        assert path[0] == path[-1] == 0
+        for s, nid in enumerate(path[1:-1]):
+            assert net.nodes[nid].stage == s
+
+    def test_exclusion(self):
+        net = make_net()
+        r = SwarmRouter(net, rng=np.random.default_rng(0))
+        first = r.next_hop(0, 0, 0)
+        second = r.next_hop(0, 0, 0, exclude={first})
+        assert second != first
+
+
+class TestMembershipAndJoin:
+    def test_dht_and_leader(self):
+        dht = DHT()
+        dht.publish(Contact(5, -1, 4, is_data=True))
+        dht.publish(Contact(2, -1, 4, is_data=True))
+        dht.publish(Contact(7, 0, 2))
+        assert elect_leader(dht) == 2
+        dht.registry[2].alive = False
+        assert elect_leader(dht) == 5
+        assert [c.node_id for c in dht.lookup_stage(0)] == [7]
+        assert dht.lookup_time_total > 0
+
+    def test_flood_utilization(self):
+        net = make_net()
+        flows = [[0, 2, 6, 10, 14, 0], [1, 3, 7, 11, 15, 1]]
+        reports = flood_utilization(net, flows)
+        assert len(reports) == net.num_stages
+        for r in reports:
+            assert r.flows == 2
+
+    def test_gwtf_join_targets_bottleneck(self):
+        reports = [StageReport(0, 2, 4), StageReport(1, 10, 4),
+                   StageReport(2, 5, 4)]
+        # utilization: s0=2.0 (bottleneck), s2=0.8, s1=0.4
+        assign = assign_joiners(reports, [1, 9, 5], policy="gwtf")
+        # highest capacity (9) -> most utilized stage (0)
+        assert assign[1] == 0
+        # second (5) -> stage 2
+        assert assign[2] == 2
+
+    def test_random_policy_in_range(self):
+        reports = [StageReport(s, 4, 2) for s in range(4)]
+        assign = assign_joiners(reports, [3, 2, 1], policy="random",
+                                rng=np.random.default_rng(0))
+        assert all(0 <= a < 4 for a in assign)
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 5000), churn=st.sampled_from([0.0, 0.1, 0.3]),
+       scheduler=st.sampled_from(["gwtf", "swarm"]))
+def test_property_simulator_invariants(seed, churn, scheduler):
+    """For any topology/churn/scheduler: event times non-negative,
+    completed <= launched, metrics finite, capacities never oversubscribed
+    at iteration end (all slots released)."""
+    net = make_net(seed=seed % 7, het=True)
+    sim = TrainingSimulator(net, scheduler=scheduler, churn=churn,
+                            rng=np.random.default_rng(seed))
+    for m in sim.run(4):
+        assert m.duration >= 0
+        assert 0 <= m.completed <= m.launched
+        assert np.isfinite(m.comm_time) and m.comm_time >= 0
+        assert np.isfinite(m.wasted_gpu) and m.wasted_gpu >= 0
