@@ -1,0 +1,211 @@
+"""Node-count scaling benchmark for the GWTF flow engine.
+
+For growing relay counts (default 100 -> 2000, 10 stages) this measures:
+
+* **rounds/sec** of the indexed ``GWTFProtocol`` over a full convergence
+  run (``run(max_rounds=200)``, default quiet window) — the headline
+  metric the CI smoke gate defends;
+* **rounds/sec of the pre-optimization reference implementation**
+  (``ReferenceGWTFProtocol``) executing the *identical* rounds on the
+  same seed — the two engines are behavior-equivalent, so this is a
+  like-for-like measurement of the indexing speedup;
+* **time-to-convergence** (init + rounds, wall seconds);
+* **solution quality vs. the centralized min-cost max-flow optimum**
+  (sum-of-edge-costs ratio at the same flow value).
+
+Results are written to ``BENCH_scale.json`` at the repo root so future
+PRs have a perf trajectory to defend.
+
+``--smoke`` runs the small sizes only and compares against the committed
+``BENCH_scale.json``: it exits non-zero if the optimized engine's
+rounds/sec regressed by more than 2x.  To keep the gate meaningful on
+slower CI hosts, the comparison is normalized by the reference engine's
+rounds/sec measured in the same run (the reference is the
+host-speed calibration: a uniformly slower machine slows both engines).
+
+This module deliberately avoids the jax-importing benchmark helpers —
+it needs only numpy, so the CI smoke job stays light.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.flow.decentralized import GWTFProtocol
+from repro.core.flow.graph import synthetic_network
+from repro.core.flow.mincost import solve_training_flow
+from repro.core.flow.reference import ReferenceGWTFProtocol
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_OUT = REPO_ROOT / "BENCH_scale.json"
+
+STAGES = 10
+SOURCES = 2
+SEED = 0
+FULL_SIZES = (100, 200, 500, 1000, 2000)
+SMOKE_SIZES = (100, 200)
+
+
+def build_network(relays: int, seed: int = SEED):
+    """Table-V-style abstract network scaled up: d_ij ~ U{1..19},
+    caps ~ U{1..3}, source capacity growing with the swarm."""
+    rng = np.random.default_rng(seed)
+
+    def link_costs(r, size=None):
+        if size is not None:                 # vectorized fast path
+            return np.floor(r.uniform(1, 20, size=size))
+        return float(int(r.uniform(1, 20)))
+
+    return synthetic_network(
+        num_stages=STAGES, relays_per_stage=relays // STAGES,
+        capacities=lambda r: int(r.uniform(1, 4)),
+        link_costs=link_costs,
+        num_sources=SOURCES, source_capacity=max(4, relays // 20),
+        rng=rng)
+
+
+def bench_size(relays: int, *, baseline: bool, optimal: bool,
+               seed: int = SEED) -> dict:
+    t0 = time.perf_counter()
+    net, cost = build_network(relays, seed)
+    build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    proto = GWTFProtocol(net, cost_matrix=cost, objective="sum",
+                         rng=np.random.default_rng(seed + 3))
+    init_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rounds = proto.run(max_rounds=200)
+    run_s = time.perf_counter() - t0
+    flows = proto.complete_flows()
+    rec = dict(
+        relays=relays, stages=STAGES, nodes=len(net.nodes),
+        rounds=rounds, flows=len(flows),
+        build_s=round(build_s, 4), init_s=round(init_s, 4),
+        run_s=round(run_s, 4),
+        convergence_s=round(init_s + run_s, 4),
+        rounds_per_sec=round(rounds / run_s, 3),
+        total_cost=proto.total_cost(),
+        max_edge_cost=proto.max_edge_cost(),
+    )
+
+    if baseline:
+        net_r, cost_r = build_network(relays, seed)
+        ref = ReferenceGWTFProtocol(net_r, cost_matrix=cost_r,
+                                    objective="sum",
+                                    rng=np.random.default_rng(seed + 3))
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            ref.step_round()
+        ref_s = time.perf_counter() - t0
+        rec["ref_rounds_per_sec"] = round(rounds / ref_s, 3)
+        rec["speedup_vs_reference"] = round(ref_s / run_s, 2)
+        rec["flows_match_reference"] = flows == ref.complete_flows()
+
+    if optimal:
+        t0 = time.perf_counter()
+        plan = solve_training_flow(net, cost_matrix=cost,
+                                   max_flow=max(len(flows), 1))
+        rec["optimal_s"] = round(time.perf_counter() - t0, 4)
+        rec["optimal_cost"] = plan.cost
+        if plan.cost > 0:
+            rec["cost_ratio_vs_optimal"] = round(proto.total_cost()
+                                                 / plan.cost, 4)
+    return rec
+
+
+def print_row(rec: dict):
+    ref = rec.get("ref_rounds_per_sec")
+    spd = rec.get("speedup_vs_reference")
+    ratio = rec.get("cost_ratio_vs_optimal")
+    print(f"  relays={rec['relays']:5d}  rounds={rec['rounds']:3d}  "
+          f"opt={rec['rounds_per_sec']:8.2f} r/s  "
+          f"ref={ref if ref is not None else '   n/a':>8} r/s  "
+          f"speedup={spd if spd is not None else 'n/a':>5}x  "
+          f"conv={rec['convergence_s']:7.2f}s  "
+          f"vs-optimal={ratio if ratio is not None else 'n/a'}")
+
+
+def smoke(committed_path: Path) -> int:
+    """CI gate: fail (exit 1) if rounds/sec regressed > 2x vs committed,
+    normalized by the reference engine's speed on this host."""
+    if not committed_path.exists():
+        print(f"no committed {committed_path.name}; smoke run is "
+              f"informational only")
+        committed = {}
+    else:
+        data = json.loads(committed_path.read_text())
+        committed = {r["relays"]: r for r in data["results"]}
+    failures = []
+    print(f"== bench_scale --smoke (sizes {SMOKE_SIZES}) ==")
+    for relays in SMOKE_SIZES:
+        rec = bench_size(relays, baseline=True, optimal=False)
+        print_row(rec)
+        if not rec.get("flows_match_reference", True):
+            failures.append(f"relays={relays}: optimized flows diverged "
+                            f"from reference")
+            continue
+        base = committed.get(relays)
+        if base is None or "ref_rounds_per_sec" not in base:
+            continue
+        host_factor = rec["ref_rounds_per_sec"] / base["ref_rounds_per_sec"]
+        floor = base["rounds_per_sec"] * host_factor / 2.0
+        print(f"    gate: measured {rec['rounds_per_sec']:.2f} r/s vs "
+              f"floor {floor:.2f} r/s "
+              f"(committed {base['rounds_per_sec']:.2f} x host "
+              f"{host_factor:.2f} / 2)")
+        if rec["rounds_per_sec"] < floor:
+            failures.append(
+                f"relays={relays}: rounds/sec regressed >2x "
+                f"({rec['rounds_per_sec']:.2f} < floor {floor:.2f})")
+    if failures:
+        print("SMOKE FAILURES:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("smoke OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + regression gate vs committed JSON")
+    ap.add_argument("--sizes", type=int, nargs="*", default=None)
+    ap.add_argument("--baseline-max", type=int, default=2000,
+                    help="largest size at which the reference baseline runs")
+    ap.add_argument("--no-optimal", action="store_true")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        return smoke(args.out)
+
+    sizes = tuple(args.sizes) if args.sizes else FULL_SIZES
+    print(f"== bench_scale: {STAGES} stages, {SOURCES} sources, "
+          f"sizes {sizes} ==")
+    results = []
+    for relays in sizes:
+        rec = bench_size(relays, baseline=relays <= args.baseline_max,
+                         optimal=not args.no_optimal)
+        print_row(rec)
+        results.append(rec)
+    out = dict(
+        meta=dict(stages=STAGES, sources=SOURCES, seed=SEED,
+                  objective="sum", max_rounds=200, quiet_rounds=25,
+                  metric="rounds_per_sec over a full convergence run; "
+                         "reference = pre-optimization implementation "
+                         "(repro.core.flow.reference) on identical rounds"),
+        results=results)
+    args.out.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

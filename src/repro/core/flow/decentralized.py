@@ -20,11 +20,56 @@ Every decision here reads only (a) the deciding node's own state and (b)
 state returned by an explicit query to a known peer — the global ``net``
 object is used strictly as a message channel / cost oracle (d_ij is
 measurable locally by the two endpoints).
+
+Index structures (scale rebuild)
+--------------------------------
+This implementation is behavior-preserving with respect to
+``repro.core.flow.reference.ReferenceGWTFProtocol`` (the straightforward
+per-round-scan implementation): the same seed produces the *identical*
+flows and the identical RNG stream.  The speed comes from incremental
+indexes over the protocol state, not from changing any decision:
+
+* ``_unpaired[(j, dn)]`` — ordered map (keyed by segment append order) of
+  node ``j``'s unpaired outflows toward data node ``dn``.
+  Invariant: segment ``s`` owned by relay ``p`` is in
+  ``_unpaired[(p.node_id, s.data_node)]`` **iff** ``s.upstream is None``.
+  Kept current by the ``_append_segment`` / ``_remove_segment`` /
+  ``_set_upstream`` mutation helpers — ``_advertised`` is an O(1) lookup
+  instead of a scan of all of ``j``'s segments per query.
+* ``_advertisers[dn]`` — the set of relay ids with at least one unpaired
+  outflow toward ``dn``.  Invariant: ``j in _advertisers[dn]`` iff
+  ``_unpaired[(j, dn)]`` is non-empty.  ``_request_flow`` consults it to
+  reject peers in O(1) while still iterating ``known_next`` in the same
+  order as the reference (ties in the strict ``<`` comparisons resolve
+  identically).
+* per-node unpaired counters (``ProtoNode.n_up_unpaired`` /
+  ``n_down_unpaired``) — make ``stable()`` checks O(1); the set
+  ``_broken`` (ids with ``n_down_unpaired > 0``) is the unpaired-inflow
+  worklist: ``step_round`` only walks a node's segment list looking for
+  repairs when the node is on it.
+* ``_epoch[stage]`` — bumped by every segment mutation touching a relay
+  of that stage.  When the annealing temperature has decayed below 1e-6
+  (worsening moves rejected *without* consuming randomness), a
+  Request Change / Redirect scan that found no improving move is memoised
+  against the stage epoch and skipped until some same-stage state
+  changes.  The RNG draws that precede the scan (segment choice,
+  candidate permutation) are still made, so the stream stays aligned
+  with the reference.
+* ``_refresh_costs`` is an iterative bounded-depth walk (explicit stack,
+  depth capped at ``num_stages + 2``) instead of recursion — same final
+  values, no recursion-limit exposure at deep pipelines.
+
+Cost queries go through a flattened copy of the dense cost matrix
+(``FlowNetwork.cost_matrix()`` or the explicit ``cost_matrix`` argument),
+refreshed when the network's cost-cache version changes.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
+from bisect import bisect_left, insort
+from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
@@ -33,9 +78,14 @@ import numpy as np
 from repro.core.flow.graph import FlowNetwork, Node
 
 
-@dataclass
+@dataclass(eq=False)
 class Segment:
-    """One unit of flow through one node."""
+    """One unit of flow through one node.
+
+    ``eq=False``: segments are compared by identity — two segments of
+    different flows can transiently carry identical field values, and
+    list removal / membership must target the exact object.
+    """
     flow_id: int
     data_node: int               # the sink this flow must return to
     downstream: Optional[int]    # next-stage peer (the sink itself for last stage)
@@ -45,7 +95,14 @@ class Segment:
 
 @dataclass
 class ProtoNode:
-    """Local protocol state of one participant."""
+    """Local protocol state of one participant.
+
+    ``n_up_unpaired`` / ``n_down_unpaired`` count segments with a missing
+    upstream / downstream peer; the optimized protocol maintains them via
+    its mutation helpers so ``stable()``-style checks are O(1).  The
+    scan-based methods below remain the semantic definitions (and are
+    what the reference implementation uses).
+    """
     node_id: int
     stage: int                   # -1 for the data node's source side
     capacity: int
@@ -53,6 +110,8 @@ class ProtoNode:
     known_same: Set[int] = field(default_factory=set)
     segments: List[Segment] = field(default_factory=list)
     alive: bool = True
+    n_up_unpaired: int = 0
+    n_down_unpaired: int = 0
 
     @property
     def used(self) -> int:
@@ -76,6 +135,8 @@ class GWTFProtocol:
     ``peer_view`` limits each node's membership knowledge to a random
     subset of each adjacent stage (partial views, paper Sec. III); None
     means full adjacent-stage knowledge (as after long DHT gossip).
+    ``refine=False`` disables the annealed Request Change / Redirect
+    refinement (used by benchmarks to isolate its contribution).
     """
 
     def __init__(self, net: FlowNetwork, *,
@@ -83,42 +144,113 @@ class GWTFProtocol:
                  temperature: float = 1.7, alpha: float = 0.95,
                  objective: str = "minmax",
                  peer_view: Optional[int] = None,
+                 refine: bool = True,
                  rng: Optional[np.random.Generator] = None):
         self.net = net
         self.cost_matrix = cost_matrix
         self.T = temperature
         self.alpha = alpha
         self.objective = objective
+        self.refine = refine
         self.rng = rng or np.random.default_rng(0)
         self.peer_view = peer_view
         self._flow_counter = itertools.count()
+        self._order_counter = itertools.count()
         self.protos: Dict[int, ProtoNode] = {}
         self._sink_slots: Dict[int, int] = {}    # data node -> free sink slots
+        # --- indexes (see module docstring for invariants) ---
+        self._unpaired: Dict[Tuple[int, int], Dict[int, Segment]] = {}
+        self._advertisers: Dict[int, Set[int]] = {}
+        self._broken: Set[int] = set()           # unpaired-inflow worklist
+        # _epoch[stage]: bumped by ANY segment mutation in the stage
+        # (guards Request Redirect memos, which read upstream+downstream).
+        # _epoch_down[(stage, dn)]: bumped only by downstream-pointer /
+        # membership changes of that (stage, data_node) — the only state
+        # a Request Change scan reads — so upstream-only pairings don't
+        # spuriously invalidate change memos.
+        self._epoch: Dict[int, int] = defaultdict(int)
+        self._epoch_down: Dict[Tuple[int, int], int] = defaultdict(int)
+        # epoch-keyed vectorized views of the refinement search space:
+        # _change_pairs[(stage, dn)] -> (epoch_down, J, D, w) arrays of
+        # candidate (owner, downstream) pairs; _redirect_triples[stage]
+        # -> (epoch, A, B, C, cur) arrays of (upstream, owner, downstream)
+        # triples with their current 2-hop cost.  Used only in the frozen
+        # regime to answer "can any improving move exist?" in a few numpy
+        # ops; a positive answer falls through to the exact scalar scan.
+        self._change_pairs: Dict[Tuple[int, int], tuple] = {}
+        self._redirect_triples: Dict[int, tuple] = {}
+        self._memo_change: Dict[Tuple[int, int], int] = {}
+        self._memo_redirect: Dict[int, int] = {}
+        # sorted per-stage membership lists: _stage_alive[s] == the sorted
+        # alive relay ids of stage s (== any member's known_same + itself);
+        # _stage_with_segs[s] == the subset that currently carries >=1
+        # segment.  They let the refinement scans take their candidate
+        # lists in O(stage) slicing instead of sorted(genexpr) per call.
+        self._stage_alive: Dict[int, List[int]] = defaultdict(list)
+        self._stage_with_segs: Dict[int, List[int]] = defaultdict(list)
+        self._data_ids: List[int] = [n.id for n in net.data_nodes()]
+        self._data_set: Set[int] = set(self._data_ids)
+        self._cml: Optional[List[List[float]]] = None
+        self._cml_ver: Optional[int] = None
+        self._refresh_cost_source()
         self._build_protocol_state()
 
     # ------------------------------------------------------------------
-    def d(self, i: int, j: int) -> float:
+    # Cost oracle
+    # ------------------------------------------------------------------
+    def _refresh_cost_source(self):
+        """(Re)flatten the dense cost matrix into nested Python lists —
+        the innermost ``d()`` lookup then avoids ndarray scalar boxing."""
         if self.cost_matrix is not None:
-            return float(self.cost_matrix[i, j])
-        return self.net.edge_cost(i, j)
+            if self._cml is None:
+                self._cm_np = np.asarray(self.cost_matrix, dtype=float)
+                self._cml = self._cm_np.tolist()
+            return
+        ver = self.net.cost_version
+        if self._cml is None or self._cml_ver != ver:
+            self._cml = self.net.cost_matrix().tolist()
+            self._cm_np = self.net.cost_matrix()
+            self._cml_ver = ver
+            # cost changes invalidate every memoised refinement scan
+            self._memo_change.clear()
+            self._memo_redirect.clear()
+            self._change_pairs.clear()
+            self._redirect_triples.clear()
+
+    def d(self, i: int, j: int) -> float:
+        return self._cml[i][j]
 
     def _build_protocol_state(self):
         S = self.net.num_stages
+        # one pass over the (insertion-ordered) node table gives per-stage
+        # id lists in exactly net.stage_nodes() order, so the known_* sets
+        # below have the same insertion history — and therefore the same
+        # iteration order — as the reference implementation's.
+        stage_ids: Dict[int, List[int]] = defaultdict(list)
+        data_alive: List[int] = []
+        for n in self.net.nodes.values():
+            if n.is_data:
+                if n.alive:
+                    data_alive.append(n.id)
+            elif n.alive:
+                stage_ids[n.stage].append(n.id)
         for n in self.net.nodes.values():
             if not n.alive:
                 continue
             p = ProtoNode(n.id, n.stage, n.capacity)
             self.protos[n.id] = p
+        for s, ids in stage_ids.items():
+            self._stage_alive[s] = sorted(ids)
         for p in self.protos.values():
             n = self.net.nodes[p.node_id]
             if n.is_data:
                 self._sink_slots[n.id] = n.capacity
-                nxt = {m.id for m in self.net.stage_nodes(0)}
+                nxt = set(stage_ids[0])
             elif n.stage == S - 1:
-                nxt = {m.id for m in self.net.data_nodes() if m.alive}
+                nxt = set(data_alive)
             else:
-                nxt = {m.id for m in self.net.stage_nodes(n.stage + 1)}
-            same = {m.id for m in self.net.stage_nodes(n.stage)} - {n.id}
+                nxt = set(stage_ids[n.stage + 1])
+            same = set(stage_ids[n.stage]) - {n.id}
             if self.peer_view is not None:
                 nxt = set(self.rng.choice(sorted(nxt),
                                           size=min(self.peer_view, len(nxt)),
@@ -127,60 +259,255 @@ class GWTFProtocol:
             p.known_same = same
 
     # ------------------------------------------------------------------
+    # Index-maintaining mutation helpers.  Every segment-state mutation
+    # in this class goes through these, which is what keeps the
+    # _unpaired/_advertisers/_broken indexes and the per-stage epochs
+    # consistent with the invariants in the module docstring.
+    # ------------------------------------------------------------------
+    def _touch(self, p: ProtoNode):
+        if p.stage >= 0:
+            self._epoch[p.stage] += 1
+
+    def _touch_down(self, p: ProtoNode, data_node: int):
+        if p.stage >= 0:
+            self._epoch_down[(p.stage, data_node)] += 1
+
+    def _index_add(self, p: ProtoNode, seg: Segment):
+        key = (p.node_id, seg.data_node)
+        idx = self._unpaired.get(key)
+        if idx is None:
+            idx = self._unpaired[key] = {}
+        if not idx:
+            self._advertisers.setdefault(seg.data_node, set()).add(p.node_id)
+        idx[seg._order] = seg
+
+    def _index_discard(self, p: ProtoNode, seg: Segment):
+        key = (p.node_id, seg.data_node)
+        idx = self._unpaired.get(key)
+        if idx is not None and seg._order in idx:
+            del idx[seg._order]
+            if not idx:
+                self._advertisers[seg.data_node].discard(p.node_id)
+
+    def _append_segment(self, p: ProtoNode, seg: Segment):
+        seg._order = next(self._order_counter)
+        p.segments.append(seg)
+        is_data = p.node_id in self._data_set
+        if not is_data:
+            if seg.upstream is None:
+                p.n_up_unpaired += 1
+                self._index_add(p, seg)
+            if len(p.segments) == 1:
+                insort(self._stage_with_segs[p.stage], p.node_id)
+        if seg.downstream is None:
+            p.n_down_unpaired += 1
+            self._broken.add(p.node_id)
+        self._touch(p)
+        self._touch_down(p, seg.data_node)
+
+    def _remove_segment(self, p: ProtoNode, seg: Segment):
+        p.segments.remove(seg)          # identity match (Segment eq=False)
+        is_data = p.node_id in self._data_set
+        if not is_data:
+            if seg.upstream is None:
+                p.n_up_unpaired -= 1
+                self._index_discard(p, seg)
+            if not p.segments:
+                self._stage_with_segs[p.stage].remove(p.node_id)
+            # evict the dead segment's memo entry so the cache stays
+            # bounded by the number of live segments
+            self._memo_change.pop((p.node_id, seg._order), None)
+        if seg.downstream is None:
+            p.n_down_unpaired -= 1
+            if p.n_down_unpaired == 0:
+                self._broken.discard(p.node_id)
+        self._touch(p)
+        self._touch_down(p, seg.data_node)
+
+    def _set_upstream(self, p: ProtoNode, seg: Segment, up: Optional[int]):
+        if seg.upstream is None and up is not None:
+            if p.node_id not in self._data_set:
+                p.n_up_unpaired -= 1
+                self._index_discard(p, seg)
+        elif seg.upstream is not None and up is None:
+            if p.node_id not in self._data_set:
+                p.n_up_unpaired += 1
+                self._index_add(p, seg)
+        seg.upstream = up
+        self._touch(p)
+
+    def _set_downstream(self, p: ProtoNode, seg: Segment, down: Optional[int]):
+        if seg.downstream is None and down is not None:
+            p.n_down_unpaired -= 1
+            if p.n_down_unpaired == 0:
+                self._broken.discard(p.node_id)
+        elif seg.downstream is not None and down is None:
+            p.n_down_unpaired += 1
+            self._broken.add(p.node_id)
+        seg.downstream = down
+        self._touch(p)
+        self._touch_down(p, seg.data_node)
+
+    # ------------------------------------------------------------------
     # Queries (what a peer answers when asked — local information only)
     # ------------------------------------------------------------------
     def _advertised(self, j: int, data_node: int) -> Optional[float]:
         """Peer j's advertised cost-to-sink for an unpaired outflow to
-        ``data_node``; None if it has none (infinite)."""
-        pj = self.protos.get(j)
-        if pj is None or not pj.alive:
-            return None
-        if self.net.nodes[j].is_data:
-            # the sink itself: free slot -> cost 0
+        ``data_node``; None if it has none (infinite).  O(#unpaired at j
+        for this sink) via the advertisement table."""
+        if j in self._data_set:
+            pj = self.protos.get(j)
+            if pj is None or not pj.alive:
+                return None
             return 0.0 if (j == data_node and self._sink_slots[j] > 0) else None
-        best = None
-        for s in pj.unpaired_outflows():
-            if s.data_node == data_node:
-                if best is None or s.cost_to_sink < best:
-                    best = s.cost_to_sink
-        return best
+        idx = self._unpaired.get((j, data_node))
+        if not idx:
+            return None
+        return min(s.cost_to_sink for s in idx.values())
+
+    def _unpaired_in_list_order(self, j: int, data_node: int):
+        """Unpaired outflows of j toward data_node, in segment-list
+        (append) order — matches the reference's scan order exactly."""
+        idx = self._unpaired.get((j, data_node))
+        if not idx:
+            return ()
+        return [idx[k] for k in sorted(idx)]
 
     # ------------------------------------------------------------------
     # Request Flow
     # ------------------------------------------------------------------
+    def _best_advertiser(self, i: int, data_node: int):
+        """Cheapest known next-stage peer with an unpaired outflow toward
+        ``data_node`` (or the sink itself), as (j, total, cost_to_sink).
+
+        Iterates ``known_next`` in set order with O(1) index rejections —
+        the strict ``<`` tie-breaking matches the reference's full scan
+        exactly.  Shared by _request_flow and _repair_downstream."""
+        pi = self.protos[i]
+        adv = self._advertisers.get(data_node)
+        known = pi.known_next
+        if ((not adv or adv.isdisjoint(known))
+                and (data_node not in known
+                     or self._sink_slots[data_node] <= 0)):
+            return None, None, None
+        best_j, best_total, best_cts = None, None, None
+        row = self._cml[i]
+        data_set = self._data_set
+        for j in known:
+            if j in data_set:
+                if j != data_node or self._sink_slots[j] <= 0:
+                    continue
+                cts = 0.0
+            else:
+                idx = self._unpaired.get((j, data_node)) if adv and j in adv \
+                    else None
+                if not idx:
+                    continue
+                cts = min(s.cost_to_sink for s in idx.values())
+            total = cts + row[j]
+            if best_total is None or total < best_total:
+                best_j, best_total, best_cts = j, total, cts
+        return best_j, best_total, best_cts
+
     def _request_flow(self, i: int, data_node: int) -> bool:
         """Node i tries to pair with a subsequent-stage unpaired outflow."""
         pi = self.protos[i]
-        best_j, best_total, best_cts = None, None, None
-        for j in pi.known_next:
-            cts = self._advertised(j, data_node)
-            if cts is None:
-                continue
-            total = cts + self.d(i, j)
-            if best_total is None or total < best_total:
-                best_j, best_total, best_cts = j, total, cts
+        best_j, _, best_cts = self._best_advertiser(i, data_node)
         if best_j is None:
             return False
+        row = self._cml[i]
         # --- the Request Flow message exchange ---
-        pj = self.protos.get(best_j)
-        if self.net.nodes[best_j].is_data:
+        if best_j in self._data_set:
             if self._sink_slots[best_j] <= 0:
                 return False
             self._sink_slots[best_j] -= 1
             fid = next(self._flow_counter)
-            pi.segments.append(Segment(fid, data_node, best_j, None, self.d(i, best_j)))
+            self._append_segment(pi, Segment(fid, data_node, best_j, None,
+                                             row[best_j]))
             return True
         target = None
-        for s in pj.unpaired_outflows():
-            if s.data_node == data_node and abs(s.cost_to_sink - best_cts) < 1e-9:
+        for s in self._unpaired_in_list_order(best_j, data_node):
+            if abs(s.cost_to_sink - best_cts) < 1e-9:
                 target = s
                 break
         if target is None:      # stale cost -> reject (requester retries next round)
             return False
-        target.upstream = i
-        pi.segments.append(Segment(target.flow_id, data_node, best_j, None,
-                                   target.cost_to_sink + self.d(i, best_j)))
+        self._set_upstream(self.protos[best_j], target, i)
+        self._append_segment(pi, Segment(target.flow_id, data_node, best_j, None,
+                                         target.cost_to_sink + row[best_j]))
         return True
+
+    # ------------------------------------------------------------------
+    # Vectorized frozen-regime prefilters.  Both answer "does any
+    # improving move exist?" from epoch-cached numpy views; they never
+    # decide *which* move — a positive answer falls through to the exact
+    # scalar scan, so outcomes and RNG consumption match the reference.
+    # ------------------------------------------------------------------
+    def _change_possible(self, stage: int, dn: int, i: int,
+                         si_dn: int) -> bool:
+        key = (stage, dn)
+        ep = self._epoch_down[key]
+        cached = self._change_pairs.get(key)
+        if cached is None or cached[0] != ep:
+            owners: List[int] = []
+            downs: List[int] = []
+            data_set = self._data_set
+            for j in self._stage_with_segs[stage]:
+                for sj in self.protos[j].segments:
+                    d_j = sj.downstream
+                    if (sj.data_node == dn and d_j is not None
+                            and d_j not in data_set):
+                        owners.append(j)
+                        downs.append(d_j)
+            J = np.asarray(owners, np.intp)
+            D = np.asarray(downs, np.intp)
+            w = self._cm_np[J, D] if J.size else np.empty(0)
+            cached = (ep, J, D, w)
+            self._change_pairs[key] = cached
+        _, J, D, w = cached
+        if not J.size:
+            return False
+        cm = self._cm_np
+        a_cost = cm[i, si_dn]
+        if self.objective == "sum":
+            cur = a_cost + w
+            new = cm[i, D] + cm[J, si_dn]
+        else:
+            cur = np.maximum(a_cost, w)
+            new = np.maximum(cm[i, D], cm[J, si_dn])
+        mask = new < cur
+        mask &= D != si_dn
+        mask &= J != i
+        return bool(mask.any())
+
+    def _redirect_possible(self, stage: int, m: int) -> bool:
+        ep = self._epoch[stage]
+        cached = self._redirect_triples.get(stage)
+        if cached is None or cached[0] != ep:
+            ups: List[int] = []
+            owners: List[int] = []
+            downs: List[int] = []
+            for b in self._stage_with_segs[stage]:
+                for sb in self.protos[b].segments:
+                    if sb.upstream is not None and sb.downstream is not None:
+                        ups.append(sb.upstream)
+                        owners.append(b)
+                        downs.append(sb.downstream)
+            A = np.asarray(ups, np.intp)
+            B = np.asarray(owners, np.intp)
+            C = np.asarray(downs, np.intp)
+            cur = (self._cm_np[A, B] + self._cm_np[B, C]) if A.size \
+                else np.empty(0)
+            cached = (ep, A, B, C, cur)
+            self._redirect_triples[stage] = cached
+        _, A, B, C, cur = cached
+        if not A.size:
+            return False
+        cm = self._cm_np
+        new = cm[A, m] + cm[m, C]
+        mask = new < cur
+        mask &= B != m
+        return bool(mask.any())
 
     # ------------------------------------------------------------------
     # Request Change (same-stage peer swap, annealed)
@@ -189,46 +516,92 @@ class GWTFProtocol:
         pi = self.protos[i]
         if not pi.segments:
             return False
-        si = self.rng.choice(pi.segments)
-        if si.downstream is None or self.net.nodes[si.downstream].is_data:
+        si = pi.segments[int(self.rng.integers(len(pi.segments)))]
+        if si.downstream is None or si.downstream in self._data_set:
             return False
-        candidates = [j for j in pi.known_same if self.protos.get(j)
-                      and self.protos[j].alive]
-        self.rng.shuffle(candidates)
-        for j in candidates:
-            pj = self.protos[j]
+        # == sorted(j for j in pi.known_same if alive proto), via the
+        # maintained per-stage membership list.  Only the *length* is
+        # needed before the memo check, so the (O(stage)) exclusion copy
+        # is deferred past it — memo hits never build the list.
+        stage_lst = self._stage_alive[pi.stage]
+        k_self = bisect_left(stage_lst, i)
+        present = k_self < len(stage_lst) and stage_lst[k_self] == i
+        perm = self.rng.permutation(len(stage_lst) - 1 if present
+                                    else len(stage_lst))
+        frozen = self.T <= 1e-6
+        if frozen:
+            # T is frozen: worsening moves are rejected without drawing
+            # randomness, so a fruitless scan is a pure function of the
+            # (stage, data_node) downstream state -> memoise against the
+            # fine-grained epoch (a removed pair can never turn a
+            # fruitless scan fruitful, so membership-only shrinkage
+            # needs no bump).
+            memo_key = (i, si._order)
+            epoch_now = self._epoch_down[(pi.stage, si.data_node)]
+            if self._memo_change.get(memo_key) == epoch_now:
+                return False
+            if not self._change_possible(pi.stage, si.data_node, i,
+                                         si.downstream):
+                self._memo_change[memo_key] = epoch_now
+                return False
+        candidates = (stage_lst[:k_self] + stage_lst[k_self + 1:]
+                      if present else stage_lst)
+        # invariants of the scan, hoisted: si's fields cannot change until
+        # an accept (which returns immediately), and T cannot cross the
+        # frozen threshold mid-scan for the same reason.
+        row_i = self._cml[i]
+        data_set = self._data_set
+        si_dn, si_data = si.downstream, si.data_node
+        sum_obj = self.objective == "sum"
+        a_cost = row_i[si_dn]
+        protos = self.protos
+        for k in perm.tolist():
+            j = candidates[k]
+            pj = protos[j]
+            row_j = self._cml[j]
+            rj_si = row_j[si_dn]
             for sj in pj.segments:
-                if (sj.data_node != si.data_node or sj.downstream is None
-                        or self.net.nodes[sj.downstream].is_data
-                        or sj.downstream == si.downstream):
+                sj_dn = sj.downstream
+                if (sj.data_node != si_data or sj_dn is None
+                        or sj_dn in data_set or sj_dn == si_dn):
                     continue
-                if self.objective == "sum":
-                    cur = self.d(i, si.downstream) + self.d(j, sj.downstream)
-                    new = self.d(i, sj.downstream) + self.d(j, si.downstream)
+                if sum_obj:
+                    cur = a_cost + row_j[sj_dn]
+                    new = row_i[sj_dn] + rj_si
                 else:
-                    cur = max(self.d(i, si.downstream), self.d(j, sj.downstream))
-                    new = max(self.d(i, sj.downstream), self.d(j, si.downstream))
-                if self._anneal_accept(cur, new):
-                    # swap downstream peers; inform next-stage nodes
-                    di, dj = si.downstream, sj.downstream
-                    self._repoint_upstream(di, old_up=i, new_up=j,
-                                           data_node=si.data_node)
-                    self._repoint_upstream(dj, old_up=j, new_up=i,
-                                           data_node=sj.data_node)
-                    si.downstream, sj.downstream = dj, di
-                    self._refresh_costs(i)
-                    self._refresh_costs(j)
-                    return True
+                    b = row_j[sj_dn]
+                    cur = a_cost if a_cost > b else b
+                    nx = row_i[sj_dn]
+                    new = nx if nx > rj_si else rj_si
+                # inlined _anneal_accept
+                if new < cur:
+                    self.T *= self.alpha
+                elif frozen:
+                    continue
+                elif not self._anneal_worsening(cur, new):
+                    continue
+                # swap downstream peers; inform next-stage nodes
+                self._repoint_upstream(si_dn, old_up=i, new_up=j,
+                                       data_node=si_data)
+                self._repoint_upstream(sj_dn, old_up=j, new_up=i,
+                                       data_node=sj.data_node)
+                self._set_downstream(pi, si, sj_dn)
+                self._set_downstream(pj, sj, si_dn)
+                self._refresh_costs(i)
+                self._refresh_costs(j)
+                return True
+        if frozen:
+            self._memo_change[memo_key] = epoch_now
         return False
 
     def _repoint_upstream(self, downstream_id: int, *, old_up: int,
-                          new_up: int, data_node: int):
+                          new_up: Optional[int], data_node: int):
         pd = self.protos.get(downstream_id)
         if pd is None:
             return
         for s in pd.segments:
             if s.upstream == old_up and s.data_node == data_node:
-                s.upstream = new_up
+                self._set_upstream(pd, s, new_up)
                 return
 
     # ------------------------------------------------------------------
@@ -239,151 +612,202 @@ class GWTFProtocol:
         pm = self.protos[m]
         if pm.free <= 0:
             return False
-        peers = [j for j in pm.known_same if self.protos.get(j)
-                 and self.protos[j].alive and self.protos[j].segments]
-        self.rng.shuffle(peers)
-        for b in peers:
-            pb = self.protos[b]
+        # == sorted(j for j in pm.known_same if alive proto w/ segments);
+        # list construction deferred past the memo check (see
+        # _request_change)
+        stage_lst = self._stage_with_segs[pm.stage]
+        k_self = bisect_left(stage_lst, m)
+        present = k_self < len(stage_lst) and stage_lst[k_self] == m
+        perm = self.rng.permutation(len(stage_lst) - 1 if present
+                                    else len(stage_lst))
+        frozen = self.T <= 1e-6
+        if frozen:
+            if self._memo_redirect.get(m) == self._epoch[pm.stage]:
+                return False
+            if not self._redirect_possible(pm.stage, m):
+                self._memo_redirect[m] = self._epoch[pm.stage]
+                return False
+        peers = (stage_lst[:k_self] + stage_lst[k_self + 1:]
+                 if present else stage_lst)
+        row_m = self._cml[m]
+        cml = self._cml
+        protos = self.protos
+        for k in perm.tolist():
+            b = peers[k]
+            pb = protos[b]
+            row_b = cml[b]
             for sb in pb.segments:
-                if sb.upstream is None or sb.downstream is None:
+                a = sb.upstream
+                c = sb.downstream
+                if a is None or c is None:
                     continue
-                a, c = sb.upstream, sb.downstream
-                cur = self.d(a, b) + self.d(b, c)
-                new = self.d(a, m) + self.d(m, c)
-                if self._anneal_accept(cur, new):
-                    # b approves: m takes over the segment
-                    pb.segments.remove(sb)
-                    seg = dataclasses.replace(
-                        sb, cost_to_sink=sb.cost_to_sink
-                        - self.d(b, c) + self.d(m, c))
-                    pm.segments.append(seg)
-                    # upstream a (may be the data node) and downstream c repoint
-                    pa = self.protos.get(a)
-                    if pa is not None:
-                        for s in pa.segments:
-                            if s.downstream == b and s.data_node == sb.data_node:
-                                s.downstream = m
-                                break
-                    if not self.net.nodes[c].is_data:
-                        self._repoint_upstream(c, old_up=b, new_up=m,
-                                               data_node=sb.data_node)
-                    self._refresh_costs(m)
-                    return True
+                row_a = cml[a]
+                cur = row_a[b] + row_b[c]
+                new = row_a[m] + row_m[c]
+                # inlined _anneal_accept
+                if new < cur:
+                    self.T *= self.alpha
+                elif frozen:
+                    continue
+                elif not self._anneal_worsening(cur, new):
+                    continue
+                # b approves: m takes over the segment
+                self._remove_segment(pb, sb)
+                seg = dataclasses.replace(
+                    sb, cost_to_sink=sb.cost_to_sink
+                    - row_b[c] + row_m[c])
+                self._append_segment(pm, seg)
+                # upstream a (may be the data node) and downstream c repoint
+                pa = protos.get(a)
+                if pa is not None:
+                    for s in pa.segments:
+                        if s.downstream == b and s.data_node == sb.data_node:
+                            self._set_downstream(pa, s, m)
+                            break
+                if c not in self._data_set:
+                    self._repoint_upstream(c, old_up=b, new_up=m,
+                                           data_node=sb.data_node)
+                self._refresh_costs(m)
+                return True
+        if frozen:
+            self._memo_redirect[m] = self._epoch[pm.stage]
         return False
 
     def _anneal_accept(self, cur: float, new: float) -> bool:
+        """Semantic definition of annealed acceptance.  The hot scans in
+        _request_change/_request_redirect inline the improving/frozen
+        branches and call _anneal_worsening directly — keep the three in
+        sync (and in sync with ReferenceGWTFProtocol._anneal_accept)."""
         if new < cur:
             self.T *= self.alpha
             return True
         if self.T <= 1e-6:
             return False
-        p = np.exp(min((cur - new) / self.T, 0.0))
+        return self._anneal_worsening(cur, new)
+
+    def _anneal_worsening(self, cur: float, new: float) -> bool:
+        """Annealed acceptance of a non-improving move (T > 1e-6)."""
+        p = math.exp(min((cur - new) / self.T, 0.0))
         if p > self.rng.uniform(0.0, 1.0):
             self.T *= self.alpha
             return True
         return False
 
     def _refresh_costs(self, i: int):
-        """Recompute cost_to_sink for node i and broadcast upstream."""
-        pi = self.protos.get(i)
-        if pi is None:
-            return
-        for s in pi.segments:
-            if s.downstream is None:
+        """Recompute cost_to_sink for node i and propagate to feeders.
+
+        Iterative bounded-depth walk (upstream chains strictly decrease
+        in stage, so depth <= num_stages + 1); replaces the reference's
+        recursion with identical resulting values.
+        """
+        data_set = self._data_set
+        cml = self._cml
+        max_depth = self.net.num_stages + 2
+        stack = [(i, 0)]
+        while stack:
+            nid, depth = stack.pop()
+            pi = self.protos.get(nid)
+            if pi is None:
                 continue
-            down_cost = 0.0
-            pd = self.protos.get(s.downstream)
-            if pd is not None and not self.net.nodes[s.downstream].is_data:
-                for sd in pd.segments:
-                    if sd.upstream == i and sd.data_node == s.data_node:
-                        down_cost = sd.cost_to_sink
-                        break
-            s.cost_to_sink = down_cost + self.d(i, s.downstream)
-        # propagate to feeders (bounded recursion: stage count)
-        for s in pi.segments:
-            if s.upstream is not None and not self.net.nodes[s.upstream].is_data:
-                self._refresh_costs(s.upstream)
+            row = cml[nid]
+            for s in pi.segments:
+                if s.downstream is None:
+                    continue
+                down_cost = 0.0
+                if s.downstream not in data_set:
+                    pd = self.protos.get(s.downstream)
+                    if pd is not None:
+                        for sd in pd.segments:
+                            if sd.upstream == nid and sd.data_node == s.data_node:
+                                down_cost = sd.cost_to_sink
+                                break
+                s.cost_to_sink = down_cost + row[s.downstream]
+            if depth + 1 >= max_depth:
+                continue
+            for s in pi.segments:
+                if s.upstream is not None and s.upstream not in data_set:
+                    stack.append((s.upstream, depth + 1))
 
     # ------------------------------------------------------------------
     # Round driver
     # ------------------------------------------------------------------
     def step_round(self) -> int:
         """One synchronous protocol round; returns number of state changes."""
+        self._refresh_cost_source()
         changes = 0
-        order = sorted(self.protos)
+        order = np.asarray(sorted(self.protos))
         self.rng.shuffle(order)
-        for i in order:
+        data_set = self._data_set
+        for i in order.tolist():
             pi = self.protos[i]
-            if not pi.alive or self.net.nodes[i].is_data:
+            if not pi.alive or i in data_set:
                 continue
-            if pi.free > 0 and pi.stable():
+            if (pi.capacity > len(pi.segments)
+                    and pi.n_up_unpaired == 0 and pi.n_down_unpaired == 0):
                 for dn in self._known_data_nodes(i):
                     if pi.free <= 0:
                         break
                     if self._request_flow(i, dn):
                         changes += 1
             # nodes with unpaired inflow (downstream lost) re-pair downstream
-            for s in list(pi.segments):
-                if s.downstream is None:
-                    if self._repair_downstream(i, s):
-                        s._deny_after = 3
-                        changes += 1
-                    else:
-                        # DENY (Sec. V-D): if no alternate peer exists after
-                        # a few attempts, release the segment and tell the
-                        # upstream so the flow can be redistributed.
-                        s._deny_after = getattr(s, "_deny_after", 3) - 1
-                        if s._deny_after <= 0:
-                            self._deny(i, s)
+            if i in self._broken:
+                for s in list(pi.segments):
+                    if s.downstream is None:
+                        if self._repair_downstream(i, s):
+                            s._deny_after = 3
                             changes += 1
+                        else:
+                            # DENY (Sec. V-D): if no alternate peer exists after
+                            # a few attempts, release the segment and tell the
+                            # upstream so the flow can be redistributed.
+                            s._deny_after = getattr(s, "_deny_after", 3) - 1
+                            if s._deny_after <= 0:
+                                self._deny(i, s)
+                                changes += 1
+            # annealed refinement runs for every relay, every round
+            # (paper Sec. V-C)
+            if self.refine:
+                if self._request_change(i):
+                    changes += 1
+                if self._request_redirect(i):
+                    changes += 1
         # data nodes also repair source-side segments whose downstream died
-        for dn in self.net.data_nodes():
-            pd = self.protos.get(dn.id)
-            if pd is None:
+        for dn_id in self._data_ids:
+            pd = self.protos.get(dn_id)
+            if pd is None or dn_id not in self._broken:
                 continue
             for s in list(pd.segments):
                 if s.downstream is None:
-                    pd.segments.remove(s)       # re-issue via _connect_sources
+                    self._remove_segment(pd, s)  # re-issue via _connect_sources
                     changes += 1
-            if self._request_change(i):
-                changes += 1
-            if self._request_redirect(i):
-                changes += 1
         # data nodes (source side) connect to stage-0 unpaired outflows
         changes += self._connect_sources()
         return changes
 
     def _known_data_nodes(self, i: int) -> List[int]:
-        dns = [n.id for n in self.net.data_nodes() if n.alive]
+        dns = [d for d in self._data_ids if self.net.nodes[d].alive]
         self.rng.shuffle(dns)          # avoid fixed-priority source bias
         return dns
 
     def _repair_downstream(self, i: int, seg: Segment) -> bool:
         """Re-pair a segment whose downstream crashed (unpaired inflow)."""
         pi = self.protos[i]
-        best_j, best_total, best_cts = None, None, None
-        for j in pi.known_next:
-            cts = self._advertised(j, seg.data_node)
-            if cts is None:
-                continue
-            total = cts + self.d(i, j)
-            if best_total is None or total < best_total:
-                best_j, best_total, best_cts = j, total, cts
+        best_j, _, best_cts = self._best_advertiser(i, seg.data_node)
         if best_j is None:
             return False
-        if self.net.nodes[best_j].is_data:
+        row = self._cml[i]
+        if best_j in self._data_set:
             if self._sink_slots[best_j] <= 0:
                 return False
             self._sink_slots[best_j] -= 1
-            seg.downstream = best_j
-            seg.cost_to_sink = self.d(i, best_j)
+            self._set_downstream(pi, seg, best_j)
+            seg.cost_to_sink = row[best_j]
             return True
-        pj = self.protos[best_j]
-        for s in pj.unpaired_outflows():
-            if s.data_node == seg.data_node and abs(s.cost_to_sink - best_cts) < 1e-9:
-                s.upstream = i
-                seg.downstream = best_j
-                seg.cost_to_sink = s.cost_to_sink + self.d(i, best_j)
+        for s in self._unpaired_in_list_order(best_j, seg.data_node):
+            if abs(s.cost_to_sink - best_cts) < 1e-9:
+                self._set_upstream(self.protos[best_j], s, i)
+                self._set_downstream(pi, seg, best_j)
+                seg.cost_to_sink = s.cost_to_sink + row[best_j]
                 return True
         return False
 
@@ -393,48 +817,50 @@ class GWTFProtocol:
         if pi is None or seg not in pi.segments:
             return
         up = seg.upstream
-        pi.segments.remove(seg)
+        self._remove_segment(pi, seg)
         if up is None:
             return
         pu = self.protos.get(up)
         if pu is None:
             return
-        if self.net.nodes[up].is_data:
+        if up in self._data_set:
             # the source drops its segment and re-issues via connect_sources
             for su in list(pu.segments):
                 if su.downstream == i and su.data_node == seg.data_node:
-                    pu.segments.remove(su)
+                    self._remove_segment(pu, su)
                     break
         else:
             for su in pu.segments:
                 if su.downstream == i and su.data_node == seg.data_node:
-                    su.downstream = None
+                    self._set_downstream(pu, su, None)
                     break
 
     def _connect_sources(self) -> int:
         """Source side of each data node pairs with stage-0 unpaired outflows."""
         changes = 0
-        for dn in self.net.data_nodes():
+        for dn_id in self._data_ids:
+            dn = self.net.nodes[dn_id]
             if not dn.alive:
                 continue
-            pd = self.protos[dn.id]
+            pd = self.protos[dn_id]
+            row = self._cml[dn_id]
             while pd.used < pd.capacity:
                 best = None
-                for j in pd.known_next:
-                    pj = self.protos.get(j)
-                    if pj is None or not pj.alive:
-                        continue
-                    for s in pj.unpaired_outflows():
-                        if s.data_node == dn.id:
-                            total = s.cost_to_sink + self.d(dn.id, j)
+                adv = self._advertisers.get(dn_id)
+                if adv and not adv.isdisjoint(pd.known_next):
+                    for j in pd.known_next:
+                        if j not in adv:
+                            continue
+                        for s in self._unpaired_in_list_order(j, dn_id):
+                            total = s.cost_to_sink + row[j]
                             if best is None or total < best[0]:
                                 best = (total, j, s)
                 if best is None:
                     break
                 _, j, s = best
-                s.upstream = dn.id
-                pd.segments.append(Segment(s.flow_id, dn.id, j, None,
-                                           best[0]))
+                self._set_upstream(self.protos[j], s, dn_id)
+                self._append_segment(pd, Segment(s.flow_id, dn_id, j, None,
+                                                 best[0]))
                 changes += 1
         return changes
 
@@ -457,36 +883,37 @@ class GWTFProtocol:
         """Chains data_node -> s0 -> ... -> s(S-1) -> data_node."""
         chains = []
         visited = set()
-        for dn in self.net.data_nodes():
-            pd = self.protos.get(dn.id)
+        for dn_id in self._data_ids:
+            pd = self.protos.get(dn_id)
             if pd is None:
                 continue
             for seg in pd.segments:
-                chain = [dn.id]
-                prev, cur = dn.id, seg.downstream
+                chain = [dn_id]
+                prev, cur = dn_id, seg.downstream
                 ok = True
                 for _ in range(self.net.num_stages + 1):
                     if cur is None:
                         ok = False
                         break
                     chain.append(cur)
-                    if cur == dn.id:
+                    if cur == dn_id:
                         break
                     pc = self.protos.get(cur)
                     nxt = None
                     if pc is not None:
                         for s in pc.segments:
                             if (id(s) not in visited and s.upstream == prev
-                                    and s.data_node == dn.id):
+                                    and s.data_node == dn_id):
                                 nxt = s.downstream
                                 visited.add(id(s))
                                 break
                     prev, cur = cur, nxt
-                if ok and chain[-1] == dn.id and len(chain) == self.net.num_stages + 2:
+                if ok and chain[-1] == dn_id and len(chain) == self.net.num_stages + 2:
                     chains.append(chain)
         return chains
 
     def flow_costs(self) -> List[float]:
+        self._refresh_cost_source()
         costs = []
         for chain in self.complete_flows():
             c = sum(self.d(chain[k], chain[k + 1]) for k in range(len(chain) - 1))
@@ -497,6 +924,7 @@ class GWTFProtocol:
         return float(sum(self.flow_costs()))
 
     def max_edge_cost(self) -> float:
+        self._refresh_cost_source()
         m = 0.0
         for chain in self.complete_flows():
             for k in range(len(chain) - 1):
@@ -515,8 +943,7 @@ class GWTFProtocol:
         """
         self._gc_pass = getattr(self, "_gc_pass", 0) + 1
         for p in self.protos.values():
-            node = self.net.nodes.get(p.node_id)
-            if node is None or node.is_data:
+            if p.node_id in self._data_set:
                 continue
             for s in list(p.segments):
                 unpaired = s.upstream is None or s.downstream is None
@@ -536,40 +963,61 @@ class GWTFProtocol:
                                 for su in pu.segments:
                                     if (su.downstream == p.node_id
                                             and su.data_node == s.data_node):
-                                        su.downstream = None
+                                        self._set_downstream(pu, su, None)
                                         break
-                        p.segments.remove(s)
+                        self._remove_segment(p, s)
                 else:
                     s._stale_since = None
-        for dn in self.net.data_nodes():
+        for dn_id in self._data_ids:
+            dn = self.net.nodes[dn_id]
             used = 0
             for p in self.protos.values():
-                node = self.net.nodes.get(p.node_id)
-                if node is None or node.is_data:
+                if p.node_id in self._data_set:
                     continue
                 for s in p.segments:
-                    if s.downstream == dn.id and s.data_node == dn.id:
+                    if s.downstream == dn_id and s.data_node == dn_id:
                         used += 1
-            self._sink_slots[dn.id] = max(0, dn.capacity - used)
+            self._sink_slots[dn_id] = max(0, dn.capacity - used)
 
     def remove_node(self, nid: int):
         """Crash: drop the node, unpair all segments that touched it."""
         p = self.protos.pop(nid, None)
         if p is None:
             return
+        if nid not in self._data_set:
+            for seg in p.segments:
+                if seg.upstream is None:
+                    self._index_discard(p, seg)
+                self._memo_change.pop((nid, seg._order), None)
+            self._memo_redirect.pop(nid, None)
+            if p.stage >= 0:
+                self._epoch[p.stage] += 1
+                alive = self._stage_alive[p.stage]
+                k = bisect_left(alive, nid)
+                if k < len(alive) and alive[k] == nid:
+                    del alive[k]
+                if p.segments:
+                    self._stage_with_segs[p.stage].remove(nid)
+        self._broken.discard(nid)
         for other in self.protos.values():
             other.known_next.discard(nid)
             other.known_same.discard(nid)
             for s in other.segments:
                 if s.downstream == nid:
-                    s.downstream = None          # unpaired inflow: re-pair later
+                    self._set_downstream(other, s, None)  # re-pair later
                 if s.upstream == nid:
-                    s.upstream = None            # unpaired outflow again
+                    self._set_upstream(other, s, None)    # unpaired outflow again
         # sink slots freed for flows that died with this node are reclaimed
         # lazily by the simulator between iterations.
 
     def add_node(self, node: Node):
-        """Join: create protocol state with adjacent-stage views."""
+        """Join: create protocol state with adjacent-stage views.
+
+        Churn events are rare relative to rounds, so this mirrors the
+        reference's O(N) membership walk; only the indexes and epochs
+        need extra bookkeeping.
+        """
+        self._refresh_cost_source()
         S = self.net.num_stages
         p = ProtoNode(node.id, node.stage, node.capacity)
         if node.stage == S - 1:
@@ -578,6 +1026,9 @@ class GWTFProtocol:
             p.known_next = {m.id for m in self.net.stage_nodes(node.stage + 1)}
         p.known_same = {m.id for m in self.net.stage_nodes(node.stage)} - {node.id}
         self.protos[node.id] = p
+        if 0 <= node.stage:
+            self._epoch[node.stage] += 1
+            insort(self._stage_alive[node.stage], node.id)
         for other in self.protos.values():
             if other.node_id == node.id:
                 continue

@@ -7,14 +7,31 @@ costs follow Eq. 1:
 
 with asymmetric latency/bandwidth averaged because every link is used once
 forward and once backward.
+
+Scale notes
+-----------
+``edge_cost``/``comm_cost`` are the innermost calls of both the protocol
+and the simulator, so the Eq. 1 terms are precomputed once into dense
+(N, N) matrices (``cost_matrix()``) and every query is a single array
+read.  The caches are keyed on a version counter that ``add_node`` (and
+``invalidate_costs``) bumps; node death does *not* invalidate them
+because link costs are independent of liveness.  ``add_node`` grows the
+latency/bandwidth matrices geometrically (amortized O(N) per join
+instead of a fresh O(N^2) reallocation per join).
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+# Defaults for links of a joining node when no measurements are supplied
+# (previously inlined in add_node).
+DEFAULT_JOIN_LATENCY = 0.05
+DEFAULT_JOIN_BANDWIDTH = 500e6 / 8
 
 
 @dataclass
@@ -44,21 +61,71 @@ class FlowNetwork:
     bandwidth: np.ndarray        # (N, N) beta_ij, bytes/s
     activation_size: float       # bytes per microbatch activation
 
+    # ------------------------------------------------------------------
+    # Cached Eq. 1 cost model
+    # ------------------------------------------------------------------
+    def __setattr__(self, name, value):
+        object.__setattr__(self, name, value)
+        # rebinding a cost input (e.g. bench code replacing the whole
+        # latency matrix) invalidates the caches; in-place element writes
+        # still require an explicit invalidate_costs().
+        if name in ("latency", "bandwidth", "activation_size"):
+            object.__setattr__(self, "_cost_version",
+                               getattr(self, "_cost_version", 0) + 1)
+
+    def invalidate_costs(self):
+        """Bump the cache version; the next cost query rebuilds.
+
+        Call after mutating ``latency``/``bandwidth``/``compute_cost`` in
+        place.  ``add_node`` calls this automatically.
+        """
+        self._cost_version = getattr(self, "_cost_version", 0) + 1
+
+    @property
+    def cost_version(self) -> int:
+        """Monotonic counter identifying the current cost-cache epoch."""
+        return getattr(self, "_cost_version", 0)
+
+    def _cost_cache(self) -> dict:
+        ver = self.cost_version
+        cc = getattr(self, "_cc", None)
+        if cc is not None and cc["version"] == ver:
+            return cc
+        lat_avg = 0.5 * (self.latency + self.latency.T)
+        bw_sum = self.bandwidth + self.bandwidth.T
+        n = lat_avg.shape[0]
+        comp = np.zeros(n)
+        for nid, node in self.nodes.items():
+            if nid < n:
+                comp[nid] = node.compute_cost
+        comp_pair = 0.5 * (comp[:, None] + comp[None, :])
+        cost = comp_pair + lat_avg + 2.0 * self.activation_size / bw_sum
+        cc = dict(version=ver, lat_avg=lat_avg, bw_sum=bw_sum,
+                  comp_pair=comp_pair, cost=cost)
+        self._cc = cc
+        return cc
+
+    def cost_matrix(self) -> np.ndarray:
+        """Dense Eq. 1 cost matrix at the default activation size.
+
+        Cached; treat as read-only.  ``d(i, j)`` is ``cost_matrix()[i, j]``.
+        """
+        return self._cost_cache()["cost"]
+
     def edge_cost(self, i: int, j: int, size: Optional[float] = None) -> float:
         """Eq. 1 cost of moving one microbatch between nodes i and j."""
-        size = self.activation_size if size is None else size
-        ni, nj = self.nodes[i], self.nodes[j]
-        comp = 0.5 * (ni.compute_cost + nj.compute_cost)
-        lat = 0.5 * (self.latency[i, j] + self.latency[j, i])
-        bw = self.bandwidth[i, j] + self.bandwidth[j, i]
-        return comp + lat + 2.0 * size / bw
+        cc = self._cost_cache()
+        if size is None:
+            return float(cc["cost"][i, j])
+        return float(cc["comp_pair"][i, j] + cc["lat_avg"][i, j]
+                     + 2.0 * size / cc["bw_sum"][i, j])
 
     def comm_cost(self, i: int, j: int, size: Optional[float] = None) -> float:
         """Communication-only part of Eq. 1 (no compute term)."""
-        size = self.activation_size if size is None else size
-        lat = 0.5 * (self.latency[i, j] + self.latency[j, i])
-        bw = self.bandwidth[i, j] + self.bandwidth[j, i]
-        return lat + 2.0 * size / bw
+        cc = self._cost_cache()
+        if size is None:
+            size = self.activation_size
+        return float(cc["lat_avg"][i, j] + 2.0 * size / cc["bw_sum"][i, j])
 
     # ------------------------------------------------------------------
     def stage_nodes(self, stage: int, alive_only: bool = True) -> List[Node]:
@@ -75,23 +142,78 @@ class FlowNetwork:
     def stage_capacity(self, stage: int) -> int:
         return sum(n.capacity for n in self.stage_nodes(stage))
 
+    def kill_node(self, nid: int):
+        """Mark a node dead.  Cost caches stay valid (liveness does not
+        change link costs); only membership views change."""
+        self.nodes[nid].alive = False
+
+    # ------------------------------------------------------------------
+    # Amortized matrix growth for churn
+    # ------------------------------------------------------------------
+    @property
+    def matrix_capacity(self) -> int:
+        """Allocated side length of the latency/bandwidth buffers."""
+        return getattr(self, "_matrix_capacity", self.latency.shape[0])
+
+    @property
+    def matrix_grow_count(self) -> int:
+        """Number of buffer reallocations performed by ``add_node`` —
+        O(log joins) thanks to geometric growth (the seed reallocated
+        on every join)."""
+        return getattr(self, "_grow_count", 0)
+
+    def _ensure_matrix_capacity(self, size: int):
+        lat_buf = getattr(self, "_lat_buf", None)
+        bw_buf = getattr(self, "_bw_buf", None)
+        backed = (lat_buf is not None
+                  and (self.latency is lat_buf or self.latency.base is lat_buf)
+                  and (self.bandwidth is bw_buf
+                       or self.bandwidth.base is bw_buf))
+        if not backed:
+            # First growth, or the matrices were rebound externally
+            # (e.g. bench code replacing net.latency wholesale): adopt
+            # the *current* arrays so the rebound values survive the
+            # next join instead of being shadowed by a stale buffer.
+            self._lat_buf = self.latency
+            self._bw_buf = self.bandwidth
+            self._matrix_capacity = self.latency.shape[0]
+            if not hasattr(self, "_grow_count"):
+                self._grow_count = 0
+        if self._matrix_capacity >= size:
+            return
+        cap = self._matrix_capacity
+        newcap = max(16, size, 2 * cap)
+        n = self.latency.shape[0]
+        lat = np.full((newcap, newcap), DEFAULT_JOIN_LATENCY)
+        bw = np.full((newcap, newcap), DEFAULT_JOIN_BANDWIDTH)
+        lat[:n, :n] = self.latency
+        bw[:n, :n] = self.bandwidth
+        self._lat_buf, self._bw_buf = lat, bw
+        self._matrix_capacity = newcap
+        self._grow_count += 1
+
     def add_node(self, node: Node, latency_row=None, latency_col=None,
                  bandwidth_row=None, bandwidth_col=None):
-        """Grow the matrices for a joining node."""
+        """Grow the matrices for a joining node (amortized O(N))."""
         n = max(self.nodes) + 1 if self.nodes else 0
         assert node.id == n, f"node ids must be dense ({node.id} != {n})"
         size = n + 1
-        for name, row, col, fill in (("latency", latency_row, latency_col, 0.05),
-                                     ("bandwidth", bandwidth_row, bandwidth_col, 500e6 / 8)):
-            old = getattr(self, name)
-            new = np.full((size, size), fill)
-            new[:n, :n] = old
-            if row is not None:
-                new[n, :n] = row
-            if col is not None:
-                new[:n, n] = col
-            setattr(self, name, new)
+        self._ensure_matrix_capacity(size)
+        # Rows/cols beyond the live region are pristine fill values: each
+        # row/col index is written at most once (ids are dense and nodes
+        # are never removed from the matrices).
+        if latency_row is not None:
+            self._lat_buf[n, :n] = latency_row
+        if latency_col is not None:
+            self._lat_buf[:n, n] = latency_col
+        if bandwidth_row is not None:
+            self._bw_buf[n, :n] = bandwidth_row
+        if bandwidth_col is not None:
+            self._bw_buf[:n, n] = bandwidth_col
+        self.latency = self._lat_buf[:size, :size]
+        self.bandwidth = self._bw_buf[:size, :size]
         self.nodes[node.id] = node
+        self.invalidate_costs()
 
 
 # ---------------------------------------------------------------------------
@@ -118,6 +240,14 @@ def geo_distributed_network(
     intra-location links get max bandwidth / low latency, inter-location
     links get degraded bandwidth (down to 50 Mb/s) and higher latency.
     ``activation_size`` bakes in the paper's x32 bandwidth-reduction trick.
+
+    Link matrices are drawn with NumPy broadcasting (O(N^2) C work, not
+    O(N^2) Python loop iterations), so thousand-node topologies build in
+    milliseconds.  NOTE: the batched draws consume the RNG stream in a
+    different order than the seed implementation's per-pair loop, so a
+    given seed yields a different (equally distributed) topology than
+    before the scale rebuild; node capacities/compute costs, drawn
+    first, are unchanged.
     """
     rng = rng or np.random.default_rng(0)
     nodes: Dict[int, Node] = {}
@@ -135,16 +265,13 @@ def geo_distributed_network(
 
     N = nid
     loc = rng.integers(0, num_locations, size=N)
-    lat = np.empty((N, N))
-    bw = np.empty((N, N))
-    for i in range(N):
-        for j in range(N):
-            if loc[i] == loc[j]:
-                lat[i, j] = rng.uniform(0.001, 0.005)
-                bw[i, j] = max_bandwidth
-            else:
-                lat[i, j] = rng.uniform(0.02, 0.15)
-                bw[i, j] = rng.uniform(min_bandwidth, max_bandwidth)
+    same = loc[:, None] == loc[None, :]
+    lat = np.where(same,
+                   rng.uniform(0.001, 0.005, size=(N, N)),
+                   rng.uniform(0.02, 0.15, size=(N, N)))
+    bw = np.where(same,
+                  max_bandwidth,
+                  rng.uniform(min_bandwidth, max_bandwidth, size=(N, N)))
     np.fill_diagonal(lat, 0.0)
     np.fill_diagonal(bw, max_bandwidth)
     return FlowNetwork(nodes=nodes, num_stages=num_stages, latency=lat,
@@ -156,7 +283,8 @@ def synthetic_network(
     num_stages: int,
     relays_per_stage: int,
     capacities,                   # callable(rng) -> int
-    link_costs,                   # callable(rng) -> float (total d_ij directly)
+    link_costs,                   # callable(rng) -> float, or
+                                  # callable(rng, shape) -> (N, N) array
     num_sources: int = 1,
     source_capacity: int = 100,
     rng: Optional[np.random.Generator] = None,
@@ -166,6 +294,11 @@ def synthetic_network(
     Returns (network, cost_matrix) where cost_matrix[i, j] *is* d_ij —
     edge_cost is bypassed by storing costs in the latency matrix with
     zero compute and infinite bandwidth.
+
+    ``link_costs`` may optionally accept a second ``shape`` argument and
+    return a full (N, N) array — the vectorized fast path used by the
+    scaling benchmarks.  Scalar callables keep the seed's element-wise
+    draw order (diagonal excluded), so existing seeds reproduce.
     """
     rng = rng or np.random.default_rng(0)
     nodes: Dict[int, Node] = {}
@@ -178,10 +311,32 @@ def synthetic_network(
             nodes[nid] = Node(nid, s, int(capacities(rng)), 0.0)
             nid += 1
     N = nid
-    cost = np.empty((N, N))
-    for i in range(N):
-        for j in range(N):
-            cost[i, j] = link_costs(rng) if i != j else 0.0
+    # Detect the batched protocol from the signature instead of probing
+    # with a trial call: a probe could consume RNG draws inside a
+    # shape-tolerant scalar callable and silently shift the stream.
+    batched = False
+    try:
+        params = list(inspect.signature(link_costs).parameters.values())
+        batched = (len([p for p in params if p.kind in
+                        (inspect.Parameter.POSITIONAL_ONLY,
+                         inspect.Parameter.POSITIONAL_OR_KEYWORD)]) >= 2
+                   or any(p.kind == inspect.Parameter.VAR_POSITIONAL
+                          for p in params))
+    except (TypeError, ValueError):
+        batched = False
+    if batched:
+        cost = np.asarray(link_costs(rng, (N, N)), dtype=float)
+        if cost.shape != (N, N):
+            raise ValueError(
+                f"batched link_costs must return shape {(N, N)}, "
+                f"got {cost.shape}")
+        cost = cost.copy()
+        np.fill_diagonal(cost, 0.0)
+    else:
+        cost = np.empty((N, N))
+        for i in range(N):
+            for j in range(N):
+                cost[i, j] = link_costs(rng) if i != j else 0.0
     net = FlowNetwork(nodes=nodes, num_stages=num_stages,
                       latency=cost, bandwidth=np.full((N, N), np.inf),
                       activation_size=0.0)

@@ -13,11 +13,17 @@ and the two recovery protocols:
 
 Metrics per iteration (paper Table II/III): time per microbatch,
 throughput, communication time, wasted GPU time.
+
+Hot-path notes: per-node wait queues are ``collections.deque`` (O(1)
+FIFO), and every ``edge_cost``/``comm_cost`` query resolves against
+``FlowNetwork``'s cached Eq. 1 matrices rather than recomputing the
+latency/bandwidth averages per call.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -85,7 +91,7 @@ class _MB:
 @dataclass
 class _NodeState:
     busy: int = 0
-    queue: List = field(default_factory=list)
+    queue: deque = field(default_factory=deque)   # FIFO, O(1) popleft
     crash_time: Optional[float] = None     # this iteration
 
 
@@ -254,7 +260,7 @@ class TrainingSimulator:
             st = states[nid]
             st.busy -= 1
             while st.queue and self._alive_at(nid, t, crash_times):
-                qmb, qleg = st.queue.pop(0)
+                qmb, qleg = st.queue.popleft()
                 if qmb.done or qmb.failed or qleg != qmb.leg:
                     continue                       # stale queue entry
                 st.busy += 1
@@ -363,8 +369,7 @@ class TrainingSimulator:
 
         # ---- commit crashes for the next iteration ---------------------
         for nid in crash_times:
-            node = self.net.nodes[nid]
-            node.alive = False
+            self.net.kill_node(nid)
             if self.protocol is not None:
                 self.protocol.remove_node(nid)
         return m

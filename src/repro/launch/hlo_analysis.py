@@ -120,9 +120,15 @@ def _dot_flops_line(line: str, symbols) -> Tuple[float, bool]:
     if not res:
         return 0.0, False
     res_elems = _elems(res[0][1])
-    ops = [o.strip().lstrip("%") for o in m.group(2).split(",")]
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
-    lhs = symbols.get(ops[0]) if ops else None
+    # Scheduled HLO annotates operands inline (`dot(f32[2,16] %a, ...)`);
+    # unscheduled HLO gives bare names -> fall back to the symbol table.
+    inline = _dims_of(m.group(2))
+    if inline:
+        lhs = inline[0]
+    else:
+        ops = [o.strip().lstrip("%") for o in m.group(2).split(",")]
+        lhs = symbols.get(ops[0]) if ops else None
     if cm is not None and lhs is not None:
         cdims = [int(x) for x in cm.group(1).split(",") if x]
         k = 1

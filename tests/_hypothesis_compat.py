@@ -1,0 +1,86 @@
+"""`hypothesis` import shim for environments without the package.
+
+The property tests in this repo use a small, fixed subset of the
+hypothesis API (`@settings(max_examples=..., deadline=None)`,
+`@given(name=st.integers/floats/sampled_from)`).  When hypothesis is
+installed we re-export the real thing; otherwise we fall back to a
+deterministic sampler that draws `max_examples` examples per strategy
+from a seeded numpy Generator and runs the test body once per example.
+
+This keeps tier-1 tests runnable in hermetic containers (no pip
+installs) while preserving full shrinking/search behaviour on machines
+that do have hypothesis.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - depends on environment
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import functools
+    import inspect
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(0)
+                n = getattr(wrapper, "_max_examples", 20)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            wrapper._max_examples = getattr(fn, "_max_examples", 20)
+            # pytest must not try to inject the strategy kwargs as fixtures:
+            # expose a signature without them (also stops __wrapped__
+            # unwinding in inspect.signature).
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+        return deco

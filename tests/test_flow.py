@@ -1,7 +1,7 @@
 """Unit + property tests for the GWTF flow layer (paper Sec. V-A/V-C)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.flow.decentralized import GWTFProtocol
 from repro.core.flow.graph import FlowNetwork, Node, synthetic_network

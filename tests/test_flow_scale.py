@@ -1,0 +1,274 @@
+"""Scale-rebuild invariants: indexed protocol equivalence, amortized
+matrix growth, cost-cache invalidation, refinement regression.
+
+The equivalence tests are the contract of the PR that introduced the
+indexed `GWTFProtocol`: for any seed, the optimized engine must produce
+the *identical* flows — and consume the identical RNG stream — as the
+straightforward per-round-scan `ReferenceGWTFProtocol`.
+"""
+import numpy as np
+import pytest
+
+from repro.core.flow.decentralized import GWTFProtocol
+from repro.core.flow.graph import FlowNetwork, Node, geo_distributed_network, \
+    synthetic_network
+from repro.core.flow.reference import ReferenceGWTFProtocol
+
+# Paper Table V settings (bench_flow.SETTINGS)
+TABLE_V = [
+    dict(name="1", sources=1, relays=40, stages=8, cap=(1, 3), cost=(1, 20)),
+    dict(name="2", sources=1, relays=40, stages=10, cap=(1, 3), cost=(1, 20)),
+    dict(name="3", sources=1, relays=40, stages=8, cap=(5, 15), cost=(1, 20)),
+    dict(name="4", sources=1, relays=40, stages=8, cap=(1, 3), cost=(5, 100)),
+    dict(name="5", sources=2, relays=40, stages=8, cap=(1, 3), cost=(1, 20)),
+    dict(name="6", sources=4, relays=80, stages=8, cap=(1, 3), cost=(1, 20)),
+]
+
+
+def build_setting(s, seed, source_capacity=4):
+    rng = np.random.default_rng(seed)
+    return synthetic_network(
+        num_stages=s["stages"], relays_per_stage=s["relays"] // s["stages"],
+        capacities=lambda r: int(r.uniform(*s["cap"])),
+        link_costs=lambda r: float(int(r.uniform(*s["cost"]))),
+        num_sources=s["sources"], source_capacity=source_capacity, rng=rng)
+
+
+def assert_equivalent(opt, ref, tag=""):
+    assert opt.complete_flows() == ref.complete_flows(), f"{tag}: flows differ"
+    assert opt.total_cost() == ref.total_cost(), f"{tag}: cost differs"
+    assert opt.T == ref.T, f"{tag}: annealing temperature differs"
+    assert opt.rng.bit_generator.state == ref.rng.bit_generator.state, \
+        f"{tag}: RNG stream diverged"
+
+
+class TestProtocolEquivalence:
+    @pytest.mark.parametrize("setting", TABLE_V, ids=lambda s: s["name"])
+    def test_table_v_identical_flows(self, setting):
+        """Same RNG seed -> identical complete_flows() on every paper
+        Table V configuration (the PR's behavior-preservation contract)."""
+        for seed in range(3):
+            net_o, cost_o = build_setting(setting, seed)
+            net_r, cost_r = build_setting(setting, seed)
+            opt = GWTFProtocol(net_o, cost_matrix=cost_o,
+                               rng=np.random.default_rng(seed + 3))
+            ref = ReferenceGWTFProtocol(net_r, cost_matrix=cost_r,
+                                        rng=np.random.default_rng(seed + 3))
+            opt.run(max_rounds=120)
+            ref.run(max_rounds=120)
+            assert_equivalent(opt, ref, f"setting {setting['name']} seed {seed}")
+            assert len(opt.complete_flows()) > 0
+
+    def test_equivalent_under_churn(self):
+        """Crash + reclaim + repair + rejoin keeps the engines in
+        lock-step (the index maintenance covers every mutation path)."""
+        s = TABLE_V[4]
+        for seed in range(2):
+            net_o, cost_o = build_setting(s, seed)
+            net_r, cost_r = build_setting(s, seed)
+            opt = GWTFProtocol(net_o, cost_matrix=cost_o,
+                               rng=np.random.default_rng(seed))
+            ref = ReferenceGWTFProtocol(net_r, cost_matrix=cost_r,
+                                        rng=np.random.default_rng(seed))
+            opt.run(80)
+            ref.run(80)
+            flows = opt.complete_flows()
+            victims = {c[2] for c in flows[:3]} | {c[4] for c in flows[:3]}
+            for v in victims:
+                net_o.kill_node(v)
+                net_r.kill_node(v)
+                opt.remove_node(v)
+                ref.remove_node(v)
+            opt.reclaim_sink_slots()
+            ref.reclaim_sink_slots()
+            opt.run(40, quiet_rounds=5)
+            ref.run(40, quiet_rounds=5)
+            assert_equivalent(opt, ref, f"seed {seed} post-crash")
+            for v in sorted(victims):
+                net_o.nodes[v].alive = True
+                net_r.nodes[v].alive = True
+                opt.add_node(net_o.nodes[v])
+                ref.add_node(net_r.nodes[v])
+            opt.reclaim_sink_slots()
+            ref.reclaim_sink_slots()
+            opt.run(40, quiet_rounds=5)
+            ref.run(40, quiet_rounds=5)
+            assert_equivalent(opt, ref, f"seed {seed} post-rejoin")
+
+    def test_equivalent_on_eq1_costs_and_partial_views(self):
+        """cost_matrix=None (cached Eq. 1 oracle) + peer_view subsets."""
+        for seed in range(2):
+            rng = np.random.default_rng(seed)
+            caps = [int(rng.uniform(1, 4)) for _ in range(16)]
+            net_o = geo_distributed_network(
+                num_stages=4, relay_capacities=caps,
+                rng=np.random.default_rng(seed))
+            net_r = geo_distributed_network(
+                num_stages=4, relay_capacities=caps,
+                rng=np.random.default_rng(seed))
+            opt = GWTFProtocol(net_o, peer_view=3,
+                               rng=np.random.default_rng(seed + 9))
+            ref = ReferenceGWTFProtocol(net_r, peer_view=3,
+                                        rng=np.random.default_rng(seed + 9))
+            opt.run(60)
+            ref.run(60)
+            assert_equivalent(opt, ref, f"geo seed {seed}")
+
+    def test_advertisement_index_matches_scan(self):
+        """_advertised() via the index == the reference's segment scan,
+        for every (peer, data node) pair after convergence."""
+        s = TABLE_V[5]
+        net_o, cost_o = build_setting(s, 1)
+        net_r, cost_r = build_setting(s, 1)
+        opt = GWTFProtocol(net_o, cost_matrix=cost_o,
+                           rng=np.random.default_rng(2))
+        ref = ReferenceGWTFProtocol(net_r, cost_matrix=cost_r,
+                                    rng=np.random.default_rng(2))
+        opt.run(40, quiet_rounds=3)
+        ref.run(40, quiet_rounds=3)
+        for j in opt.protos:
+            for dn in opt._data_ids:
+                assert opt._advertised(j, dn) == ref._advertised(j, dn)
+
+
+class TestRefinementRegression:
+    def test_refinement_improves_post_convergence_cost(self):
+        """Regression for the step_round indentation bug: with Request
+        Change / Redirect running per relay (not per data node with a
+        stale loop index), the converged cost must improve vs. a run
+        with refinement disabled."""
+        wins, total = 0, 0
+        for seed in range(5):
+            s = dict(sources=1, relays=48, stages=6, cap=(1, 3), cost=(1, 50))
+            net_a, cost_a = build_setting(s, seed)
+            net_b, cost_b = build_setting(s, seed)
+            refined = GWTFProtocol(net_a, cost_matrix=cost_a, objective="sum",
+                                   rng=np.random.default_rng(seed + 1))
+            plain = GWTFProtocol(net_b, cost_matrix=cost_b, objective="sum",
+                                 refine=False,
+                                 rng=np.random.default_rng(seed + 1))
+            refined.run(150)
+            plain.run(150)
+            if not (refined.complete_flows() and plain.complete_flows()):
+                continue
+            a = refined.total_cost() / len(refined.complete_flows())
+            b = plain.total_cost() / len(plain.complete_flows())
+            total += 1
+            if a < b:
+                wins += 1
+        assert total >= 3, "not enough comparable runs"
+        assert wins > total / 2, \
+            f"refinement won only {wins}/{total} runs — annealed " \
+            f"refinement is not engaging"
+
+
+class TestAmortizedGrowth:
+    def test_add_node_grows_geometrically(self):
+        """Joins must not reallocate the matrices every time: growth
+        count is O(log joins), and between growths the exposed matrices
+        are views into one buffer."""
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[1, 1, 1, 1],
+            rng=np.random.default_rng(0))
+        n0 = len(net.nodes)
+        joins = 100
+        for k in range(joins):
+            nid = n0 + k
+            net.add_node(Node(nid, k % 2, 1, 1.0))
+        assert net.matrix_grow_count <= int(np.ceil(np.log2(joins))) + 1
+        assert net.latency.shape == (n0 + joins, n0 + joins)
+        assert net.latency.base is net._lat_buf
+        # another join inside remaining capacity must not reallocate
+        before = net.matrix_grow_count
+        buf = net._lat_buf
+        net.add_node(Node(n0 + joins, 0, 1, 1.0))
+        assert net.matrix_grow_count == before
+        assert net._lat_buf is buf
+
+    def test_add_node_preserves_rows_and_defaults(self):
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[1, 1],
+            rng=np.random.default_rng(0))
+        old_lat = net.latency.copy()
+        n = len(net.nodes)
+        row = np.full(n, 0.123)
+        col = np.full(n, 0.456)
+        net.add_node(Node(n, 0, 1, 1.0), latency_row=row, latency_col=col)
+        np.testing.assert_array_equal(net.latency[:n, :n], old_lat)
+        np.testing.assert_array_equal(net.latency[n, :n], row)
+        np.testing.assert_array_equal(net.latency[:n, n], col)
+        # unspecified bandwidth row/col fall back to the join default
+        from repro.core.flow.graph import DEFAULT_JOIN_BANDWIDTH
+        assert float(net.bandwidth[n, 0]) == DEFAULT_JOIN_BANDWIDTH
+
+
+class TestCostMatrixCache:
+    def test_cache_hit_and_exactness(self):
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[1, 1, 1, 1],
+            rng=np.random.default_rng(1))
+        cm = net.cost_matrix()
+        assert net.cost_matrix() is cm          # cached object
+        # cached entries are bit-identical to the scalar Eq. 1 evaluation
+        for i in net.nodes:
+            for j in net.nodes:
+                ni, nj = net.nodes[i], net.nodes[j]
+                comp = 0.5 * (ni.compute_cost + nj.compute_cost)
+                lat = 0.5 * (net.latency[i, j] + net.latency[j, i])
+                bw = net.bandwidth[i, j] + net.bandwidth[j, i]
+                direct = comp + lat + 2.0 * net.activation_size / bw
+                assert float(cm[i, j]) == float(direct)
+                assert net.edge_cost(i, j) == float(direct)
+
+    def test_cache_invalidated_on_join(self):
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[1, 1, 1, 1],
+            rng=np.random.default_rng(1))
+        cm = net.cost_matrix()
+        n = len(net.nodes)
+        net.add_node(Node(n, 0, 1, 2.5))
+        cm2 = net.cost_matrix()
+        assert cm2 is not cm
+        assert cm2.shape == (n + 1, n + 1)
+        assert net.edge_cost(n, 0) == float(cm2[n, 0])
+
+    def test_cache_invalidated_on_matrix_rebind(self):
+        """bench_node_addition rebinds net.latency wholesale; the cache
+        must notice."""
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[1, 1],
+            rng=np.random.default_rng(1))
+        before = net.edge_cost(0, 1)
+        net.latency = net.latency + 1.0
+        after = net.edge_cost(0, 1)
+        assert after == pytest.approx(before + 1.0)
+
+    def test_rebound_matrix_survives_subsequent_join(self):
+        """Regression: a wholesale latency rebind must not be shadowed by
+        the stale growth buffer on the next add_node."""
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[1, 1],
+            rng=np.random.default_rng(1))
+        n = len(net.nodes)
+        net.add_node(Node(n, 0, 1, 1.0))      # buffers adopted, spare cap
+        net.latency = net.latency + 1.0       # external rebind
+        bumped = net.edge_cost(0, 1)
+        net.add_node(Node(n + 1, 1, 1, 1.0))  # join after the rebind
+        assert net.edge_cost(0, 1) == bumped
+        # and yet another join still sees the rebound values
+        net.add_node(Node(n + 2, 0, 1, 1.0))
+        assert net.edge_cost(0, 1) == bumped
+
+    def test_death_keeps_costs_valid(self):
+        """kill_node changes membership, not link costs: the cache stays
+        valid and queries against the dead node still resolve."""
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[1, 1, 1, 1],
+            rng=np.random.default_rng(1))
+        cm = net.cost_matrix()
+        c01 = net.edge_cost(0, 1)
+        net.kill_node(3)
+        assert not net.nodes[3].alive
+        assert net.cost_matrix() is cm
+        assert net.edge_cost(0, 1) == c01
+        assert all(n.id != 3 for n in net.stage_nodes(net.nodes[3].stage))

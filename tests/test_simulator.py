@@ -147,7 +147,7 @@ class TestMembershipAndJoin:
         assert all(0 <= a < 4 for a in assign)
 
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 
 @settings(max_examples=10, deadline=None)
