@@ -1,0 +1,203 @@
+"""Simulator event-core benchmark: layered engine vs pre-refactor loop.
+
+For growing relay counts (headline: 1000 relays / 10 stages) this runs
+the *same* seeded churn iterations through both simulator
+implementations and measures:
+
+* **events/sec** — canonical calendar events per second of event-loop
+  wall time.  The canonical event count is the pre-refactor loop's
+  (one ARRIVE + one CHECK per send, one DONE per compute): both
+  engines simulate exactly that event sequence, but the layered core
+  materializes timeout (CHECK) records lazily — only when a
+  microbatch actually stalls — so its own pop count is lower for the
+  identical simulation.  Normalizing both engines by the canonical
+  count makes events/sec a pure wall-time comparison of the same work;
+  each engine's raw pop count is also recorded (``pops``).
+* **loop-time speedup** — reference loop seconds / engine loop
+  seconds over the identical iterations;
+* **behavior equivalence** — on the GWTF scheduler the two
+  implementations must produce bit-identical metrics (same RNG
+  stream, same float arithmetic); SWARM is expected to differ
+  slightly because the layered engine fixes the backward-restart slot
+  leak, so only GWTF equivalence gates.
+
+Results go to ``BENCH_sim.json`` at the repo root.  ``--smoke`` runs
+the small size only and compares against the committed JSON: it exits
+non-zero if the engine's events/sec regressed by more than 2x
+(host-normalized by the reference loop's events/sec measured in the
+same run) or if GWTF equivalence broke.  Numpy-only on purpose — the
+CI smoke job stays light.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.flow.graph import geo_distributed_network
+from repro.core.sim import TrainingSimulator
+from repro.core.sim.reference import ReferenceTrainingSimulator
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_OUT = REPO_ROOT / "BENCH_sim.json"
+
+STAGES = 10
+DATA_NODES = 2
+DATA_CAPACITY = 100
+CHURN = 0.05
+ITERATIONS = 5
+SEED = 0
+FULL_SIZES = (200, 1000)
+SMOKE_SIZES = (200,)
+
+
+def build_network(relays: int, seed: int = SEED):
+    """Geo-distributed topology scaled up from the paper's Sec. VI grid:
+    heterogeneous caps U{1..3}, 10 locations, 50-500 Mb/s links."""
+    rng = np.random.default_rng(seed)
+    caps = [int(rng.uniform(1, 4)) for _ in range(relays)]
+    return geo_distributed_network(
+        num_stages=STAGES, relay_capacities=caps,
+        num_data_nodes=DATA_NODES, data_capacity=DATA_CAPACITY,
+        compute_cost=0.5, rng=np.random.default_rng(seed))
+
+
+def _run(cls, relays: int, scheduler: str, seed: int):
+    net = build_network(relays, seed)
+    sim = cls(net, scheduler=scheduler, churn=CHURN,
+              rng=np.random.default_rng(seed + 11))
+    t0 = time.perf_counter()
+    ms = sim.run(ITERATIONS)
+    total_s = time.perf_counter() - t0
+    return dict(
+        pops=sum(m.events for m in ms),
+        loop_s=sum(m.loop_seconds for m in ms),
+        total_s=total_s,
+        launched=sum(m.launched for m in ms),
+        completed=sum(m.completed for m in ms),
+        comm_time=sum(m.comm_time for m in ms),
+        wasted_gpu=sum(m.wasted_gpu for m in ms),
+        duration=sum(m.duration for m in ms),
+    )
+
+
+def bench_size(relays: int, seed: int = SEED) -> dict:
+    rec = dict(relays=relays, stages=STAGES, churn=CHURN,
+               iterations=ITERATIONS, schedulers={})
+    for scheduler in ("gwtf", "swarm"):
+        eng = _run(TrainingSimulator, relays, scheduler, seed)
+        ref = _run(ReferenceTrainingSimulator, relays, scheduler, seed)
+        canonical = ref["pops"]
+        cell = dict(
+            canonical_events=canonical,
+            engine_pops=eng["pops"],
+            engine_loop_s=round(eng["loop_s"], 4),
+            ref_loop_s=round(ref["loop_s"], 4),
+            engine_events_per_sec=round(canonical / eng["loop_s"], 1),
+            ref_events_per_sec=round(canonical / ref["loop_s"], 1),
+            loop_speedup=round(ref["loop_s"] / eng["loop_s"], 2),
+            completed=(eng["completed"], ref["completed"]),
+        )
+        if scheduler == "gwtf":
+            cell["metrics_identical"] = (
+                eng["completed"] == ref["completed"]
+                and eng["comm_time"] == ref["comm_time"]
+                and eng["wasted_gpu"] == ref["wasted_gpu"]
+                and eng["duration"] == ref["duration"])
+        rec["schedulers"][scheduler] = cell
+    return rec
+
+
+def print_rec(rec: dict):
+    for scheduler, c in rec["schedulers"].items():
+        eq = c.get("metrics_identical")
+        print(f"  relays={rec['relays']:5d} {scheduler:5s}: "
+              f"engine={c['engine_events_per_sec']:10,.0f} ev/s  "
+              f"ref={c['ref_events_per_sec']:10,.0f} ev/s  "
+              f"speedup={c['loop_speedup']:5.2f}x  "
+              f"{'identical' if eq else ('EQUIV-FAIL' if eq is False else '')}")
+
+
+def smoke(committed_path: Path) -> int:
+    """CI gate: fail (exit 1) if events/sec regressed > 2x vs committed
+    (host-normalized via the reference loop) or GWTF equivalence broke."""
+    if not committed_path.exists():
+        print(f"no committed {committed_path.name}; smoke run is "
+              f"informational only")
+        committed = {}
+    else:
+        data = json.loads(committed_path.read_text())
+        committed = {r["relays"]: r for r in data["results"]}
+    failures = []
+    print(f"== bench_sim --smoke (sizes {SMOKE_SIZES}) ==")
+    for relays in SMOKE_SIZES:
+        rec = bench_size(relays)
+        print_rec(rec)
+        for scheduler, cell in rec["schedulers"].items():
+            if cell.get("metrics_identical") is False:
+                failures.append(f"relays={relays} {scheduler}: engine "
+                                f"metrics diverged from reference loop")
+                continue
+            base = committed.get(relays, {}).get("schedulers", {}).get(scheduler)
+            if base is None:
+                continue
+            host = cell["ref_events_per_sec"] / base["ref_events_per_sec"]
+            floor = base["engine_events_per_sec"] * host / 2.0
+            print(f"    gate[{scheduler}]: measured "
+                  f"{cell['engine_events_per_sec']:,.0f} ev/s vs floor "
+                  f"{floor:,.0f} ev/s (committed "
+                  f"{base['engine_events_per_sec']:,.0f} x host "
+                  f"{host:.2f} / 2)")
+            if cell["engine_events_per_sec"] < floor:
+                failures.append(
+                    f"relays={relays} {scheduler}: events/sec regressed >2x "
+                    f"({cell['engine_events_per_sec']:,.0f} < "
+                    f"floor {floor:,.0f})")
+    if failures:
+        print("SMOKE FAILURES:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("smoke OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small size + regression gate vs committed JSON")
+    ap.add_argument("--sizes", type=int, nargs="*", default=None)
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        return smoke(args.out)
+
+    sizes = tuple(args.sizes) if args.sizes else FULL_SIZES
+    print(f"== bench_sim: {STAGES} stages, {DATA_NODES}x{DATA_CAPACITY} "
+          f"data capacity, churn {CHURN}, sizes {sizes} ==")
+    results = []
+    for relays in sizes:
+        rec = bench_size(relays)
+        print_rec(rec)
+        results.append(rec)
+    out = dict(
+        meta=dict(stages=STAGES, data_nodes=DATA_NODES,
+                  data_capacity=DATA_CAPACITY, churn=CHURN,
+                  iterations=ITERATIONS, seed=SEED,
+                  metric="canonical calendar events (pre-refactor loop's "
+                         "count) per second of event-loop wall time; "
+                         "reference = repro.core.sim.reference on "
+                         "identical seeded iterations"),
+        results=results)
+    args.out.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,6 +42,7 @@ class Node:
     compute_cost: float         # c_i: time to process one microbatch
     is_data: bool = False
     alive: bool = True
+    location: int = -1          # geographic location id (-1 = unknown)
 
     def __hash__(self):
         return self.id
@@ -111,6 +112,44 @@ class FlowNetwork:
         Cached; treat as read-only.  ``d(i, j)`` is ``cost_matrix()[i, j]``.
         """
         return self._cost_cache()["cost"]
+
+    def comm_matrix(self, size: Optional[float] = None) -> np.ndarray:
+        """Dense communication-only Eq. 1 matrix at ``size`` bytes.
+
+        ``comm_matrix(size)[i, j] == comm_cost(i, j, size)`` exactly (the
+        elementwise NumPy expression mirrors the scalar one).  Cached per
+        (cost epoch, size); treat as read-only.  This is the batched
+        lookup the simulator's event core resolves its per-leg transfer
+        delays against instead of calling ``comm_cost`` per event.
+        """
+        cc = self._cost_cache()
+        if size is None:
+            size = self.activation_size
+        key = (cc["version"], float(size))
+        cached = getattr(self, "_comm_m", None)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        mat = cc["lat_avg"] + 2.0 * float(size) / cc["bw_sum"]
+        self._comm_m = (key, mat)
+        return mat
+
+    def edge_matrix(self, size: Optional[float] = None) -> np.ndarray:
+        """Dense full Eq. 1 matrix (compute + comm) at ``size`` bytes.
+
+        ``edge_matrix(size)[i, j] == edge_cost(i, j, size)`` exactly
+        (same elementwise association as the scalar path).  Cached per
+        (cost epoch, size); treat as read-only.
+        """
+        cc = self._cost_cache()
+        if size is None:
+            return cc["cost"]
+        key = (cc["version"], float(size))
+        cached = getattr(self, "_edge_m", None)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        mat = cc["comp_pair"] + cc["lat_avg"] + 2.0 * float(size) / cc["bw_sum"]
+        self._edge_m = (key, mat)
+        return mat
 
     def edge_cost(self, i: int, j: int, size: Optional[float] = None) -> float:
         """Eq. 1 cost of moving one microbatch between nodes i and j."""
@@ -265,6 +304,8 @@ def geo_distributed_network(
 
     N = nid
     loc = rng.integers(0, num_locations, size=N)
+    for i in range(N):
+        nodes[i].location = int(loc[i])   # drives correlated regional churn
     same = loc[:, None] == loc[None, :]
     lat = np.where(same,
                    rng.uniform(0.001, 0.005, size=(N, N)),

@@ -1,0 +1,37 @@
+"""Layered discrete-event simulation engine (paper Sec. VI).
+
+Layers, each its own module:
+
+* `engine` — the fast event core (`SimulationEngine`): typed event
+  records on an array-backed calendar, batched cost lookups resolved
+  against `FlowNetwork`'s cached Eq. 1 matrices, per-iteration event
+  accounting;
+* `policies` — the scheduler layer (`RoutingPolicy`): plan paths,
+  reroute on forward faults, recover backward faults; GWTF, SWARM and
+  fixed-schedule implementations;
+* `faults` — the fault layer (`ChurnModel`): Bernoulli coin-flips,
+  trace replay, correlated regional outages, and compositions;
+* `metrics` — Table II/III columns plus queue-depth / reroute /
+  event-accounting series (`IterationMetrics`, `summarize`);
+* `facade` — the drop-in `TrainingSimulator` wrapper the rest of the
+  repo imports (also re-exported by `repro.core.simulator`);
+* `reference` — the pre-refactor monolithic loop, frozen for
+  `benchmarks/bench_sim.py` events/sec comparisons.
+"""
+from repro.core.sim.engine import SimulationEngine
+from repro.core.sim.facade import TrainingSimulator
+from repro.core.sim.faults import (BernoulliChurn, ChurnContext, ChurnModel,
+                                   ComposedChurn, RegionalOutageChurn,
+                                   TraceChurn)
+from repro.core.sim.metrics import IterationMetrics, ModelProfile, summarize
+from repro.core.sim.policies import (FixedPolicy, GWTFPolicy, RoutingPolicy,
+                                     SwarmPolicy, make_policy)
+
+__all__ = [
+    "SimulationEngine", "TrainingSimulator",
+    "BernoulliChurn", "ChurnContext", "ChurnModel", "ComposedChurn",
+    "RegionalOutageChurn", "TraceChurn",
+    "IterationMetrics", "ModelProfile", "summarize",
+    "FixedPolicy", "GWTFPolicy", "RoutingPolicy", "SwarmPolicy",
+    "make_policy",
+]

@@ -1,0 +1,485 @@
+"""Event core of the layered simulation engine (paper Sec. VI).
+
+`SimulationEngine` runs the discrete-event clock that times one
+training iteration: per-node compute slots (capacity) with FIFO
+queueing, per-link transfer delays, mid-iteration crashes, and
+timeout-based fault discovery.  Routing and recovery decisions are
+delegated to a `RoutingPolicy` (scheduler layer) and crash/rejoin
+sampling to a `ChurnModel` (fault layer), so the core contains no
+scheduler- or fault-specific branches.
+
+Design of the fast core
+-----------------------
+* **Typed event records.**  Events are flat 7-tuples
+  ``(time, seq, kind, mb, node, leg, frm)`` with integer kinds
+  (ARRIVE/DONE/CHECK) — no nested payload tuples, no string dispatch.
+  ``seq`` is a global monotonic counter so simultaneous events pop in
+  push order (deterministic FIFO tie-break).
+* **Array-backed calendar.**  The calendar is a binary heap over a
+  contiguous list driven by the C ``heapq`` primitives.  (A bucketed
+  calendar queue was measured slower here: its per-event bucket scan
+  runs in bytecode, while ``heappush``/``heappop`` run in C; the
+  array-of-records layout is what makes either fast.)
+* **Lazy timeout records.**  The pre-refactor loop pushed one CHECK
+  event per send; in a healthy iteration every one of them pops stale.
+  A timeout can only ever *fire* if the microbatch actually stalled,
+  and the loop observes every stall directly: an arrival dropped at a
+  dead receiver, a compute lost to a mid-compute crash, or a
+  capacity-wait enqueue.  The core therefore materializes the CHECK
+  record (with the deadline computed at send time, so fire times are
+  bit-identical) only at those three points.  This removes a third of
+  all calendar traffic and keeps the calendar an order of magnitude
+  smaller — long-deadline timeout records no longer dominate its
+  residency.  Caveat: on calendars with *exactly* tying float
+  timestamps (e.g. all-integer link costs) a fired timeout may
+  tie-break differently against a simultaneous arrival than the
+  reference loop; on the continuous geo topologies used by the tests
+  and benchmarks, seeded runs are metric- and RNG-identical.
+* **Batched cost lookups.**  All per-event cost queries are resolved
+  against per-iteration tables derived from ``FlowNetwork``'s cached
+  Eq. 1 matrices: the dense communication and edge-cost matrices
+  (``FlowNetwork.comm_matrix`` / ``edge_matrix`` at the profile's
+  activation size, lowered to nested Python lists so the hot loop and
+  the fault path do plain float indexing) and per-node
+  forward/backward compute-time vectors.  The pre-refactor loop
+  resolved every one of these through two or three method calls per
+  event.
+* **Per-iteration event accounting.**  The loop counts calendar pops,
+  capacity-wait enqueues, peak queue depth, reroutes, and its own wall
+  time into `IterationMetrics` (``events``, ``events_per_sec``), which
+  is what ``benchmarks/bench_sim.py`` measures against the
+  pre-refactor loop kept in `repro.core.sim.reference`.
+
+Semantics are identical to the pre-refactor ``TrainingSimulator``
+(same RNG stream, same float arithmetic, same tie-breaking) with two
+deliberate, documented exceptions:
+
+* the SWARM backward-restart slot leak is fixed — restarting
+  microbatches release their slots through ``release_slot`` so queued
+  microbatches behind them wake immediately instead of stalling until
+  their sender's timeout;
+* ``max_events`` exhaustion is surfaced (``IterationMetrics.truncated``
+  + a ``RuntimeWarning``) instead of silently reporting a short, clean
+  iteration.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+import warnings
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.flow.graph import FlowNetwork
+from repro.core.sim.faults import BernoulliChurn, ChurnContext, ChurnModel
+from repro.core.sim.metrics import IterationMetrics, ModelProfile
+from repro.core.sim.policies import FaultView, RoutingPolicy
+
+# Typed event kinds (ints: cheap compares, no string dispatch)
+ARRIVE, DONE, CHECK = 0, 1, 2
+
+
+@dataclass(slots=True)
+class _MB:
+    """One microbatch's lifecycle."""
+    id: int
+    data_node: int
+    path: List[int]                   # planned chain (GWTF) / realised (SWARM)
+    pos: int = 0                      # index into path
+    direction: str = "fwd"
+    compute_history: List[Tuple[int, float]] = field(default_factory=list)
+    slots: set = field(default_factory=set)   # nodes holding memory for us
+    leg: int = 0                  # increments on every send; stale events ignored
+    retries: int = 0
+    done: bool = False
+    failed: bool = False
+    # current leg's timeout deadline + sender, stamped by send() so a
+    # lazily-materialized CHECK record is bit-identical to an eager one
+    deadline: float = 0.0
+    sent_from: int = -1
+    # node whose capacity-wait queue currently holds us (-1 = none);
+    # lets the queue-depth gauge drop entries that leave the waiting
+    # state sideways (rerouted away, failed, stranded at a crashed
+    # node) instead of only when their queue entry is popped
+    wait_node: int = -1
+
+
+class SimulationEngine:
+    """The event core: policy + churn model + profile -> timed iterations.
+
+    Memory semantics: a relay node's capacity counts *in-flight*
+    microbatches — the slot is held from forward arrival until the
+    backward pass completes at that node (activations must be kept for
+    the backward).  This is exactly why heterogeneous capacities
+    matter: SWARM routes capacity-blind and serialises on cap-1 nodes;
+    GWTF's flows respect capacity by construction.
+    """
+
+    def __init__(self, net: FlowNetwork, policy: RoutingPolicy, *,
+                 churn_model: Optional[ChurnModel] = None,
+                 profile: Optional[ModelProfile] = None,
+                 timeout: float = 30.0, max_retries: int = 2,
+                 rng: Optional[np.random.Generator] = None,
+                 max_events: int = 500_000):
+        self.net = net
+        self.policy = policy
+        self.churn_model = churn_model or BernoulliChurn(0.0)
+        self.profile = profile or ModelProfile(fwd_compute=2.0)
+        self.timeout = timeout
+        self.max_retries = max_retries
+        self.rng = rng or np.random.default_rng(0)
+        self.max_events = max_events
+        self._mb_ids = itertools.count()
+        self._iteration = 0
+        self._tables_key = None          # (cost_version, size, N)
+        self._comm_rows: List[List[float]] = []
+        self._edge_rows: List[List[float]] = []
+
+    # ------------------------------------------------------------------
+    # Batched per-iteration cost tables
+    # ------------------------------------------------------------------
+    def _cost_tables(self, n_nodes: int) -> Tuple[List[List[float]],
+                                                  List[List[float]]]:
+        """Dense comm-only and full-edge Eq. 1 matrices at the profile's
+        activation size, lowered to nested lists (plain-float reads in
+        the hot loop and the fault path).  Rebuilt only when the
+        network's cost epoch moves."""
+        key = (self.net.cost_version, self.profile.activation_bytes, n_nodes)
+        if key != self._tables_key:
+            size = self.profile.activation_bytes
+            self._comm_rows = self.net.comm_matrix(size)[
+                :n_nodes, :n_nodes].tolist()
+            self._edge_rows = self.net.edge_matrix(size)[
+                :n_nodes, :n_nodes].tolist()
+            self._tables_key = key
+        return self._comm_rows, self._edge_rows
+
+    def _estimate_iteration(self) -> float:
+        S = self.net.num_stages
+        costs = [n.compute_cost for n in self.net.alive_nodes() if not n.is_data]
+        mean_c = float(np.mean(costs)) if costs else 1.0
+        per_hop = mean_c * (1 + self.profile.bwd_mult)
+        return max(60.0, S * (per_hop + 10.0))
+
+    # ------------------------------------------------------------------
+    # One training iteration
+    # ------------------------------------------------------------------
+    def run_iteration(self) -> IterationMetrics:
+        net = self.net
+        m = IterationMetrics()
+
+        # ---- fault layer: sample crashes/rejoins ----------------------
+        crash_times = self.churn_model.sample(ChurnContext(
+            net=net, rng=self.rng, horizon=self._estimate_iteration(),
+            iteration=self._iteration, on_rejoin=self.policy.on_rejoin))
+        self._iteration += 1
+
+        # ---- scheduler layer: build this iteration's paths ------------
+        mbs = [_MB(next(self._mb_ids), path[0], list(path))
+               for path in self.policy.plan()]
+        m.launched = len(mbs)
+
+        # ---- batched cost tables (resolved against the Eq. 1 caches) --
+        N = (max(net.nodes) + 1) if net.nodes else 0
+        comm, edge = self._cost_tables(N)
+        fwd_t = [0.05] * N
+        caps = [0] * N
+        alive = [False] * N
+        for nid, node in net.nodes.items():
+            fwd_t[nid] = max(0.05, node.compute_cost)
+            caps[nid] = node.capacity
+            alive[nid] = node.alive
+        bwd_mult = self.profile.bwd_mult
+        bwd_t = [c * bwd_mult for c in fwd_t]
+        INF = float("inf")
+        crash = [INF] * N
+        for nid, ct in crash_times.items():
+            crash[nid] = ct
+
+        # ---- per-iteration node state ---------------------------------
+        busy = [0] * N
+        queues = [deque() for _ in range(N)]   # capacity-wait FIFOs
+
+        view = FaultView()
+        view.net = net
+        view.activation_bytes = self.profile.activation_bytes
+        view.alive, view.crash = alive, crash
+        view.busy, view.queues = busy, queues
+        view.fwd_t, view.bwd_t = fwd_t, bwd_t
+        view.comm_rows, view.edge_rows = comm, edge
+        _stage_cache: Dict[int, list] = {}
+
+        def stage_nodes(s: int) -> list:
+            nodes = _stage_cache.get(s)
+            if nodes is None:
+                nodes = net.stage_nodes(s)     # membership frozen mid-loop
+                _stage_cache[s] = nodes
+            return nodes
+
+        view.stage_nodes = stage_nodes
+
+        # ---- event calendar -------------------------------------------
+        calendar: List[tuple] = []
+        heappush, heappop = heapq.heappush, heapq.heappop
+        seq = itertools.count()
+        timeout = self.timeout
+        comm_total = 0.0
+        qdepth = 0
+
+        def send(mb: _MB, frm: int, to: int, t: float):
+            nonlocal comm_total
+            mb.leg += 1
+            c = comm[frm][to]
+            comm_total += c
+            heappush(calendar, (t + c, next(seq), ARRIVE, mb, to, mb.leg, frm))
+            # sender expects a COMPLETE within comm+compute+timeout; a slow
+            # (overloaded) peer is indistinguishable from a dead one.  The
+            # CHECK record itself is materialized lazily, at the stall.
+            expect = c + (bwd_t[to] if mb.direction == "bwd"
+                          else fwd_t[to]) + timeout
+            mb.deadline = t + expect
+            mb.sent_from = frm
+
+        def release_slot(mb: _MB, nid: int, t: float):
+            nonlocal qdepth
+            if nid not in mb.slots:
+                return
+            mb.slots.discard(nid)
+            busy[nid] -= 1
+            q = queues[nid]
+            while q and alive[nid] and t < crash[nid]:
+                qmb, qleg = q.popleft()
+                if qmb.done or qmb.failed or qleg != qmb.leg:
+                    continue                       # stale queue entry
+                qdepth -= 1
+                qmb.wait_node = -1
+                busy[nid] += 1
+                qmb.slots.add(nid)
+                heappush(calendar,
+                         (t + (bwd_t[nid] if qmb.direction == "bwd"
+                               else fwd_t[nid]),
+                          next(seq), DONE, qmb, nid, qleg, -1))
+                break
+
+        def fail(mb: _MB, t: float):
+            mb.failed = True
+            m.wasted_gpu += sum(c for _, c in mb.compute_history)
+            for nid in list(mb.slots):
+                release_slot(mb, nid, t)
+
+        def recover(mb: _MB, frm: int, dead: int, t: float):
+            """Sender `frm` noticed `dead` is unresponsive."""
+            nonlocal qdepth
+            if mb.wait_node >= 0:
+                # leaving the waiting state sideways: the queue entry
+                # goes stale (popped-and-skipped later, or stranded at a
+                # crashed node) — drop it from the depth gauge now
+                qdepth -= 1
+                mb.wait_node = -1
+            if mb.retries >= self.max_retries:
+                fail(mb, t)
+                return
+            mb.retries += 1
+            decision = self.policy.recover(view, mb, frm, dead, t)
+            kind = decision[0]
+            if kind == "substitute":
+                sub, delay = decision[1], decision[2]
+                m.reroutes += 1
+                mb.path[mb.pos] = sub
+                send(mb, frm, sub, t + delay)
+            elif kind == "restart":
+                # full pipeline recomputation from the data node: all
+                # forward work so far is wasted and every held slot is
+                # released (through release_slot, so microbatches queued
+                # behind this one wake up instead of waiting out their
+                # sender's timeout — the pre-refactor loop leaked these
+                # slots by decrementing busy directly).
+                m.wasted_gpu += sum(c for _, c in mb.compute_history)
+                mb.compute_history.clear()
+                for nid2 in list(mb.slots):
+                    release_slot(mb, nid2, t)
+                path = decision[1]
+                if path is None:
+                    fail(mb, t)
+                    return
+                m.reroutes += 1
+                mb.path = list(path)
+                mb.direction = "fwd"
+                mb.pos = 1
+                send(mb, mb.data_node, mb.path[1], t)
+            else:
+                fail(mb, t)
+
+        # ---- event loop -----------------------------------------------
+        loop_t0 = time.perf_counter()
+        for mb in mbs:
+            mb.pos = 1
+            send(mb, mb.data_node, mb.path[1], 0.0)
+
+        end_time = 0.0
+        completed = 0
+        pops = 0
+        max_events = self.max_events
+        qdepth_peak = 0
+        enqueues = 0
+        while calendar and pops < max_events:
+            pops += 1
+            t, _, kind, mb, nid, leg, frm = heappop(calendar)
+            if mb.done or mb.failed:
+                continue
+            if kind == ARRIVE:
+                if leg != mb.leg:
+                    continue                       # rerouted while in flight
+                if not (alive[nid] and t < crash[nid]):
+                    # dead receiver: the mb stalls until the sender's
+                    # timeout — materialize the CHECK record now
+                    heappush(calendar, (mb.deadline, next(seq), CHECK,
+                                        mb, nid, leg, frm))
+                    continue
+                if nid == mb.data_node:
+                    if mb.direction == "fwd":
+                        # loss computed at data node; turn around
+                        mb.direction = "bwd"
+                        mb.pos = len(mb.path) - 2
+                        send(mb, mb.data_node, mb.path[mb.pos], t)
+                    else:
+                        mb.done = True
+                        completed += 1
+                        if t > end_time:
+                            end_time = t
+                    continue
+                if mb.direction == "bwd":
+                    if nid not in mb.slots and busy[nid] < caps[nid]:
+                        busy[nid] += 1
+                        mb.slots.add(nid)
+                    heappush(calendar, (t + bwd_t[nid], next(seq),
+                                        DONE, mb, nid, leg, -1))
+                elif nid in mb.slots:
+                    heappush(calendar, (t + fwd_t[nid], next(seq),
+                                        DONE, mb, nid, leg, -1))
+                elif busy[nid] < caps[nid]:
+                    busy[nid] += 1
+                    mb.slots.add(nid)
+                    heappush(calendar, (t + fwd_t[nid], next(seq),
+                                        DONE, mb, nid, leg, -1))
+                else:
+                    # wait for a free slot; may outlive the sender's
+                    # patience — materialize the CHECK record
+                    queues[nid].append((mb, leg))
+                    mb.wait_node = nid
+                    heappush(calendar, (mb.deadline, next(seq), CHECK,
+                                        mb, nid, leg, frm))
+                    enqueues += 1
+                    qdepth += 1
+                    if qdepth > qdepth_peak:
+                        qdepth_peak = qdepth
+            elif kind == DONE:
+                if leg != mb.leg:
+                    # we were rerouted away while this node was computing:
+                    # its work is wasted, its slot freed.  The waste is
+                    # charged at the mb's *current* direction, which can
+                    # differ from the direction this node computed in if
+                    # the mb turned around before the stale DONE popped —
+                    # inherited verbatim from the pre-refactor loop; a fix
+                    # must change reference.py in lockstep or the CI
+                    # bit-equivalence gate breaks.
+                    m.wasted_gpu += (bwd_t[nid] if mb.direction == "bwd"
+                                     else fwd_t[nid])
+                    release_slot(mb, nid, t)
+                    continue
+                if not (alive[nid] and t < crash[nid]):
+                    # crashed mid-compute: work lost; the sender's
+                    # timeout recovers — materialize the CHECK record
+                    m.wasted_gpu += (bwd_t[nid] if mb.direction == "bwd"
+                                     else fwd_t[nid])
+                    heappush(calendar, (mb.deadline, next(seq), CHECK,
+                                        mb, nid, leg, mb.sent_from))
+                    continue
+                if mb.direction == "bwd":
+                    mb.compute_history.append((nid, bwd_t[nid]))
+                    release_slot(mb, nid, t)
+                    mb.pos -= 1
+                else:
+                    mb.compute_history.append((nid, fwd_t[nid]))
+                    mb.pos += 1
+                pos = mb.pos
+                nxt = (mb.data_node if (pos <= 0 or pos >= len(mb.path) - 1)
+                       else mb.path[pos])
+                send(mb, nid, nxt, t)
+                if t > end_time:
+                    end_time = t
+            else:                                  # CHECK
+                if leg != mb.leg:
+                    continue                       # progressed past this leg
+                # no COMPLETE for this leg: the receiver is dead OR too
+                # slow (queued behind an over-committed node) — the sender
+                # cannot tell the difference and reroutes either way.
+                if not (alive[nid] and t < crash[nid]):
+                    mb.slots.discard(nid)
+                recover(mb, frm, nid, t)
+                if t > end_time:
+                    end_time = t
+        m.loop_seconds = time.perf_counter() - loop_t0
+        m.events = pops
+        m.completed = completed
+        m.comm_time = comm_total
+        m.queue_depth_peak = qdepth_peak
+        m.queue_enqueues = enqueues
+
+        if calendar and pops >= max_events:
+            m.truncated = True
+            warnings.warn(
+                f"simulation iteration truncated: max_events={max_events} "
+                f"exhausted with {len(calendar)} events pending "
+                f"({completed}/{m.launched} microbatches complete); "
+                f"reported duration is a lower bound",
+                RuntimeWarning, stacklevel=2)
+
+        for mb in mbs:
+            if not mb.done and not mb.failed:
+                mb.failed = True
+                m.wasted_gpu += sum(c for _, c in mb.compute_history)
+
+        # ---- aggregation phase (Sec. V-E) ------------------------------
+        m.aggregation_time = self._aggregation_time(crash_times)
+        m.duration = end_time + m.aggregation_time
+
+        # ---- commit crashes for the next iteration ---------------------
+        for nid in crash_times:
+            net.kill_node(nid)
+            self.policy.on_crash(nid)
+        return m
+
+    # ------------------------------------------------------------------
+    def _aggregation_time(self, crash_times: Dict[int, float]) -> float:
+        """BEGIN-AGGREGATION wave + intra-stage weight exchange + CAN-TAKE.
+
+        The worst pairwise weight-exchange cost per stage is the max
+        over the off-diagonal of the stage's slice of the cached comm
+        matrix — elementwise identical to the pre-refactor O(n^2)
+        per-pair ``comm_cost`` loop, but one NumPy reduction per stage.
+        """
+        total_wave = 0.0
+        agg = 0.0
+        M = None
+        for s in range(self.net.num_stages):
+            ids = [n.id for n in self.net.stage_nodes(s)
+                   if crash_times.get(n.id) is None]
+            k = len(ids)
+            if k < 2:
+                continue
+            if M is None:
+                M = self.net.comm_matrix(self.profile.stage_param_bytes)
+            sub = M[np.ix_(ids, ids)]
+            worst = float(sub[~np.eye(k, dtype=bool)].max())
+            agg = max(agg, worst)
+            total_wave += 0.05          # BEGIN AGG / CAN TAKE hop latency
+        return agg + 2 * total_wave
+
+    # ------------------------------------------------------------------
+    def run(self, iterations: int) -> List[IterationMetrics]:
+        return [self.run_iteration() for _ in range(iterations)]

@@ -1,0 +1,188 @@
+"""Fault layer: composable churn models for the simulation engine.
+
+A `ChurnModel` decides, at each iteration boundary, which nodes crash
+mid-iteration (and when) and which previously-dead nodes rejoin.  The
+engine hands it a `ChurnContext` and receives `{node_id: crash_time}`;
+rejoins are applied through `ctx.on_rejoin` so the routing policy can
+re-admit the node (e.g. `GWTFProtocol.add_node`).
+
+Models:
+
+* `BernoulliChurn` — the paper's Sec. VI experiment: every alive relay
+  independently crashes with probability `p` at a uniform time inside
+  the iteration; every dead relay rejoins with probability `p`.  RNG
+  draw order is kept identical to the pre-refactor simulator so seeded
+  runs reproduce.
+* `TraceChurn` — deterministic replay of a recorded (or hand-written)
+  churn trace: `(iteration, "crash"|"rejoin", node_id[, when])`
+  events, `when` given as a fraction of the estimated iteration span.
+* `RegionalOutageChurn` — correlated failures keyed on the paper's 10
+  geographic locations (`Node.location`): with probability
+  `outage_prob` one region suffers an outage and all (or a `severity`
+  fraction of) its alive relays crash at the *same* moment; dead
+  relays independently rejoin with `rejoin_prob`.
+* `ComposedChurn` — applies several models in sequence (union of
+  crashes, earliest crash time wins), e.g. background Bernoulli churn
+  plus rare regional outages.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Protocol, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.flow.graph import FlowNetwork, Node
+
+
+@dataclass
+class ChurnContext:
+    """What a churn model may observe when sampling one iteration."""
+    net: FlowNetwork
+    rng: np.random.Generator
+    horizon: float                      # estimated iteration span (seconds)
+    iteration: int                      # 0-based iteration index
+    on_rejoin: Callable[[Node], None]   # notify the routing policy
+
+
+class ChurnModel(Protocol):
+    def sample(self, ctx: ChurnContext) -> Dict[int, float]:
+        """Apply rejoins (via ``ctx.on_rejoin``) and return this
+        iteration's mid-iteration crashes as {node_id: crash_time}."""
+        ...
+
+
+class BernoulliChurn:
+    """Independent per-relay crash/rejoin coin flips (paper Sec. VI).
+
+    Draw order matches the pre-refactor ``TrainingSimulator._apply_churn``
+    exactly (one uniform per relay, a second for the crash time), so a
+    seeded run through the facade reproduces the seed implementation's
+    RNG stream bit-for-bit.
+    """
+
+    def __init__(self, p: float):
+        self.p = p
+
+    def sample(self, ctx: ChurnContext) -> Dict[int, float]:
+        crash_times: Dict[int, float] = {}
+        rng, p = ctx.rng, self.p
+        for n in list(ctx.net.nodes.values()):
+            if n.is_data:
+                continue
+            if n.alive and rng.uniform() < p:
+                crash_times[n.id] = float(rng.uniform(0.0, ctx.horizon))
+            elif not n.alive and rng.uniform() < p:
+                n.alive = True                     # rejoin, usable this iter
+                ctx.on_rejoin(n)
+        return crash_times
+
+
+class TraceChurn:
+    """Deterministic replay of a churn trace.
+
+    ``events`` is an iterable of ``(iteration, kind, node_id)`` or
+    ``(iteration, kind, node_id, when)`` tuples with ``kind`` in
+    {"crash", "rejoin"}; ``when`` is the crash time as a fraction of
+    the engine's estimated iteration span (default 0.5).  Events for
+    dead nodes ("crash") or alive nodes ("rejoin") are skipped, so a
+    trace recorded on one topology replays safely on another.
+    """
+
+    def __init__(self, events: Iterable[Sequence]):
+        self._by_iter: Dict[int, List[Tuple[str, int, float]]] = {}
+        for ev in events:
+            it, kind, nid = int(ev[0]), str(ev[1]), int(ev[2])
+            when = float(ev[3]) if len(ev) > 3 else 0.5
+            if kind not in ("crash", "rejoin"):
+                raise ValueError(f"unknown trace event kind {kind!r}")
+            self._by_iter.setdefault(it, []).append((kind, nid, when))
+
+    @classmethod
+    def regional_blackout(cls, net: FlowNetwork, *, location: int,
+                          at_iteration: int, duration: int = 2,
+                          when: float = 0.25) -> "TraceChurn":
+        """Convenience trace: every relay in ``location`` crashes at
+        ``at_iteration`` and rejoins ``duration`` iterations later."""
+        nids = [n.id for n in net.nodes.values()
+                if not n.is_data and n.location == location]
+        events: List[Tuple[int, str, int, float]] = []
+        events += [(at_iteration, "crash", nid, when) for nid in nids]
+        events += [(at_iteration + duration, "rejoin", nid, 0.0)
+                   for nid in nids]
+        return cls(events)
+
+    def sample(self, ctx: ChurnContext) -> Dict[int, float]:
+        crash_times: Dict[int, float] = {}
+        for kind, nid, when in self._by_iter.get(ctx.iteration, ()):
+            n = ctx.net.nodes.get(nid)
+            if n is None or n.is_data:
+                continue
+            if kind == "crash" and n.alive:
+                crash_times[nid] = when * ctx.horizon
+            elif kind == "rejoin" and not n.alive:
+                n.alive = True
+                ctx.on_rejoin(n)
+        return crash_times
+
+
+class RegionalOutageChurn:
+    """Correlated regional failures (FusionLLM-style geo outages).
+
+    Each iteration, with probability ``outage_prob`` one geographic
+    location (uniform over the locations present among relays) goes
+    down: every alive relay there crashes at the *same* uniformly-drawn
+    moment (``severity`` < 1 spares each relay independently with
+    probability ``1 - severity``).  Dead relays rejoin independently
+    with ``rejoin_prob`` per iteration, modelling region recovery.
+
+    Requires ``Node.location`` >= 0 (set by ``geo_distributed_network``);
+    relays with unknown location are never hit by outages.
+    """
+
+    def __init__(self, outage_prob: float, *, severity: float = 1.0,
+                 rejoin_prob: float = 0.5):
+        self.outage_prob = outage_prob
+        self.severity = severity
+        self.rejoin_prob = rejoin_prob
+
+    def sample(self, ctx: ChurnContext) -> Dict[int, float]:
+        rng = ctx.rng
+        crash_times: Dict[int, float] = {}
+        relays = [n for n in ctx.net.nodes.values() if not n.is_data]
+        regions = sorted({n.location for n in relays if n.location >= 0})
+        if regions and rng.uniform() < self.outage_prob:
+            region = regions[int(rng.integers(0, len(regions)))]
+            outage_at = float(rng.uniform(0.0, ctx.horizon))
+            for n in relays:
+                if n.location != region or not n.alive:
+                    continue
+                if self.severity >= 1.0 or rng.uniform() < self.severity:
+                    crash_times[n.id] = outage_at
+        if self.rejoin_prob > 0.0:
+            for n in relays:
+                if not n.alive and rng.uniform() < self.rejoin_prob:
+                    n.alive = True
+                    ctx.on_rejoin(n)
+        return crash_times
+
+
+class ComposedChurn:
+    """Union of several churn models, applied in order.
+
+    Crash sets are merged with the earliest crash time winning; rejoins
+    take effect immediately, so a later model sees (and may re-crash)
+    nodes an earlier model just revived — matching how independent
+    fault processes would interleave in the wild.
+    """
+
+    def __init__(self, models: Sequence[ChurnModel]):
+        self.models = list(models)
+
+    def sample(self, ctx: ChurnContext) -> Dict[int, float]:
+        crash_times: Dict[int, float] = {}
+        for model in self.models:
+            for nid, t in model.sample(ctx).items():
+                if nid not in crash_times or t < crash_times[nid]:
+                    crash_times[nid] = t
+        return crash_times

@@ -1,0 +1,108 @@
+"""Metrics layer of the simulation engine (paper Tables II/III columns).
+
+Shared by the fast event core (`repro.core.sim.engine`) and the
+pre-refactor reference loop (`repro.core.sim.reference`) so benchmark
+comparisons read the same records.
+
+`IterationMetrics` carries the paper's per-iteration columns (duration,
+time per microbatch, throughput, communication time, wasted GPU time,
+aggregation time) plus the engine's observability fields: processed
+event count, event-loop wall time, reroute count, peak/total relay
+queue depth, and a `truncated` flag set when the event budget
+(`max_events`) was exhausted before the calendar drained — a truncated
+iteration reports a *lower bound* on duration, not a clean result.
+
+`summarize` folds a run's iteration list into table-style mean/std
+pairs — the Table II/III columns plus the queue-depth and
+reroute-count series (used by `examples/churn_recovery.py`; the crash
+benchmarks keep their own fold because their cells carry
+per-repetition stds in paper units).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class ModelProfile:
+    """Per-stage costs derived from a ModelConfig split into stages."""
+    fwd_compute: float            # seconds per microbatch per stage (forward)
+    bwd_mult: float = 2.0         # backward = bwd_mult * forward
+    activation_bytes: float = 4 * 512 * 1024 * 2 * 32
+    stage_param_bytes: float = 50e6 * 2
+
+    @classmethod
+    def from_config(cls, cfg, *, num_stages: int, microbatch: int = 4,
+                    seq_len: int = 512, comm_scale: float = 32.0,
+                    flops_per_sec: float = 2.0e13):
+        layers_per_stage = max(1, cfg.num_layers // num_stages)
+        # 6ND for train fwd+bwd; fwd alone is 2ND
+        params_per_layer = (cfg.param_count() - 2 * cfg.vocab_size * cfg.d_model
+                            ) / cfg.num_layers
+        tokens = microbatch * seq_len
+        fwd_flops = 2 * params_per_layer * layers_per_stage * tokens
+        act = microbatch * seq_len * cfg.d_model * 2 * comm_scale
+        return cls(fwd_compute=fwd_flops / flops_per_sec,
+                   activation_bytes=act,
+                   stage_param_bytes=params_per_layer * layers_per_stage * 2)
+
+
+@dataclass
+class IterationMetrics:
+    duration: float = 0.0
+    completed: int = 0
+    launched: int = 0
+    comm_time: float = 0.0
+    wasted_gpu: float = 0.0
+    aggregation_time: float = 0.0
+    # --- engine observability (new in the layered engine) -------------
+    events: int = 0               # calendar pops processed this iteration
+    loop_seconds: float = 0.0     # wall time spent inside the event loop
+    reroutes: int = 0             # successful fault reroutes/restarts
+    queue_depth_peak: int = 0     # max concurrent queued microbatches
+    queue_enqueues: int = 0       # total capacity-wait enqueues
+    truncated: bool = False       # max_events exhausted before drain
+
+    @property
+    def time_per_microbatch(self) -> float:
+        return self.duration / max(1, self.completed)
+
+    @property
+    def events_per_sec(self) -> float:
+        return self.events / self.loop_seconds if self.loop_seconds > 0 else 0.0
+
+
+#: (metric label, per-iteration extractor) pairs for `summarize`.
+_COLUMNS = (
+    ("time_per_mb", lambda m: m.time_per_microbatch),
+    ("throughput", lambda m: float(m.completed)),
+    ("comm_time", lambda m: m.comm_time),
+    ("wasted_gpu", lambda m: m.wasted_gpu),
+    ("aggregation_time", lambda m: m.aggregation_time),
+    ("reroutes", lambda m: float(m.reroutes)),
+    ("queue_depth_peak", lambda m: float(m.queue_depth_peak)),
+    ("queue_enqueues", lambda m: float(m.queue_enqueues)),
+)
+
+
+def summarize(metrics: List[IterationMetrics], *,
+              warmup: int = 0) -> Dict[str, Tuple[float, float]]:
+    """Fold per-iteration metrics into `{column: (mean, std)}` rows.
+
+    Covers the paper's Table II/III columns plus the engine's
+    queue-depth and reroute-count series.  `warmup` iterations are
+    dropped from the front (pipeline fill).  Also reports
+    `truncated_iterations` as (count, 0.0) so silent event-budget
+    exhaustion shows up in any table built from this summary.
+    """
+    ms = metrics[warmup:]
+    if not ms:
+        return {}
+    out = {name: (float(np.mean([fn(m) for m in ms])),
+                  float(np.std([fn(m) for m in ms])))
+           for name, fn in _COLUMNS}
+    out["truncated_iterations"] = (float(sum(m.truncated for m in ms)), 0.0)
+    return out

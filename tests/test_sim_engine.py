@@ -1,0 +1,310 @@
+"""Layered simulation engine: policies, churn models, event accounting.
+
+Complements tests/test_simulator.py (which pins the drop-in facade on
+the pre-refactor surface): deterministic wasted-GPU accounting on the
+`fixed` scheduler and the SWARM full-pipeline-recompute branch, the
+trace/regional churn models, max_events truncation surfacing, and
+engine-vs-reference equivalence.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.flow.graph import geo_distributed_network
+from repro.core.sim import (ComposedChurn, RegionalOutageChurn, TraceChurn,
+                            TrainingSimulator, summarize)
+from repro.core.sim.policies import make_policy
+from repro.core.sim.reference import ReferenceTrainingSimulator
+
+COMPUTE = 2.0   # deterministic per-relay forward seconds (jitter 0)
+
+
+def tiny_net(seed=0, *, stages=2, relays_per_stage=1, data_capacity=1):
+    """Fully deterministic compute costs; 1 data node."""
+    return geo_distributed_network(
+        num_stages=stages,
+        relay_capacities=[3] * (stages * relays_per_stage),
+        num_data_nodes=1, data_capacity=data_capacity,
+        compute_cost=COMPUTE, compute_jitter=0.0,
+        rng=np.random.default_rng(seed))
+
+
+def crash_window(net, path):
+    """(fwd done at path[1], bwd arrival at path[1]) for a 2-stage path
+    [data, a, b, data] with no contention — from Eq. 1 comm costs."""
+    dn, a, b = path[0], path[1], path[2]
+    c1, c2, c3 = (net.comm_cost(dn, a), net.comm_cost(a, b),
+                  net.comm_cost(b, dn))
+    fwd_done_a = c1 + COMPUTE
+    # a->b, b fwd, b->data (loss), data->b, b bwd, b->a
+    bwd_arrive_a = fwd_done_a + c2 + COMPUTE + 2 * c3 + 2 * COMPUTE + c2
+    return fwd_done_a, bwd_arrive_a
+
+
+class TestFixedScheduler:
+    def test_no_churn_completes_cleanly(self):
+        net = tiny_net(stages=2, relays_per_stage=2)
+        a = net.stage_nodes(0)[0].id
+        b = net.stage_nodes(1)[0].id
+        sim = TrainingSimulator(net, scheduler="fixed",
+                                fixed_paths=[[0, a, b, 0]],
+                                rng=np.random.default_rng(1))
+        for m in sim.run(3):
+            assert m.completed == m.launched == 1
+            assert m.wasted_gpu == 0.0
+            assert m.reroutes == 0
+
+    def test_crash_fails_microbatch_with_exact_waste(self):
+        """Preset schedules cannot reroute: a dead on-path node fails the
+        microbatch and wastes exactly the forward work completed so far
+        (here: one stage-0 forward pass = COMPUTE seconds)."""
+        net = tiny_net(stages=2, relays_per_stage=2)
+        a = net.stage_nodes(0)[0].id
+        b = net.stage_nodes(1)[0].id
+        # b dies at t=0.6s, long before the first ~seconds-long transfer
+        # arrives anywhere; a stays alive and completes its forward.
+        churn = TraceChurn([(1, "crash", b, 0.01)])
+        sim = TrainingSimulator(net, scheduler="fixed",
+                                fixed_paths=[[0, a, b, 0]],
+                                churn_model=churn,
+                                rng=np.random.default_rng(1))
+        m0, m1 = sim.run(2)
+        assert m0.completed == 1 and m0.wasted_gpu == 0.0
+        assert m1.completed == 0
+        assert m1.wasted_gpu == COMPUTE       # a's forward, exactly
+        assert m1.reroutes == 0               # fixed never reroutes
+        assert not net.nodes[b].alive         # crash committed
+
+
+class TestSwarmFullRecompute:
+    def test_backward_crash_wastes_whole_pipeline(self):
+        """SWARM's backward-crash recovery recomputes the full pipeline:
+        the wasted GPU time is exactly the microbatch's entire compute
+        history (fwd a + fwd b + bwd b), pinned analytically."""
+        net = tiny_net(stages=2, relays_per_stage=1)
+        a = net.stage_nodes(0)[0].id
+        b = net.stage_nodes(1)[0].id
+        lo, hi = crash_window(net, [0, a, b, 0])
+        sim = TrainingSimulator(net, scheduler="swarm",
+                                rng=np.random.default_rng(1))
+        horizon = sim.engine._estimate_iteration()
+        # kill a after its forward completes but before the backward
+        # returns to it -> the backward-recovery (restart) branch
+        churn = TraceChurn([(0, "crash", a, ((lo + hi) / 2) / horizon)])
+        sim.engine.churn_model = churn
+        (m,) = sim.run(1)
+        assert m.launched == 1 and m.completed == 0
+        # fwd@a + fwd@b + bwd@b; the restarted pipeline re-routes through
+        # the only stage-0 relay (already dead) and adds no compute
+        assert m.wasted_gpu == COMPUTE + COMPUTE + 2 * COMPUTE
+        assert m.reroutes == 1                # one successful restart
+
+    def test_seeded_regression_slot_leak_fix(self):
+        """Golden pin of SWARM waste/throughput under Bernoulli churn
+        with the slot-leak fix: restarting microbatches release their
+        slots through release_slot, so queued microbatches wake instead
+        of stalling out.  On this seed the pre-refactor loop (which
+        leaked the slots) completes fewer microbatches and wastes more
+        GPU time — the inflation the paper does NOT attribute to
+        recomputation."""
+        def net():
+            rng = np.random.default_rng(2)
+            caps = [int(rng.uniform(1, 3)) for _ in range(16)]
+            return geo_distributed_network(
+                num_stages=4, relay_capacities=caps, num_data_nodes=2,
+                data_capacity=4, compute_cost=0.05,
+                rng=np.random.default_rng(2))
+        sim = TrainingSimulator(net(), scheduler="swarm", churn=0.2,
+                                rng=np.random.default_rng(102))
+        ms = sim.run(6)
+        assert sum(m.completed for m in ms) == 20        # golden
+        assert sum(m.wasted_gpu for m in ms) == 29.0     # golden
+        ref = ReferenceTrainingSimulator(net(), scheduler="swarm",
+                                         churn=0.2,
+                                         rng=np.random.default_rng(102))
+        mr = ref.run(6)
+        assert sum(m.completed for m in mr) == 18        # leaked slots
+        assert sum(m.wasted_gpu for m in mr) == 32.0
+
+
+class TestGWTFPipelineRepair:
+    def test_backward_crash_repairs_without_waste(self):
+        """Contrast to SWARM: GWTF's pipeline repair splices a spare
+        stage node and recomputes only that stage — zero wasted GPU
+        time (the paper's headline property)."""
+        net = tiny_net(stages=2, relays_per_stage=2)
+        sim = TrainingSimulator(net, scheduler="gwtf",
+                                rng=np.random.default_rng(1))
+        flows = sim.protocol.complete_flows()
+        assert flows, "protocol should plan at least one flow"
+        path = flows[0]
+        lo, hi = crash_window(net, path)
+        horizon = sim.engine._estimate_iteration()
+        churn = TraceChurn([(0, "crash", path[1], ((lo + hi) / 2) / horizon)])
+        sim.engine.churn_model = churn
+        (m,) = sim.run(1)
+        assert m.completed == m.launched >= 1
+        assert m.wasted_gpu == 0.0
+        assert m.reroutes >= 1
+
+
+class TestChurnModels:
+    def test_trace_rejoin_roundtrip(self):
+        net = tiny_net(stages=2, relays_per_stage=2)
+        a = net.stage_nodes(0)[0].id
+        churn = TraceChurn([(0, "crash", a, 0.01), (2, "rejoin", a)])
+        sim = TrainingSimulator(net, scheduler="gwtf", churn_model=churn,
+                                rng=np.random.default_rng(3))
+        sim.run(1)
+        assert not net.nodes[a].alive
+        sim.run(1)                      # iteration 1: still dead
+        assert not net.nodes[a].alive
+        sim.run(1)                      # iteration 2: rejoins
+        assert net.nodes[a].alive
+
+    def test_trace_rejects_unknown_kind(self):
+        with pytest.raises(ValueError):
+            TraceChurn([(0, "explode", 1)])
+
+    def test_regional_outage_is_correlated(self):
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[2] * 12, num_data_nodes=1,
+            data_capacity=2, compute_cost=1.0, num_locations=3,
+            rng=np.random.default_rng(4))
+        model = RegionalOutageChurn(1.0, rejoin_prob=0.0)
+        sim = TrainingSimulator(net, scheduler="swarm", churn_model=model,
+                                rng=np.random.default_rng(6))
+        (m,) = sim.run(1)
+        dead = [n for n in net.nodes.values() if not n.alive]
+        assert dead, "outage_prob=1.0 must take down one region"
+        locs = {n.location for n in dead}
+        assert len(locs) == 1            # all in one location
+        loc = locs.pop()
+        survivors = [n for n in net.nodes.values()
+                     if not n.is_data and n.location == loc and n.alive]
+        assert not survivors             # severity 1.0: whole region down
+
+    def test_regional_blackout_trace_helper(self):
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[2] * 12, num_data_nodes=1,
+            data_capacity=2, compute_cost=1.0, num_locations=3,
+            rng=np.random.default_rng(4))
+        loc = net.stage_nodes(0)[0].location
+        trace = TraceChurn.regional_blackout(net, location=loc,
+                                             at_iteration=0, duration=1)
+        sim = TrainingSimulator(net, scheduler="swarm", churn_model=trace,
+                                rng=np.random.default_rng(6))
+        sim.run(1)
+        assert all(not n.alive for n in net.nodes.values()
+                   if not n.is_data and n.location == loc)
+        sim.run(1)
+        assert all(n.alive for n in net.nodes.values()
+                   if not n.is_data and n.location == loc)
+
+    def test_composed_union_earliest_crash_wins(self):
+        net = tiny_net(stages=2, relays_per_stage=2)
+        a = net.stage_nodes(0)[0].id
+        b = net.stage_nodes(0)[1].id
+        model = ComposedChurn([
+            TraceChurn([(0, "crash", a, 0.9), (0, "crash", b, 0.2)]),
+            TraceChurn([(0, "crash", a, 0.3)]),
+        ])
+        from repro.core.sim.faults import ChurnContext
+        ctx = ChurnContext(net=net, rng=np.random.default_rng(0),
+                           horizon=100.0, iteration=0,
+                           on_rejoin=lambda n: None)
+        crash = model.sample(ctx)
+        assert crash[a] == pytest.approx(30.0)   # earliest of 90 / 30
+        assert crash[b] == pytest.approx(20.0)
+
+
+class TestEventAccounting:
+    def test_max_events_truncation_warns(self):
+        net = tiny_net(stages=2, relays_per_stage=2, data_capacity=2)
+        sim = TrainingSimulator(net, scheduler="gwtf",
+                                rng=np.random.default_rng(1), max_events=5)
+        with pytest.warns(RuntimeWarning, match="truncated"):
+            m = sim.run_iteration()
+        assert m.truncated
+        assert m.events == 5
+        assert np.isfinite(m.duration)
+
+    def test_clean_iteration_not_truncated(self):
+        net = tiny_net(stages=2, relays_per_stage=2)
+        sim = TrainingSimulator(net, scheduler="gwtf",
+                                rng=np.random.default_rng(1))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            m = sim.run_iteration()
+        assert not m.truncated
+        assert m.events > 0 and m.loop_seconds >= 0.0
+        assert m.events_per_sec >= 0.0
+
+    def test_queue_metrics_under_contention(self):
+        """Capacity-1 relays + capacity-blind SWARM routing must queue."""
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[1, 1, 1, 1], num_data_nodes=1,
+            data_capacity=6, compute_cost=5.0, compute_jitter=0.0,
+            rng=np.random.default_rng(7))
+        sim = TrainingSimulator(net, scheduler="swarm",
+                                rng=np.random.default_rng(8))
+        (m,) = sim.run(1)
+        assert m.queue_enqueues > 0
+        assert m.queue_depth_peak > 0
+
+    def test_summarize_columns(self):
+        net = tiny_net(stages=2, relays_per_stage=2, data_capacity=2)
+        sim = TrainingSimulator(net, scheduler="gwtf", churn=0.1,
+                                rng=np.random.default_rng(9))
+        table = summarize(sim.run(4), warmup=1)
+        for key in ("time_per_mb", "throughput", "wasted_gpu", "reroutes",
+                    "queue_depth_peak", "truncated_iterations"):
+            assert key in table
+            mean, std = table[key]
+            assert np.isfinite(mean) and np.isfinite(std)
+
+
+class TestEngineEquivalence:
+    @pytest.mark.parametrize("churn", [0.0, 0.15])
+    def test_gwtf_metric_and_rng_identical(self, churn):
+        """The layered engine is a perf refactor of the reference loop:
+        seeded GWTF runs must be bit-identical (metrics + RNG stream)."""
+        def net():
+            rng = np.random.default_rng(3)
+            caps = [int(rng.uniform(1, 4)) for _ in range(16)]
+            return geo_distributed_network(
+                num_stages=4, relay_capacities=caps, num_data_nodes=2,
+                data_capacity=4, compute_cost=0.05,
+                rng=np.random.default_rng(3))
+        s1 = TrainingSimulator(net(), scheduler="gwtf", churn=churn,
+                               rng=np.random.default_rng(12))
+        s2 = ReferenceTrainingSimulator(net(), scheduler="gwtf", churn=churn,
+                                        rng=np.random.default_rng(12))
+        for a, b in zip(s1.run(5), s2.run(5)):
+            assert a.duration == b.duration
+            assert a.completed == b.completed
+            assert a.comm_time == b.comm_time
+            assert a.wasted_gpu == b.wasted_gpu
+            assert a.aggregation_time == b.aggregation_time
+        assert s1.rng.bit_generator.state == s2.rng.bit_generator.state
+
+    def test_unknown_scheduler_rejected(self):
+        net = tiny_net()
+        with pytest.raises(ValueError, match="unknown scheduler"):
+            make_policy("mystery", net)
+
+
+class TestCostMatrices:
+    def test_comm_and_edge_matrices_match_scalar_paths(self):
+        net = tiny_net(stages=2, relays_per_stage=3)
+        size = 12345.0
+        C = net.comm_matrix(size)
+        E = net.edge_matrix(size)
+        ids = list(net.nodes)
+        for i in ids[:4]:
+            for j in ids[:4]:
+                if i == j:
+                    continue
+                assert C[i, j] == net.comm_cost(i, j, size)
+                assert E[i, j] == net.edge_cost(i, j, size)
