@@ -4,8 +4,17 @@ GWTF vs SWARM, homogeneous/heterogeneous capacities x {0, 10, 20}% churn.
 Reported: time per microbatch (min), throughput (#mb/iteration),
 communication time, wasted GPU time.  Target claims: up to 45% training-
 time reduction in heterogeneous churn settings; wasted GPU time ~0.
+
+``--runtime`` additionally runs one real-compute row through the staged
+runtime (`repro.core.runtime`): the same crash-prone scenario executed
+with actual JAX compute, reporting microbatches/sec and the
+reroute/stage-recompute counters alongside the simulated table.
 """
-from benchmarks.common import crash_table, csv_row, print_crash_table
+import argparse
+import sys
+
+from benchmarks.common import crash_table, csv_row, print_crash_table, \
+    runtime_row
 
 
 def run(reps: int = 5, iterations: int = 12, verbose: bool = True):
@@ -26,6 +35,23 @@ def run(reps: int = 5, iterations: int = 12, verbose: bool = True):
     return out
 
 
-if __name__ == "__main__":
-    for line in run():
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--runtime", action="store_true",
+                    help="also run one real-compute row through the "
+                         "staged runtime")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--iterations", type=int, default=12)
+    args = ap.parse_args(argv)
+    for line in run(reps=args.reps, iterations=args.iterations):
         print(line)
+    if args.runtime:
+        r = runtime_row("gwtf-llama-300m")
+        print(csv_row("tableII_runtime_mb_per_sec", r["mb_per_sec"],
+                      f"rerouted={r['rerouted']} "
+                      f"recomputes={r['stage_recomputes']}"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -85,3 +85,52 @@ def print_crash_table(title: str, rows: List[Dict]):
 
 def csv_row(name: str, value: float, derived: str = "") -> str:
     return f"{name},{value:.6g},{derived}"
+
+
+def runtime_row(model_arch: str, *, churn: float = 0.1, iterations: int = 4,
+                seed: int = 0, verbose: bool = True) -> Dict:
+    """One real-compute row through the staged runtime: the crash-table
+    scenario (reduced to CPU scale) executed with actual JAX compute
+    instead of the event simulator — losses, reroute/recompute counters
+    and microbatches/sec from `repro.core.runtime`."""
+    import dataclasses
+    import time
+
+    from repro.core.runtime.trainer import RuntimeTrainer
+    from repro.data.pipeline import DataConfig, DataNodeShard
+
+    cfg = dataclasses.replace(
+        get_config(model_arch).reduced(num_layers=4, d_model=128),
+        vocab_size=512)
+    stages = 4
+    net = geo_distributed_network(
+        num_stages=stages, relay_capacities=[3] * (3 * stages),
+        num_data_nodes=1, data_capacity=8,
+        rng=np.random.default_rng(seed))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, batch_size=8,
+                    microbatch_size=1, seed=seed)
+    shard = DataNodeShard(dc, 0, 1)
+    tr = RuntimeTrainer(cfg, net, churn=churn, lr=1e-3, seed=seed)
+    dn = net.data_nodes()[0].id
+    tr.iteration({dn: shard.microbatches()})        # compile
+    t0 = time.perf_counter()
+    completed = rerouted = recomputes = dropped = 0
+    for _ in range(iterations):
+        r = tr.iteration({dn: shard.microbatches()})
+        completed += r.completed
+        rerouted += r.rerouted
+        recomputes += r.fwd_recomputes + r.bwd_replays
+        dropped += r.dropped
+    dt = time.perf_counter() - t0
+    row = dict(model=cfg.name, churn=churn, iterations=iterations,
+               completed=completed, dropped=dropped, rerouted=rerouted,
+               stage_recomputes=recomputes,
+               mb_per_sec=round(completed / dt, 2),
+               final_loss=round(tr.losses[-1], 4))
+    if verbose:
+        print(f"runtime row [{cfg.name}] churn={churn:.0%}: "
+              f"{row['mb_per_sec']:.1f} mb/s, "
+              f"{completed} completed / {dropped} dropped, "
+              f"{rerouted} rerouted ({recomputes} stage recomputes), "
+              f"final loss {row['final_loss']:.4f}")
+    return row

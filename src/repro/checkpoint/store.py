@@ -3,6 +3,11 @@
 npz-based, dependency-free.  Supports per-stage checkpoints so a stage
 replica can bootstrap a joining node ("downloads the weights of the stage
 it will serve", Sec. V-E), plus full-model checkpoints for the launcher.
+
+bf16 leaves are stored as uint16 bit patterns (npz cannot hold bf16)
+with a ``bf16_<i>`` marker and reinterpreted through ``ml_dtypes`` on
+restore; optimizer state (e.g. ``AdamWState``) round-trips like any
+other pytree as long as the ``like`` template has the same structure.
 """
 from __future__ import annotations
 
@@ -13,8 +18,13 @@ from typing import Any, Dict, Tuple
 import jax
 import numpy as np
 
+try:
+    import ml_dtypes
+except ImportError:                                   # pragma: no cover
+    ml_dtypes = None
 
-def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any, int]:
     leaves, treedef = jax.tree.flatten(tree)
     flat = {}
     for i, l in enumerate(leaves):
@@ -23,29 +33,55 @@ def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
             a = a.view(np.uint16)
             flat[f"bf16_{i}"] = np.asarray(1)
         flat[f"leaf_{i}"] = a
-    return flat, treedef
+    return flat, treedef, len(leaves)
 
 
 def save(path: str, tree, step: int = 0, meta: dict | None = None):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    flat, treedef = _flatten(tree)
+    flat, treedef, num_leaves = _flatten(tree)
     flat["__step"] = np.asarray(step)
     np.savez(path, **flat)
-    sidecar = {"treedef": str(treedef), "num_leaves": len(flat) - 1,
+    sidecar = {"treedef": str(treedef), "num_leaves": num_leaves,
                "step": step, **(meta or {})}
     with open(path + ".json", "w") as f:
         json.dump(sidecar, f)
 
 
 def restore(path: str, like) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (shape/dtype template)."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    """Restore into the structure of ``like`` (shape/dtype template).
+
+    The stored leaf count is validated against both the sidecar JSON
+    (when present) and the template *before* unflattening, so a
+    template/checkpoint mismatch fails with a structural error instead
+    of a silent mis-assignment of leaves.
+    """
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    data = np.load(npz_path)
     leaves, treedef = jax.tree.flatten(like)
-    import ml_dtypes
+    stored = sum(1 for k in data.files if k.startswith("leaf_"))
+    if stored != len(leaves):
+        raise ValueError(
+            f"checkpoint {npz_path} holds {stored} leaves but the "
+            f"restore template has {len(leaves)}: structure mismatch")
+    sidecar_path = npz_path + ".json"
+    if os.path.exists(sidecar_path):
+        with open(sidecar_path) as f:
+            sidecar = json.load(f)
+        declared = sidecar.get("num_leaves")
+        if declared is not None and declared != stored:
+            raise ValueError(
+                f"checkpoint {npz_path} is corrupt: sidecar declares "
+                f"{declared} leaves, archive holds {stored}")
     loaded = []
     for i, l in enumerate(leaves):
         a = data[f"leaf_{i}"]
         if f"bf16_{i}" in data:
+            if ml_dtypes is None:
+                raise ImportError(
+                    f"checkpoint {npz_path} contains bfloat16 leaves "
+                    f"but the 'ml_dtypes' package is not installed; "
+                    f"install it (it ships with jax) to restore bf16 "
+                    f"checkpoints")
             a = a.view(ml_dtypes.bfloat16)
         loaded.append(a.astype(np.asarray(l).dtype))
     for got, want in zip(loaded, leaves):

@@ -1,306 +1,68 @@
-"""Real-JAX decentralized stage executor (paper Fig. 6 convergence).
+"""Trainer facades over the staged real-compute runtime (Fig. 6).
 
-Runs actual forward/backward computation through GWTF-routed flows:
+This module is the stable entry point for real-JAX decentralized
+training; the implementation lives in the layered
+:mod:`repro.core.runtime` package (``stages`` / ``activations`` /
+``recovery`` / ``trainer`` — the same layered shape as
+:mod:`repro.core.sim`):
 
-* the data node holds embedding + final norm + LM head ("first and last
-  stages colocated on the data node", Sec. II);
-* each relay node holds a *replica* of its stage's transformer blocks;
-* microbatches follow the flows built by :class:`GWTFProtocol`;
-* crashes drop a node mid-iteration: forward crashes reroute to a
-  same-stage replica (recomputing that stage only), backward crashes are
-  repaired the same way from the stored upstream activation;
-* the aggregation phase averages gradients per stage across replicas and
-  applies the same update everywhere, so replicas stay bit-identical —
-  GWTF therefore has exactly SGD's convergence on the microbatches that
-  completed (the paper's claim: same convergence as centralized).
+* :class:`DecentralizedTrainer` — GWTF training over a
+  :class:`~repro.core.flow.graph.FlowNetwork` with *per-stage* jitted
+  ``jax.vjp`` execution: microbatches are stacked so B microbatches
+  cost one dispatch per stage, boundary activations are stored
+  per (microbatch, stage), and mid-iteration crashes are repaired
+  stage-locally — a forward crash recomputes only the crashed stage
+  from the stored input, a backward crash replays that stage's VJP on
+  a substitute replica (paper Sec. V-D).  Churn is sampled by the
+  simulator's :class:`~repro.core.sim.faults.ChurnModel` layer and
+  repair decisions come from its
+  :class:`~repro.core.sim.policies.RoutingPolicy` layer, so the flow
+  engine, the event simulator, and real compute share one
+  fault/recovery vocabulary.  Microbatches whose relay has no live
+  substitute are requeued onto another complete-flow chain when one
+  exists (``IterationResult.rerouted``) instead of silently dropped.
+* :class:`CentralizedTrainer` — the no-decentralization baseline; at
+  churn 0 the decentralized trajectory coincides with it (the paper's
+  convergence claim).
 
-This module shares routing/recovery code with the event simulator; the
-simulator answers *how long*, this executor answers *what is learned*.
+The simulator answers *how long*, this runtime answers *what is
+learned*.  The pre-refactor per-microbatch whole-model-jit executor is
+frozen in :mod:`repro.core.runtime.reference` for benchmarking
+(``benchmarks/bench_exec.py``).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.flow.decentralized import GWTFProtocol
-from repro.core.flow.graph import FlowNetwork
-from repro.models import layers as L
-from repro.models.config import ModelConfig
-from repro.models.transformer import _apply_block, _init_block
-from repro.optim.adamw import AdamW
+# Stage modules (re-exported for compatibility with the pre-refactor API)
+from repro.core.runtime.stages import (embed_fn, init_head_params,
+                                       init_stage_params, loss_fn,
+                                       stage_bounds, stage_forward)
+from repro.core.runtime.trainer import (CentralizedTrainer, IterationResult,
+                                        RuntimeTrainer)
 
 
-# ---------------------------------------------------------------------------
-# Stage modules
-# ---------------------------------------------------------------------------
+class DecentralizedTrainer(RuntimeTrainer):
+    """GWTF training over a FlowNetwork with real JAX compute.
 
-def init_stage_params(cfg: ModelConfig, stage: int, num_stages: int, key):
-    """Blocks [lo, hi) of the model as one stage (stacked for scan)."""
-    lo, hi = stage_bounds(cfg, stage, num_stages)
-    keys = jax.random.split(jax.random.fold_in(key, stage), hi - lo)
-    dtype = jnp.dtype(cfg.param_dtype)
-    return jax.vmap(lambda kk: _init_block(kk, cfg, dtype))(keys)
-
-
-def stage_bounds(cfg: ModelConfig, stage: int, num_stages: int):
-    per = cfg.num_layers // num_stages
-    extra = cfg.num_layers - per * num_stages
-    lo = stage * per + min(stage, extra)
-    hi = lo + per + (1 if stage < extra else 0)
-    return lo, hi
+    Drop-in facade: the pre-refactor constructor signature
+    ``(cfg, net, *, churn, lr, seed, rng)`` still works, and
+    ``iteration()`` returns the same ``IterationResult`` head fields
+    (``loss``/``completed``/``launched``/``dropped``) extended with the
+    runtime's reroute/recompute counters.  Keyword arguments of
+    :class:`~repro.core.runtime.trainer.RuntimeTrainer` (``policy=``,
+    ``churn_model=``, ``checkpoint_dir=``, ``batch_microbatches=``,
+    ...) pass straight through.
+    """
 
 
-def stage_forward(stage_params, x, cfg: ModelConfig):
-    positions = jnp.arange(x.shape[1])
-
-    def body(carry, bp):
-        h, _aux, _ = _apply_block(bp, carry, cfg, positions=positions,
-                                  window=None, cache=None, write_index=None,
-                                  kv_valid=None, moe_impl="dense",
-                                  use_kernel=False)
-        return h, None
-
-    out, _ = jax.lax.scan(body, x, stage_params)
-    return out
-
-
-def init_head_params(cfg: ModelConfig, key):
-    """Data-node module: embedding + final norm + LM head."""
-    return {"embed": L.init_embed(key, cfg, jnp.dtype(cfg.param_dtype)),
-            "final_norm": L.init_norm(cfg)}
-
-
-def embed_fn(head_params, tokens):
-    return L.embed_tokens(head_params["embed"], tokens)
-
-
-def loss_fn(head_params, hidden, labels, cfg: ModelConfig):
-    h = L.apply_norm(head_params["final_norm"], hidden, cfg)
-    return L.chunked_xent_loss(head_params["embed"], h, labels, cfg)
-
-
-# ---------------------------------------------------------------------------
-# Decentralized trainer
-# ---------------------------------------------------------------------------
-
-@dataclass
-class IterationResult:
-    loss: float
-    completed: int
-    launched: int
-    dropped: int
-
-
-class DecentralizedTrainer:
-    """GWTF training over a FlowNetwork with real JAX compute."""
-
-    def __init__(self, cfg: ModelConfig, net: FlowNetwork, *,
-                 churn: float = 0.0, lr: float = 1e-3,
-                 seed: int = 0,
-                 rng: Optional[np.random.Generator] = None):
-        self.cfg = cfg
-        self.net = net
-        self.churn = churn
-        self.rng = rng or np.random.default_rng(seed)
-        self.protocol = GWTFProtocol(net, rng=self.rng)
-        self.protocol.run(max_rounds=100)
-        key = jax.random.PRNGKey(seed)
-        S = net.num_stages
-        # identical replicas per stage (paper: joining nodes download the
-        # stage weights) -> store ONE canonical copy per stage; replicas
-        # share it because aggregation keeps them identical.
-        self.stage_params = [init_stage_params(cfg, s, S, key)
-                             for s in range(S)]
-        self.head_params = {d.id: init_head_params(cfg, jax.random.fold_in(key, 999))
-                            for d in net.data_nodes()}
-        self.opt = AdamW(lr=lr)
-        self.stage_opt = [self.opt.init(p) for p in self.stage_params]
-        self.head_opt = {d: self.opt.init(p)
-                         for d, p in self.head_params.items()}
-        self._jit_cache: Dict[str, Any] = {}
-        self.losses: List[float] = []
-
-    # ------------------------------------------------------------------
-    def _fwd_stage(self, s: int, x):
-        key = f"stage{s}"
-        if key not in self._jit_cache:
-            self._jit_cache[key] = jax.jit(
-                lambda p, x: stage_forward(p, x, self.cfg))
-        return self._jit_cache[key](self.stage_params[s], x)
-
-    # ------------------------------------------------------------------
-    def iteration(self, batches_per_data_node: Dict[int, List[dict]]
-                  ) -> IterationResult:
-        """One training iteration: route, fwd, bwd, aggregate, update."""
-        cfg, S = self.cfg, self.net.num_stages
-        # --- churn: pick crashing relays for this iteration -------------
-        crashed = set()
-        for n in self.net.nodes.values():
-            if n.is_data:
-                continue
-            if n.alive and self.rng.uniform() < self.churn:
-                crashed.add(n.id)
-            elif not n.alive and self.rng.uniform() < self.churn:
-                n.alive = True
-                self.protocol.add_node(n)
-        # --- routing -----------------------------------------------------
-        self.protocol.reclaim_sink_slots()
-        self.protocol.run(max_rounds=30, quiet_rounds=2)
-        flows = self.protocol.complete_flows()
-        # crash points: a crashed node fails after processing k of its
-        # microbatches (uniform), modelling a mid-iteration fault.
-        mb_queue: List[Tuple[int, dict, List[int]]] = []
-        per_dn_counts: Dict[int, int] = {d.id: 0 for d in self.net.data_nodes()}
-        for chain in flows:
-            dn = chain[0]
-            avail = batches_per_data_node.get(dn, [])
-            k = per_dn_counts[dn]
-            if k < len(avail):
-                mb_queue.append((dn, avail[k], chain))
-                per_dn_counts[dn] += 1
-        launched = len(mb_queue)
-        crash_budget = {nid: self.rng.integers(0, 2) for nid in crashed}
-
-        # --- forward + backward per microbatch ---------------------------
-        grad_stage = [None] * S
-        grad_head: Dict[int, Any] = {}
-        counts = [0] * S
-        head_counts: Dict[int, int] = {}
-        total_loss, completed, dropped = 0.0, 0, 0
-
-        for dn, mb, chain in mb_queue:
-            relays = list(chain[1:-1])
-            # forward, with crash-triggered same-stage substitution
-            ok = True
-            for idx, nid in enumerate(relays):
-                if nid in crashed and crash_budget[nid] <= 0:
-                    sub = self._substitute(nid, crashed)
-                    if sub is None:
-                        ok = False
-                        break
-                    relays[idx] = sub
-                elif nid in crashed:
-                    crash_budget[nid] -= 1
-            if not ok:
-                dropped += 1
-                continue
-            loss, g_head, g_stages = self._train_microbatch(dn, mb, relays)
-            total_loss += loss
-            completed += 1
-            for s, g in enumerate(g_stages):
-                grad_stage[s] = g if grad_stage[s] is None else jax.tree.map(
-                    jnp.add, grad_stage[s], g)
-                counts[s] += 1
-            if dn in grad_head:
-                grad_head[dn] = jax.tree.map(jnp.add, grad_head[dn], g_head)
-                head_counts[dn] += 1
-            else:
-                grad_head[dn] = g_head
-                head_counts[dn] = 1
-
-        # --- aggregation + update (Sec. V-E) ------------------------------
-        for s in range(S):
-            if grad_stage[s] is None:
-                continue
-            g = jax.tree.map(lambda x: x / counts[s], grad_stage[s])
-            self.stage_params[s], self.stage_opt[s] = self.opt.update(
-                g, self.stage_opt[s], self.stage_params[s])
-        for dn, g in grad_head.items():
-            g = jax.tree.map(lambda x: x / head_counts[dn], g)
-            self.head_params[dn], self.head_opt[dn] = self.opt.update(
-                g, self.head_opt[dn], self.head_params[dn])
-
-        # --- commit crashes ------------------------------------------------
-        for nid in crashed:
-            self.net.nodes[nid].alive = False
-            self.protocol.remove_node(nid)
-
-        mean_loss = total_loss / max(1, completed)
-        self.losses.append(mean_loss)
-        return IterationResult(loss=mean_loss, completed=completed,
-                               launched=launched, dropped=dropped)
-
-    # ------------------------------------------------------------------
-    def _substitute(self, dead: int, crashed: set) -> Optional[int]:
-        stage = self.net.nodes[dead].stage
-        cands = [n.id for n in self.net.stage_nodes(stage)
-                 if n.id not in crashed and n.id != dead]
-        return cands[0] if cands else None
-
-    def _train_microbatch(self, dn: int, mb: dict, relays: List[int]):
-        """Full fwd+bwd for one microbatch along its (repaired) path.
-
-        Relay identity matters for routing/fault semantics; numerically all
-        replicas of a stage are identical (aggregation invariant), so the
-        math uses the canonical stage params.
-        """
-        cfg, S = self.cfg, self.net.num_stages
-        key = "trainmb"
-        if key not in self._jit_cache:
-            def full(head_p, stage_ps, tokens, labels):
-                x = embed_fn(head_p, tokens)
-                for s in range(S):
-                    x = stage_forward(stage_ps[s], x, cfg)
-                return loss_fn(head_p, x, labels, cfg)
-            self._jit_cache[key] = jax.jit(jax.value_and_grad(
-                full, argnums=(0, 1)))
-        tokens = jnp.asarray(mb["tokens"])
-        labels = jnp.asarray(mb["labels"])
-        loss, (g_head, g_stages) = self._jit_cache[key](
-            self.head_params[dn], self.stage_params, tokens, labels)
-        return float(loss), g_head, list(g_stages)
-
-
-class CentralizedTrainer:
-    """Baseline: same model, same data, no decentralization (Fig. 6)."""
-
-    def __init__(self, cfg: ModelConfig, num_stages: int, *, lr: float = 1e-3,
-                 seed: int = 0):
-        self.cfg = cfg
-        key = jax.random.PRNGKey(seed)
-        self.stage_params = [init_stage_params(cfg, s, num_stages, key)
-                             for s in range(num_stages)]
-        self.head_params = init_head_params(cfg, jax.random.fold_in(key, 999))
-        self.opt = AdamW(lr=lr)
-        self.stage_opt = [self.opt.init(p) for p in self.stage_params]
-        self.head_opt = self.opt.init(self.head_params)
-        self.num_stages = num_stages
-        self._jit = None
-        self.losses: List[float] = []
-
-    def iteration(self, microbatches: List[dict]) -> float:
-        cfg, S = self.cfg, self.num_stages
-        if self._jit is None:
-            def full(head_p, stage_ps, tokens, labels):
-                x = embed_fn(head_p, tokens)
-                for s in range(S):
-                    x = stage_forward(stage_ps[s], x, cfg)
-                return loss_fn(head_p, x, labels, cfg)
-            self._jit = jax.jit(jax.value_and_grad(full, argnums=(0, 1)))
-        g_head_acc, g_stage_acc, total = None, None, 0.0
-        for mb in microbatches:
-            loss, (gh, gs) = self._jit(self.head_params, self.stage_params,
-                                       jnp.asarray(mb["tokens"]),
-                                       jnp.asarray(mb["labels"]))
-            total += float(loss)
-            g_head_acc = gh if g_head_acc is None else jax.tree.map(
-                jnp.add, g_head_acc, gh)
-            g_stage_acc = (list(gs) if g_stage_acc is None else
-                           [jax.tree.map(jnp.add, a, b)
-                            for a, b in zip(g_stage_acc, gs)])
-        n = len(microbatches)
-        g_head = jax.tree.map(lambda x: x / n, g_head_acc)
-        self.head_params, self.head_opt = self.opt.update(
-            g_head, self.head_opt, self.head_params)
-        for s in range(S):
-            g = jax.tree.map(lambda x: x / n, g_stage_acc[s])
-            self.stage_params[s], self.stage_opt[s] = self.opt.update(
-                g, self.stage_opt[s], self.stage_params[s])
-        mean = total / n
-        self.losses.append(mean)
-        return mean
+__all__ = [
+    "CentralizedTrainer",
+    "DecentralizedTrainer",
+    "IterationResult",
+    "RuntimeTrainer",
+    "embed_fn",
+    "init_head_params",
+    "init_stage_params",
+    "loss_fn",
+    "stage_bounds",
+    "stage_forward",
+]

@@ -1,0 +1,40 @@
+"""Layered real-compute runtime for GWTF training (paper Sec. V).
+
+The runtime splits the old monolithic executor into the same layered
+shape as :mod:`repro.core.sim`:
+
+* :mod:`repro.core.runtime.stages` — per-stage forward/backward as
+  separate jitted ``jax.vjp`` dispatches (true pipeline-stage
+  semantics), with same-stage microbatch stacking so B microbatches
+  cost one dispatch per stage;
+* :mod:`repro.core.runtime.activations` — the per-(microbatch, stage)
+  boundary-activation store that makes the paper's stage-local
+  recovery real;
+* :mod:`repro.core.runtime.recovery` — crash injection and repair
+  driven by the shared :class:`~repro.core.sim.faults.ChurnModel` and
+  :class:`~repro.core.sim.policies.RoutingPolicy`/``FaultView``
+  layers, including requeue-instead-of-drop;
+* :mod:`repro.core.runtime.trainer` — gradient aggregation, AdamW
+  updates, periodic per-stage checkpoints and joining-node bootstrap
+  via :func:`repro.checkpoint.store.restore_stage`;
+* :mod:`repro.core.runtime.reference` — the frozen pre-refactor
+  per-microbatch full-jit executor, kept for benchmarking
+  (``benchmarks/bench_exec.py``).
+
+``repro.core.executor`` re-exports the drop-in trainer facades.
+"""
+from repro.core.runtime.activations import ActivationStore
+from repro.core.runtime.recovery import RecoveryManager, Resolution
+from repro.core.runtime.stages import StageCompute
+from repro.core.runtime.trainer import (CentralizedTrainer, IterationResult,
+                                        RuntimeTrainer)
+
+__all__ = [
+    "ActivationStore",
+    "CentralizedTrainer",
+    "IterationResult",
+    "RecoveryManager",
+    "Resolution",
+    "RuntimeTrainer",
+    "StageCompute",
+]

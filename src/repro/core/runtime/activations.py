@@ -1,0 +1,83 @@
+"""Per-(microbatch, stage) activation store — the recovery substrate.
+
+The paper's stage-local repair (Sec. V-D) hinges on one invariant: the
+input activation of every stage is retained until that stage's backward
+completes.  A forward crash then reroutes and recomputes *only* the
+crashed stage from the stored input; a backward crash replays that
+stage's VJP on a substitute replica from the same stored input.
+
+`ActivationStore` keys boundary activations by pipeline stage.  The
+batched runtime stores one stacked array per stage (the rows of all
+in-flight microbatches, one ``put``); the per-microbatch view needed by
+recovery (`get`) slices rows out of the stack, and the backward sweep
+reads the stack back (`stacked`), gathering rows when some microbatches
+failed mid-backward.  Stage ``s``'s entry is the *input* of stage
+``s``; stage 0's entry is the embedding output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class ActivationStore:
+    """Boundary activations for the in-flight iteration."""
+
+    def __init__(self):
+        # stage -> list of (mb_ids tuple, stacked array) chunks
+        self._chunks: Dict[int, List[Tuple[tuple, Any]]] = {}
+        self.puts = 0
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------
+    def put(self, stage: int, mb_ids: Sequence[int], x) -> None:
+        """Store the stacked input of ``stage`` for ``mb_ids`` (rows of
+        ``x`` split evenly, in order)."""
+        self._chunks.setdefault(stage, []).append((tuple(mb_ids), x))
+        self.puts += 1
+
+    def get(self, stage: int, mb_id: int):
+        """The stored input rows of ``stage`` for one microbatch — what
+        a substitute replica 'downloads' to recompute or replay."""
+        for ids, x in self._chunks.get(stage, ()):
+            if mb_id in ids:
+                per = x.shape[0] // len(ids)
+                k = ids.index(mb_id)
+                self.hits += 1
+                return x[k * per:(k + 1) * per]
+        self.misses += 1
+        raise KeyError(f"no stored activation for (mb={mb_id}, "
+                       f"stage={stage})")
+
+    def stacked(self, stage: int, mb_ids: Sequence[int]):
+        """The stacked input of ``stage`` for exactly ``mb_ids``.
+
+        Fast path: a single chunk holding exactly these ids (the
+        healthy batched iteration) is returned as-is; otherwise rows
+        are gathered per microbatch.
+        """
+        want = tuple(mb_ids)
+        for ids, x in self._chunks.get(stage, ()):
+            if ids == want:
+                self.hits += 1
+                return x
+        return jnp.concatenate([self.get(stage, i) for i in want], axis=0)
+
+    # ------------------------------------------------------------------
+    def drop_stage(self, stage: int) -> None:
+        """Release a stage's activations once its backward completed."""
+        self._chunks.pop(stage, None)
+
+    def clear(self) -> None:
+        self._chunks.clear()
+
+    def nbytes(self) -> int:
+        return int(sum(np.asarray(x).nbytes
+                       for chunks in self._chunks.values()
+                       for _, x in chunks))
+
+    def __len__(self) -> int:
+        return sum(len(c) for c in self._chunks.values())

@@ -1,0 +1,177 @@
+"""FROZEN pre-refactor executor — the per-microbatch full-jit reference.
+
+This is the monolithic ``DecentralizedTrainer`` exactly as it stood
+before the staged runtime existed: one ``jax.value_and_grad`` over the
+*entire* model per microbatch, hand-rolled Bernoulli churn with an
+``integers(0, 2)`` crash budget, silent drops when no live same-stage
+substitute exists, no activation store, no checkpointing.
+
+Do not modify this file except to track upstream API renames — it is
+the baseline ``benchmarks/bench_exec.py`` measures the staged runtime
+against (microbatches/sec and recovery cost), mirroring how
+``sim/reference.py`` freezes the pre-refactor event loop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flow.decentralized import GWTFProtocol
+from repro.core.flow.graph import FlowNetwork
+from repro.core.runtime.stages import (embed_fn, init_head_params,
+                                       init_stage_params, loss_fn,
+                                       stage_forward)
+from repro.optim.adamw import AdamW
+
+
+@dataclass
+class ReferenceIterationResult:
+    loss: float
+    completed: int
+    launched: int
+    dropped: int
+
+
+class ReferenceDecentralizedTrainer:
+    """The seed's GWTF trainer: whole-model jit per microbatch."""
+
+    def __init__(self, cfg, net: FlowNetwork, *,
+                 churn: float = 0.0, lr: float = 1e-3,
+                 seed: int = 0,
+                 rng: Optional[np.random.Generator] = None):
+        self.cfg = cfg
+        self.net = net
+        self.churn = churn
+        self.rng = rng or np.random.default_rng(seed)
+        self.protocol = GWTFProtocol(net, rng=self.rng)
+        self.protocol.run(max_rounds=100)
+        key = jax.random.PRNGKey(seed)
+        S = net.num_stages
+        self.stage_params = [init_stage_params(cfg, s, S, key)
+                             for s in range(S)]
+        self.head_params = {d.id: init_head_params(cfg, jax.random.fold_in(key, 999))
+                            for d in net.data_nodes()}
+        self.opt = AdamW(lr=lr)
+        self.stage_opt = [self.opt.init(p) for p in self.stage_params]
+        self.head_opt = {d: self.opt.init(p)
+                         for d, p in self.head_params.items()}
+        self._jit_cache: Dict[str, Any] = {}
+        self.losses: List[float] = []
+
+    # ------------------------------------------------------------------
+    def iteration(self, batches_per_data_node: Dict[int, List[dict]]
+                  ) -> ReferenceIterationResult:
+        """One training iteration: route, fwd, bwd, aggregate, update."""
+        cfg, S = self.cfg, self.net.num_stages
+        # --- churn: pick crashing relays for this iteration -------------
+        crashed = set()
+        for n in self.net.nodes.values():
+            if n.is_data:
+                continue
+            if n.alive and self.rng.uniform() < self.churn:
+                crashed.add(n.id)
+            elif not n.alive and self.rng.uniform() < self.churn:
+                n.alive = True
+                self.protocol.add_node(n)
+        # --- routing -----------------------------------------------------
+        self.protocol.reclaim_sink_slots()
+        self.protocol.run(max_rounds=30, quiet_rounds=2)
+        flows = self.protocol.complete_flows()
+        mb_queue: List[Tuple[int, dict, List[int]]] = []
+        per_dn_counts: Dict[int, int] = {d.id: 0 for d in self.net.data_nodes()}
+        for chain in flows:
+            dn = chain[0]
+            avail = batches_per_data_node.get(dn, [])
+            k = per_dn_counts[dn]
+            if k < len(avail):
+                mb_queue.append((dn, avail[k], chain))
+                per_dn_counts[dn] += 1
+        launched = len(mb_queue)
+        crash_budget = {nid: self.rng.integers(0, 2) for nid in crashed}
+
+        # --- forward + backward per microbatch ---------------------------
+        grad_stage = [None] * S
+        grad_head: Dict[int, Any] = {}
+        counts = [0] * S
+        head_counts: Dict[int, int] = {}
+        total_loss, completed, dropped = 0.0, 0, 0
+
+        for dn, mb, chain in mb_queue:
+            relays = list(chain[1:-1])
+            ok = True
+            for idx, nid in enumerate(relays):
+                if nid in crashed and crash_budget[nid] <= 0:
+                    sub = self._substitute(nid, crashed)
+                    if sub is None:
+                        ok = False
+                        break
+                    relays[idx] = sub
+                elif nid in crashed:
+                    crash_budget[nid] -= 1
+            if not ok:
+                dropped += 1
+                continue
+            loss, g_head, g_stages = self._train_microbatch(dn, mb, relays)
+            total_loss += loss
+            completed += 1
+            for s, g in enumerate(g_stages):
+                grad_stage[s] = g if grad_stage[s] is None else jax.tree.map(
+                    jnp.add, grad_stage[s], g)
+                counts[s] += 1
+            if dn in grad_head:
+                grad_head[dn] = jax.tree.map(jnp.add, grad_head[dn], g_head)
+                head_counts[dn] += 1
+            else:
+                grad_head[dn] = g_head
+                head_counts[dn] = 1
+
+        # --- aggregation + update (Sec. V-E) ------------------------------
+        for s in range(S):
+            if grad_stage[s] is None:
+                continue
+            g = jax.tree.map(lambda x: x / counts[s], grad_stage[s])
+            self.stage_params[s], self.stage_opt[s] = self.opt.update(
+                g, self.stage_opt[s], self.stage_params[s])
+        for dn, g in grad_head.items():
+            g = jax.tree.map(lambda x: x / head_counts[dn], g)
+            self.head_params[dn], self.head_opt[dn] = self.opt.update(
+                g, self.head_opt[dn], self.head_params[dn])
+
+        # --- commit crashes ------------------------------------------------
+        for nid in crashed:
+            self.net.nodes[nid].alive = False
+            self.protocol.remove_node(nid)
+
+        mean_loss = total_loss / max(1, completed)
+        self.losses.append(mean_loss)
+        return ReferenceIterationResult(loss=mean_loss, completed=completed,
+                                        launched=launched, dropped=dropped)
+
+    # ------------------------------------------------------------------
+    def _substitute(self, dead: int, crashed: set) -> Optional[int]:
+        stage = self.net.nodes[dead].stage
+        cands = [n.id for n in self.net.stage_nodes(stage)
+                 if n.id not in crashed and n.id != dead]
+        return cands[0] if cands else None
+
+    def _train_microbatch(self, dn: int, mb: dict, relays: List[int]):
+        """Full fwd+bwd for one microbatch along its (repaired) path."""
+        cfg, S = self.cfg, self.net.num_stages
+        key = "trainmb"
+        if key not in self._jit_cache:
+            def full(head_p, stage_ps, tokens, labels):
+                x = embed_fn(head_p, tokens)
+                for s in range(S):
+                    x = stage_forward(stage_ps[s], x, cfg)
+                return loss_fn(head_p, x, labels, cfg)
+            self._jit_cache[key] = jax.jit(jax.value_and_grad(
+                full, argnums=(0, 1)))
+        tokens = jnp.asarray(mb["tokens"])
+        labels = jnp.asarray(mb["labels"])
+        loss, (g_head, g_stages) = self._jit_cache[key](
+            self.head_params[dn], self.stage_params, tokens, labels)
+        return float(loss), g_head, list(g_stages)

@@ -1,0 +1,184 @@
+"""Per-stage compute: forward and VJP backward as separate jitted calls.
+
+The pre-refactor executor jitted the *entire* model end-to-end per
+microbatch (``jax.value_and_grad`` over all stages at once), which has
+no pipeline-stage structure: a crash anywhere forced rerunning the
+whole graph, and B microbatches cost B full-model dispatches.
+
+`StageCompute` lowers each pipeline stage to two jitted primitives:
+
+* ``forward(s, params, x)`` — the stage's transformer blocks;
+* ``backward(s, params, x, g)`` — the stage's VJP, *rematerialised
+  from the stored input activation*: ``jax.vjp`` recomputes the
+  stage forward under the hood and pulls the cotangent ``g`` back to
+  ``(dparams, dx)``.  This is exactly the paper's Sec. V-D repair
+  primitive: any replica holding the stage weights and the upstream
+  activation can (re)produce the stage's backward.
+
+Microbatches of the same stage are stacked along the batch axis, so B
+microbatches cost one dispatch per stage instead of B full-model
+dispatches.  Cotangents are donated to the backward dispatch on
+backends that support buffer donation (stored activations are *not*
+donated — recovery may replay them).
+
+Dispatch counters (``fwd_calls``/``bwd_calls`` per stage) are the
+ground truth for the recovery tests: a backward crash must add exactly
+one stage-level dispatch, not a full-pipeline recompute.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.transformer import _apply_block, _init_block
+
+
+# ---------------------------------------------------------------------------
+# Stage modules (moved verbatim from the pre-refactor executor)
+# ---------------------------------------------------------------------------
+
+def stage_bounds(cfg: ModelConfig, stage: int, num_stages: int):
+    per = cfg.num_layers // num_stages
+    extra = cfg.num_layers - per * num_stages
+    lo = stage * per + min(stage, extra)
+    hi = lo + per + (1 if stage < extra else 0)
+    return lo, hi
+
+
+def init_stage_params(cfg: ModelConfig, stage: int, num_stages: int, key):
+    """Blocks [lo, hi) of the model as one stage (stacked for scan)."""
+    lo, hi = stage_bounds(cfg, stage, num_stages)
+    keys = jax.random.split(jax.random.fold_in(key, stage), hi - lo)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return jax.vmap(lambda kk: _init_block(kk, cfg, dtype))(keys)
+
+
+def stage_forward(stage_params, x, cfg: ModelConfig):
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, bp):
+        h, _aux, _ = _apply_block(bp, carry, cfg, positions=positions,
+                                  window=None, cache=None, write_index=None,
+                                  kv_valid=None, moe_impl="dense",
+                                  use_kernel=False)
+        return h, None
+
+    out, _ = jax.lax.scan(body, x, stage_params)
+    return out
+
+
+def init_head_params(cfg: ModelConfig, key):
+    """Data-node module: embedding + final norm + LM head."""
+    return {"embed": L.init_embed(key, cfg, jnp.dtype(cfg.param_dtype)),
+            "final_norm": L.init_norm(cfg)}
+
+
+def embed_fn(head_params, tokens):
+    return L.embed_tokens(head_params["embed"], tokens)
+
+
+def loss_fn(head_params, hidden, labels, cfg: ModelConfig):
+    h = L.apply_norm(head_params["final_norm"], hidden, cfg)
+    return L.chunked_xent_loss(head_params["embed"], h, labels, cfg)
+
+
+def _donate_supported() -> bool:
+    return jax.default_backend() in ("gpu", "tpu")
+
+
+class StageCompute:
+    """Jitted per-stage primitives + dispatch accounting.
+
+    One jitted callable serves every stage (jax retraces per parameter
+    shape); counters are tracked per stage at the call sites so
+    recovery tests can pin exactly which stage recomputed.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_stages: int):
+        self.cfg = cfg
+        self.num_stages = num_stages
+        self.fwd_calls: List[int] = [0] * num_stages
+        self.bwd_calls: List[int] = [0] * num_stages
+        self.embed_calls = 0
+        self.embed_bwd_calls = 0
+        self.head_calls = 0
+
+        self._fwd = jax.jit(lambda p, x: stage_forward(p, x, cfg))
+
+        def bwd_impl(p, x, g):
+            _, vjp = jax.vjp(lambda pp, xx: stage_forward(pp, xx, cfg), p, x)
+            dp, dx = vjp(g)
+            return dp, dx
+
+        donate = (2,) if _donate_supported() else ()
+        self._bwd = jax.jit(bwd_impl, donate_argnums=donate)
+        self._embed = jax.jit(embed_fn)
+
+        def embed_bwd_impl(head_p, tokens, g):
+            """Pull the stage-0 input cotangent back through the token
+            embedding: the data node's share of the head gradient."""
+            _, vjp = jax.vjp(lambda hp: embed_fn(hp, tokens), head_p)
+            (dhp,) = vjp(g)
+            return dhp
+
+        self._embed_bwd = jax.jit(embed_bwd_impl, donate_argnums=donate)
+
+        def head_impl(head_p, hidden, labels):
+            """hidden: (B, mb, S, D); labels: (B, mb, S).
+
+            Per-microbatch losses (each the mean over its own tokens,
+            matching the centralized per-microbatch loss), with one VJP
+            giving the head gradient summed over the B microbatches and
+            the per-microbatch hidden cotangents.
+            """
+            def f(hp, h):
+                losses = jax.vmap(
+                    lambda hh, ll: loss_fn(hp, hh, ll, cfg))(h, labels)
+                return jnp.sum(losses), losses
+
+            _, vjp, losses = jax.vjp(f, head_p, hidden, has_aux=True)
+            g_head, g_hidden = vjp(jnp.float32(1.0))
+            return losses, g_head, g_hidden
+
+        self._head = jax.jit(head_impl)
+
+    # ------------------------------------------------------------------
+    def embed(self, head_params, tokens):
+        self.embed_calls += 1
+        return self._embed(head_params, tokens)
+
+    def embed_backward(self, head_params, tokens, g):
+        """Head-gradient contribution of the embedding lookup (the
+        cotangent leaving stage 0's VJP)."""
+        self.embed_bwd_calls += 1
+        return self._embed_bwd(head_params, tokens, g)
+
+    def forward(self, stage: int, params, x):
+        """One dispatch of stage ``stage`` over a stacked batch."""
+        self.fwd_calls[stage] += 1
+        return self._fwd(params, x)
+
+    def backward(self, stage: int, params, x, g) -> Tuple[Any, Any]:
+        """Replay stage ``stage``'s VJP from its stored input ``x``."""
+        self.bwd_calls[stage] += 1
+        return self._bwd(params, x, g)
+
+    def head_loss(self, head_params, hidden, labels):
+        self.head_calls += 1
+        return self._head(head_params, hidden, labels)
+
+    # ------------------------------------------------------------------
+    @property
+    def stage_dispatches(self) -> int:
+        """Total stage-level dispatches (each backward remats one
+        forward, so this is the unit the recovery tests count in)."""
+        return sum(self.fwd_calls) + sum(self.bwd_calls)
+
+    def snapshot(self) -> Dict[str, Any]:
+        return dict(fwd=list(self.fwd_calls), bwd=list(self.bwd_calls),
+                    embed=self.embed_calls, embed_bwd=self.embed_bwd_calls,
+                    head=self.head_calls)

@@ -1,0 +1,496 @@
+"""Training loop over the staged runtime: aggregation, AdamW, checkpoints.
+
+`RuntimeTrainer` wires the layers together into the paper's iteration
+(Sec. V-E):
+
+1. the fault layer samples crashes/rejoins (`ChurnModel` through the
+   same `ChurnContext` the simulator uses; rejoining nodes bootstrap by
+   downloading their stage snapshot via ``checkpoint.store.restore_stage``
+   when a checkpoint directory is configured);
+2. the routing policy plans this iteration's complete-flow chains and
+   microbatches are assigned to them;
+3. `RecoveryManager` resolves every mid-iteration crash against the
+   policy (stage-local substitute, requeue onto another chain, or
+   drop);
+4. the numeric pass executes the completed microbatches through
+   `StageCompute`: stacked per-stage forwards (one dispatch per stage
+   for the whole batch), the per-data-node loss head, then stacked
+   per-stage VJPs read back from the `ActivationStore`; each recorded
+   crash additionally dispatches the dead replica's lost work, so
+   recovery cost is real wall time, not bookkeeping;
+5. per-stage gradients are averaged over completed microbatches and
+   applied with a jitted AdamW update (identical on every replica, so
+   replicas stay bit-identical), and stage snapshots are written to
+   ``checkpoint.store`` every ``checkpoint_every`` iterations.
+
+`CentralizedTrainer` (the Fig. 6 baseline) lives here too; the
+``repro.core.executor`` facade re-exports both.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store as ckpt
+from repro.core.flow.graph import FlowNetwork, Node
+from repro.core.runtime.activations import ActivationStore
+from repro.core.runtime.recovery import Job, RecoveryManager, Resolution
+from repro.core.runtime.stages import (StageCompute, init_head_params,
+                                       init_stage_params)
+from repro.core.sim.faults import BernoulliChurn, ChurnContext, ChurnModel
+from repro.core.sim.policies import GWTFPolicy, RoutingPolicy
+from repro.optim.adamw import AdamW
+
+
+@dataclass
+class IterationResult:
+    loss: float
+    completed: int
+    launched: int
+    dropped: int
+    rerouted: int = 0             # crash repairs that saved the microbatch
+    requeued: int = 0             # subset of rerouted: moved to another chain
+    fwd_recomputes: int = 0       # stage-local forward recomputes (Sec. V-D)
+    bwd_replays: int = 0          # stage-local VJP replays (Sec. V-D)
+
+
+class RuntimeTrainer:
+    """GWTF training with real JAX compute over the staged runtime."""
+
+    def __init__(self, cfg, net: FlowNetwork, *,
+                 churn: float = 0.0, lr: float = 1e-3, seed: int = 0,
+                 rng: Optional[np.random.Generator] = None,
+                 policy: Optional[RoutingPolicy] = None,
+                 churn_model: Optional[ChurnModel] = None,
+                 batch_microbatches: bool = True,
+                 max_retries: int = 2,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0,
+                 record_microbatch_grads: bool = False):
+        self.cfg = cfg
+        self.net = net
+        self.rng = rng or np.random.default_rng(seed)
+        self.policy = policy or GWTFPolicy(net, rng=self.rng)
+        self.churn_model = churn_model or BernoulliChurn(churn)
+        self.batch_microbatches = batch_microbatches
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.record_microbatch_grads = record_microbatch_grads
+
+        self.stages = StageCompute(cfg, net.num_stages)
+        self.store = ActivationStore()
+        self.recovery = RecoveryManager(net, self.policy,
+                                        max_retries=max_retries)
+
+        key = jax.random.PRNGKey(seed)
+        S = net.num_stages
+        # identical replicas per stage (paper: joining nodes download the
+        # stage weights) -> ONE canonical copy per stage; replicas share
+        # it because aggregation keeps them identical.
+        self.stage_params = [init_stage_params(cfg, s, S, key)
+                             for s in range(S)]
+        self.head_params = {d.id: init_head_params(
+            cfg, jax.random.fold_in(key, 999)) for d in net.data_nodes()}
+        self.opt = AdamW(lr=lr)
+        self.stage_opt = [self.opt.init(p) for p in self.stage_params]
+        self.head_opt = {d: self.opt.init(p)
+                         for d, p in self.head_params.items()}
+        self._upd = jax.jit(lambda g, s, p: self.opt.update(g, s, p))
+
+        self.losses: List[float] = []
+        self.step = 0
+        self.joins_bootstrapped = 0
+        self.last_microbatch_grads: List[Tuple[int, Any, Any]] = []
+        # introspection for tests/examples: the most recent iteration's
+        # planned chains and crash resolution
+        self.last_chains: List[List[int]] = []
+        self.last_resolution: Optional[Resolution] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def protocol(self):
+        """The GWTF protocol behind the routing policy, when there is
+        one (pre-refactor compat accessor; ``None`` for policies that
+        are not flow-based)."""
+        return getattr(self.policy, "protocol", None)
+
+    # ------------------------------------------------------------------
+    # Fault-layer hooks
+    # ------------------------------------------------------------------
+    def _on_rejoin(self, node: Node) -> None:
+        """Sec. V-E join path: the rejoining replica downloads its
+        stage's latest snapshot before re-entering the flow graph.
+        The restored tree is discarded afterwards because replicas
+        share one canonical copy (the aggregation invariant keeps them
+        bit-identical); the download itself — and its validation
+        against the live stage structure — is the exercised path."""
+        if (self.checkpoint_dir and node.stage >= 0
+                and os.path.exists(os.path.join(
+                    self.checkpoint_dir, f"stage_{node.stage:03d}.npz"))):
+            ckpt.restore_stage(self.checkpoint_dir, node.stage,
+                               {"params": self.stage_params[node.stage],
+                                "opt": self.stage_opt[node.stage]})
+            self.joins_bootstrapped += 1
+        self.policy.on_rejoin(node)
+
+    # ------------------------------------------------------------------
+    # Checkpoint plumbing
+    # ------------------------------------------------------------------
+    def save_checkpoint(self, dirpath: Optional[str] = None) -> str:
+        """Per-stage snapshots (params + AdamW state) plus the data-node
+        heads; the unit a joining node downloads (paper Sec. V-E)."""
+        d = dirpath or self.checkpoint_dir
+        if not d:
+            raise ValueError("no checkpoint directory configured")
+        for s, (p, o) in enumerate(zip(self.stage_params, self.stage_opt)):
+            ckpt.save_stage(d, s, {"params": p, "opt": o}, step=self.step)
+        for dn, p in self.head_params.items():
+            ckpt.save(os.path.join(d, f"head_{dn:03d}.npz"),
+                      {"params": p, "opt": self.head_opt[dn]},
+                      step=self.step)
+        return d
+
+    def restore_checkpoint(self, dirpath: Optional[str] = None) -> int:
+        """Resume every stage + head from snapshots; returns the step."""
+        d = dirpath or self.checkpoint_dir
+        if not d:
+            raise ValueError("no checkpoint directory configured")
+        step = 0
+        for s in range(self.net.num_stages):
+            tree, step = ckpt.restore_stage(
+                d, s, {"params": self.stage_params[s],
+                       "opt": self.stage_opt[s]})
+            self.stage_params[s] = tree["params"]
+            self.stage_opt[s] = tree["opt"]
+        for dn in self.head_params:
+            tree, step = ckpt.restore(
+                os.path.join(d, f"head_{dn:03d}.npz"),
+                {"params": self.head_params[dn], "opt": self.head_opt[dn]})
+            self.head_params[dn] = tree["params"]
+            self.head_opt[dn] = tree["opt"]
+        self.step = step
+        return step
+
+    # ------------------------------------------------------------------
+    # One training iteration
+    # ------------------------------------------------------------------
+    def iteration(self, batches_per_data_node: Dict[int, List[dict]]
+                  ) -> IterationResult:
+        horizon = 1.0                    # normalized pipeline-flush clock
+        crash_times = self.churn_model.sample(ChurnContext(
+            net=self.net, rng=self.rng, horizon=horizon,
+            iteration=self.step, on_rejoin=self._on_rejoin))
+
+        chains = [list(c) for c in self.policy.plan()]
+        jobs: List[Job] = []
+        per_dn: Dict[int, int] = {}
+        for chain in chains:
+            dn = chain[0]
+            avail = batches_per_data_node.get(dn, [])
+            k = per_dn.get(dn, 0)
+            if k < len(avail):
+                jobs.append(Job(index=len(jobs), data_node=dn,
+                                mb=avail[k], chain=list(chain)))
+                per_dn[dn] = k + 1
+        launched = len(jobs)
+
+        res = self.recovery.resolve(jobs, chains, crash_times, horizon)
+        self.last_chains = chains
+        self.last_resolution = res
+        mean_loss = self._execute(res)
+
+        # ---- commit crashes for the next iteration --------------------
+        for nid in crash_times:
+            self.net.kill_node(nid)
+            self.policy.on_crash(nid)
+
+        self.step += 1
+        if (self.checkpoint_dir and self.checkpoint_every
+                and self.step % self.checkpoint_every == 0):
+            self.save_checkpoint()
+
+        self.losses.append(mean_loss)
+        return IterationResult(
+            loss=mean_loss, completed=len(res.completed), launched=launched,
+            dropped=res.dropped, rerouted=res.rerouted,
+            requeued=res.requeued, fwd_recomputes=res.fwd_recomputes,
+            bwd_replays=res.bwd_replays)
+
+    # ------------------------------------------------------------------
+    # Numeric pass
+    # ------------------------------------------------------------------
+    def _execute(self, res: Resolution) -> float:
+        """Run the completed microbatches through the staged compute and
+        apply the aggregated update; dispatch each recorded crash's
+        lost work so recovery cost is real."""
+        done = res.completed
+        if not done:
+            return 0.0
+        self.store.clear()
+        self.last_microbatch_grads = []
+        if self.batch_microbatches:
+            total = self._execute_batched(done, res)
+        else:
+            total = self._execute_per_microbatch(done, res)
+        self.store.clear()
+        return total / len(done)
+
+    def _group_by_dn(self, done: List[Job]) -> Dict[int, List[int]]:
+        by_dn: Dict[int, List[int]] = {}
+        for k, job in enumerate(done):
+            by_dn.setdefault(job.data_node, []).append(k)
+        return by_dn
+
+    def _execute_batched(self, done: List[Job], res: Resolution) -> float:
+        S = self.net.num_stages
+        by_dn = self._group_by_dn(done)
+        ids = tuple(j.index for j in done)
+        per = np.asarray(done[0].mb["tokens"]).shape[0]
+
+        # ---- forward: one stacked dispatch per stage ------------------
+        toks_by_dn: Dict[int, Any] = {}
+        single_dn = len(by_dn) == 1
+        if single_dn:
+            dn0 = next(iter(by_dn))
+            toks_by_dn[dn0] = jnp.asarray(np.concatenate(
+                [np.asarray(j.mb["tokens"]) for j in done]))
+            x = self.stages.embed(self.head_params[dn0], toks_by_dn[dn0])
+        else:
+            parts: List[Any] = [None] * len(done)
+            for dn, idxs in by_dn.items():
+                toks = jnp.asarray(np.concatenate(
+                    [np.asarray(done[k].mb["tokens"]) for k in idxs]))
+                toks_by_dn[dn] = toks
+                h = self.stages.embed(self.head_params[dn], toks)
+                for row, k in enumerate(idxs):
+                    parts[k] = h[row * per:(row + 1) * per]
+            x = (parts[0] if len(parts) == 1
+                 else jnp.concatenate(parts, axis=0))
+        for s in range(S):
+            self.store.put(s, ids, x)
+            x = self.stages.forward(s, self.stage_params[s], x)
+            self._replay_lost(res, s, "fwd")
+
+        # ---- loss head per data node ----------------------------------
+        D = x.shape[-1]
+        seq = x.shape[1]
+        total = 0.0
+        g_head_by_dn: Dict[int, Any] = {}
+        if single_dn:
+            B = len(done)
+            h = x.reshape(B, per, seq, D)
+            labels = jnp.asarray(np.stack(
+                [np.asarray(j.mb["labels"]) for j in done]))
+            losses, g_head, g_hidden = self.stages.head_loss(
+                self.head_params[dn0], h, labels)
+            total += float(jnp.sum(losses))
+            g_head_by_dn[dn0] = (g_head, B)
+            g = g_hidden.reshape(B * per, seq, D)
+        else:
+            g_parts: List[Any] = [None] * len(done)
+            for dn, idxs in by_dn.items():
+                B = len(idxs)
+                h = jnp.concatenate([x[k * per:(k + 1) * per] for k in idxs],
+                                    axis=0).reshape(B, per, seq, D)
+                labels = jnp.asarray(np.stack(
+                    [np.asarray(done[k].mb["labels"]) for k in idxs]))
+                losses, g_head, g_hidden = self.stages.head_loss(
+                    self.head_params[dn], h, labels)
+                total += float(jnp.sum(losses))
+                g_head_by_dn[dn] = (g_head, B)
+                for row, k in enumerate(idxs):
+                    g_parts[k] = g_hidden[row]
+            g = (g_parts[0] if len(g_parts) == 1
+                 else jnp.concatenate(g_parts, axis=0))
+
+        # ---- backward: one stacked VJP per stage ----------------------
+        grad_stage: List[Any] = [None] * S
+        for s in reversed(range(S)):
+            self._replay_lost(res, s, "bwd", cotangent=g, ids=ids, per=per)
+            xin = self.store.stacked(s, ids)
+            dp, dx = self.stages.backward(s, self.stage_params[s], xin, g)
+            grad_stage[s] = dp
+            g = dx
+            self.store.drop_stage(s)
+
+        # ---- embedding pull-back (the token-lookup share of the head
+        # gradient: the loss head's VJP alone misses it) ----------------
+        for dn, idxs in by_dn.items():
+            gslice = (g if single_dn else jnp.concatenate(
+                [g[k * per:(k + 1) * per] for k in idxs], axis=0))
+            g_emb = self.stages.embed_backward(self.head_params[dn],
+                                               toks_by_dn[dn], gslice)
+            gh, n = g_head_by_dn[dn]
+            g_head_by_dn[dn] = (jax.tree.map(jnp.add, gh, g_emb), n)
+
+        self._apply_update(grad_stage, g_head_by_dn, len(done))
+        return total
+
+    def _execute_per_microbatch(self, done: List[Job],
+                                res: Resolution) -> float:
+        """Unbatched path: every microbatch runs its own per-stage
+        dispatches and gradients are accumulated with ``jnp.add`` —
+        the dispatch order (and float association) of the centralized
+        baseline, used by the numerical-equivalence tests."""
+        S = self.net.num_stages
+        total = 0.0
+        grad_stage: List[Any] = [None] * S
+        g_head_by_dn: Dict[int, Any] = {}
+        # crash events per (job, stage, direction): each costs one real
+        # lost-work dispatch, issued inline where the inputs are in hand
+        lost: Dict[Tuple[int, int, str], int] = {}
+        for ev in res.events:
+            key = (ev.job, ev.stage, ev.direction)
+            lost[key] = lost.get(key, 0) + 1
+        for job in done:
+            toks = jnp.asarray(job.mb["tokens"])
+            labels = jnp.asarray(job.mb["labels"])[None]
+            x = self.stages.embed(self.head_params[job.data_node], toks)
+            for s in range(S):
+                self.store.put(s, (job.index,), x)
+                for _ in range(lost.get((job.index, s, "fwd"), 0)):
+                    self.stages.forward(s, self.stage_params[s], x)
+                x = self.stages.forward(s, self.stage_params[s], x)
+            losses, g_head, g_hidden = self.stages.head_loss(
+                self.head_params[job.data_node], x[None], labels)
+            total += float(losses[0])
+            g = g_hidden[0]
+            g_stages: List[Any] = [None] * S
+            for s in reversed(range(S)):
+                xin = self.store.get(s, job.index)
+                for _ in range(lost.get((job.index, s, "bwd"), 0)):
+                    # copied cotangent: the backward dispatch donates
+                    # its cotangent buffer on GPU/TPU and g is reused
+                    # by the real dispatch below
+                    self.stages.backward(s, self.stage_params[s], xin,
+                                         jnp.copy(g))
+                dp, dx = self.stages.backward(s, self.stage_params[s],
+                                              xin, g)
+                g_stages[s] = dp
+                g = dx
+            g_emb = self.stages.embed_backward(
+                self.head_params[job.data_node], toks, g)
+            g_head = jax.tree.map(jnp.add, g_head, g_emb)
+            if self.record_microbatch_grads:
+                self.last_microbatch_grads.append(
+                    (job.index, g_head, list(g_stages)))
+            for s in range(S):
+                grad_stage[s] = (g_stages[s] if grad_stage[s] is None else
+                                 jax.tree.map(jnp.add, grad_stage[s],
+                                              g_stages[s]))
+            dn = job.data_node
+            if dn in g_head_by_dn:
+                acc, n = g_head_by_dn[dn]
+                g_head_by_dn[dn] = (jax.tree.map(jnp.add, acc, g_head), n + 1)
+            else:
+                g_head_by_dn[dn] = (g_head, 1)
+        self._apply_update(grad_stage, g_head_by_dn, len(done))
+        return total
+
+    def _replay_lost(self, res: Resolution, s: int, direction: str,
+                     cotangent=None, ids=None, per: int = 0) -> None:
+        """Dispatch the dead replica's lost work for each crash recorded
+        at stage ``s``: a forward crash costs one wasted stage forward,
+        a backward crash one wasted VJP replay.  Results are discarded
+        — the substitute's (identical) computation lives in the batch —
+        but the wall time and the dispatch counters are real, which is
+        what the recovery benchmarks and tests measure."""
+        for ev in res.events:
+            if ev.stage != s or ev.direction != direction:
+                continue
+            try:
+                xin = self.store.get(s, ev.job)
+            except KeyError:
+                continue    # microbatch dropped before reaching the batch
+            if direction == "fwd":
+                self.stages.forward(s, self.stage_params[s], xin)
+            elif cotangent is not None and ids is not None and ev.job in ids:
+                k = ids.index(ev.job)
+                gslice = cotangent[k * per:(k + 1) * per]
+                self.stages.backward(s, self.stage_params[s], xin, gslice)
+
+    def _apply_update(self, grad_stage, g_head_by_dn, n_completed: int):
+        for s in range(self.net.num_stages):
+            if grad_stage[s] is None:
+                continue
+            gs = jax.tree.map(lambda a: a / n_completed, grad_stage[s])
+            self.stage_params[s], self.stage_opt[s] = self._upd(
+                gs, self.stage_opt[s], self.stage_params[s])
+        for dn, (gh, n) in g_head_by_dn.items():
+            g = jax.tree.map(lambda a: a / n, gh)
+            self.head_params[dn], self.head_opt[dn] = self._upd(
+                g, self.head_opt[dn], self.head_params[dn])
+
+
+class CentralizedTrainer:
+    """Baseline: same model, same data, no decentralization (Fig. 6).
+
+    Runs on the *same* staged kernels (`StageCompute`) and the same
+    jitted AdamW update as the decentralized runtime, in the same
+    dispatch order.  At churn 0 the decentralized trainer therefore
+    executes bit-for-bit the identical float program — which is the
+    paper's convergence claim stated as an executable invariant (the
+    pre-refactor whole-model-jit formulation could only guarantee this
+    by being one monolithic program; the staged formulation preserves
+    it by construction).
+    """
+
+    def __init__(self, cfg, num_stages: int, *, lr: float = 1e-3,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.num_stages = num_stages
+        key = jax.random.PRNGKey(seed)
+        self.stage_params = [init_stage_params(cfg, s, num_stages, key)
+                             for s in range(num_stages)]
+        self.head_params = init_head_params(cfg, jax.random.fold_in(key, 999))
+        self.opt = AdamW(lr=lr)
+        self.stage_opt = [self.opt.init(p) for p in self.stage_params]
+        self.head_opt = self.opt.init(self.head_params)
+        self.stages = StageCompute(cfg, num_stages)
+        self.store = ActivationStore()
+        self._upd = jax.jit(lambda g, s, p: self.opt.update(g, s, p))
+        self.losses: List[float] = []
+
+    def iteration(self, microbatches: List[dict]) -> float:
+        S = self.num_stages
+        B = len(microbatches)
+        per = np.asarray(microbatches[0]["tokens"]).shape[0]
+        ids = tuple(range(B))
+        self.store.clear()
+        toks = jnp.asarray(np.concatenate(
+            [np.asarray(mb["tokens"]) for mb in microbatches]))
+        x = self.stages.embed(self.head_params, toks)
+        for s in range(S):
+            self.store.put(s, ids, x)
+            x = self.stages.forward(s, self.stage_params[s], x)
+        seq, D = x.shape[1], x.shape[-1]
+        h = x.reshape(B, per, seq, D)
+        labels = jnp.asarray(np.stack(
+            [np.asarray(mb["labels"]) for mb in microbatches]))
+        losses, g_head, g_hidden = self.stages.head_loss(
+            self.head_params, h, labels)
+        g = g_hidden.reshape(B * per, seq, D)
+        grad_stage: List[Any] = [None] * S
+        for s in reversed(range(S)):
+            xin = self.store.stacked(s, ids)
+            dp, dx = self.stages.backward(s, self.stage_params[s], xin, g)
+            grad_stage[s] = dp
+            g = dx
+            self.store.drop_stage(s)
+        g_emb = self.stages.embed_backward(self.head_params, toks, g)
+        g_head = jax.tree.map(jnp.add, g_head, g_emb)
+        for s in range(S):
+            gs = jax.tree.map(lambda a: a / B, grad_stage[s])
+            self.stage_params[s], self.stage_opt[s] = self._upd(
+                gs, self.stage_opt[s], self.stage_params[s])
+        gh = jax.tree.map(lambda a: a / B, g_head)
+        self.head_params, self.head_opt = self._upd(
+            gh, self.head_opt, self.head_params)
+        mean = float(jnp.sum(losses)) / B
+        self.losses.append(mean)
+        return mean

@@ -1,0 +1,303 @@
+"""Staged runtime: per-stage VJP execution, stage-local recovery,
+requeue semantics, checkpoint plumbing (paper Sec. V-D/V-E, Fig. 6)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.executor import CentralizedTrainer, DecentralizedTrainer
+from repro.core.flow.graph import geo_distributed_network
+from repro.core.runtime.stages import embed_fn, loss_fn, stage_forward
+from repro.core.runtime.trainer import RuntimeTrainer
+from repro.core.sim.faults import TraceChurn
+from repro.core.sim.policies import FixedPolicy
+from repro.data.pipeline import DataConfig, DataNodeShard
+
+
+def tiny_cfg():
+    cfg = get_config("gwtf-llama-300m").reduced(num_layers=4, d_model=128)
+    return dataclasses.replace(cfg, vocab_size=256)
+
+
+def make_net(seed=0, stages=2, data_nodes=1):
+    return geo_distributed_network(
+        num_stages=stages, relay_capacities=[3] * (3 * stages),
+        num_data_nodes=data_nodes, data_capacity=4,
+        rng=np.random.default_rng(seed))
+
+
+def make_shard(cfg, seed=0):
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, batch_size=8,
+                    microbatch_size=2, seed=seed)
+    return DataNodeShard(dc, 0, 1)
+
+
+def run_with_trace(cfg, events, seed=1, **kw):
+    """Two bit-identical trainers (same seeds, same plans): one healthy,
+    one with a deterministic churn trace; returns both plus results."""
+    base_net, trace_net = make_net(seed), make_net(seed)
+    mbs = make_shard(cfg, seed).microbatches()
+    base = RuntimeTrainer(cfg, base_net, lr=3e-3, seed=0,
+                          churn_model=TraceChurn([]), **kw)
+    dn = base_net.data_nodes()[0].id
+    rb = base.iteration({dn: mbs})
+    tr = RuntimeTrainer(cfg, trace_net, lr=3e-3, seed=0,
+                        churn_model=TraceChurn(events(base)), **kw)
+    rt = tr.iteration({dn: mbs})
+    return base, rb, tr, rt
+
+
+# ---------------------------------------------------------------------------
+# Stage-local recovery: the paper's central claim, counted in dispatches
+# ---------------------------------------------------------------------------
+
+def test_backward_crash_replays_exactly_one_stage():
+    """Sec. V-D: a backward crash is repaired by replaying the crashed
+    stage's VJP from the stored upstream activation — the dispatch
+    counters must show exactly one extra stage-level dispatch per
+    replay, never a full-pipeline recompute."""
+    cfg = tiny_cfg()
+
+    def events(base):
+        # stage-1 relay of the first completed chain; with S=2 its
+        # backward visit happens at t=0.75 on the normalized clock, so
+        # a crash at 0.6 hits after its forward work is done
+        relay = base.last_resolution.completed[0].chain[2]
+        events.relay = relay
+        return [(0, "crash", relay, 0.6)]
+
+    base, rb, tr, rt = run_with_trace(cfg, events)
+    relay = events.relay
+    hit = sum(1 for j in base.last_resolution.completed
+              if j.chain[2] == relay)
+    assert hit >= 1
+    assert rt.completed == rt.launched      # every microbatch repaired
+    assert rt.bwd_replays == hit
+    assert rt.fwd_recomputes == 0
+    b, t = base.stages, tr.stages
+    # exactly one extra stage dispatch per replay, at the crashed stage
+    assert t.bwd_calls[1] - b.bwd_calls[1] == hit
+    assert t.bwd_calls[0] == b.bwd_calls[0]
+    assert t.fwd_calls == b.fwd_calls
+    S = tr.net.num_stages
+    extra = t.stage_dispatches - b.stage_dispatches
+    assert extra == hit                     # not hit * (2 * S): stage-local
+    assert extra < 2 * S * hit
+    # recovery must be numerically invisible: same loss trajectory
+    assert rt.loss == rb.loss
+
+
+def test_backward_crash_replay_counted_on_unbatched_path():
+    """The per-microbatch (unbatched) path pays the same real lost-work
+    dispatches as the batched one."""
+    cfg = tiny_cfg()
+
+    def events(base):
+        relay = base.last_resolution.completed[0].chain[2]
+        events.relay = relay
+        return [(0, "crash", relay, 0.6)]
+
+    base, rb, tr, rt = run_with_trace(cfg, events,
+                                      batch_microbatches=False)
+    hit = sum(1 for j in base.last_resolution.completed
+              if j.chain[2] == events.relay)
+    assert rt.bwd_replays == hit >= 1
+    b, t = base.stages, tr.stages
+    assert t.bwd_calls[1] - b.bwd_calls[1] == hit
+    assert t.fwd_calls == b.fwd_calls
+    assert rt.loss == rb.loss
+
+
+def test_forward_crash_recomputes_exactly_one_stage():
+    """A forward crash reroutes and recomputes only the crashed stage
+    from the stored input activation."""
+    cfg = tiny_cfg()
+
+    def events(base):
+        relay = base.last_resolution.completed[0].chain[1]   # stage 0
+        events.relay = relay
+        return [(0, "crash", relay, 0.1)]    # dead before fwd visit (0.25)
+
+    base, rb, tr, rt = run_with_trace(cfg, events)
+    relay = events.relay
+    hit = sum(1 for j in base.last_resolution.completed
+              if j.chain[1] == relay)
+    assert hit >= 1
+    assert rt.completed == rt.launched
+    assert rt.fwd_recomputes == hit
+    assert rt.bwd_replays == 0
+    b, t = base.stages, tr.stages
+    assert t.fwd_calls[0] - b.fwd_calls[0] == hit
+    assert t.fwd_calls[1] == b.fwd_calls[1]
+    assert t.bwd_calls == b.bwd_calls
+    assert rt.loss == rb.loss
+    # the repaired chains no longer route through the dead relay
+    for job in tr.last_resolution.completed:
+        assert job.chain[1] != relay
+
+
+# ---------------------------------------------------------------------------
+# Requeue-instead-of-drop (satellite: executor drop semantics)
+# ---------------------------------------------------------------------------
+
+def _fixed_policy_net():
+    """2 stages x 2 relays, 1 data node: ids 0=dn, 1-2=stage0, 3-4=stage1."""
+    return geo_distributed_network(
+        num_stages=2, relay_capacities=[1, 1, 1, 1], num_data_nodes=1,
+        data_capacity=2, rng=np.random.default_rng(7))
+
+
+def test_requeue_onto_another_chain_instead_of_drop():
+    """A policy with no reroute (FixedPolicy always fails recovery)
+    used to silently drop the microbatch; the runtime now requeues it
+    onto another planned complete-flow chain from the same data node."""
+    cfg = tiny_cfg()
+    net = _fixed_policy_net()
+    paths = [[0, 1, 3, 0], [0, 2, 4, 0]]
+    tr = RuntimeTrainer(cfg, net, lr=3e-3, seed=0,
+                        policy=FixedPolicy(net, paths),
+                        churn_model=TraceChurn([(0, "crash", 1, 0.1)]))
+    mbs = make_shard(cfg, seed=3).microbatches()[:1]
+    r = tr.iteration({0: mbs})
+    assert r.launched == 1
+    assert r.dropped == 0
+    assert r.completed == 1
+    assert r.rerouted == 1 and r.requeued == 1
+    # the job adopted the second chain
+    assert tr.last_resolution.completed[0].chain == [0, 2, 4, 0]
+
+
+def test_drop_only_when_no_live_chain_exists():
+    cfg = tiny_cfg()
+    net = _fixed_policy_net()
+    paths = [[0, 1, 3, 0], [0, 2, 4, 0]]
+    tr = RuntimeTrainer(cfg, net, lr=3e-3, seed=0,
+                        policy=FixedPolicy(net, paths),
+                        churn_model=TraceChurn(
+                            [(0, "crash", 1, 0.1), (0, "crash", 2, 0.1)]))
+    mbs = make_shard(cfg, seed=3).microbatches()[:1]
+    r = tr.iteration({0: mbs})
+    assert r.launched == 1
+    assert r.completed == 0
+    assert r.dropped == 1
+    assert r.requeued == 0
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 semantics under churn (satellite: churned convergence)
+# ---------------------------------------------------------------------------
+
+def test_churned_loss_strictly_decreases():
+    """10% churn, fixed batch: the loss strictly decreases across all 8
+    iterations and every iteration completes microbatches — repair, not
+    restart, is what keeps the trajectory clean."""
+    cfg = tiny_cfg()
+    net = make_net(seed=0)
+    mbs = make_shard(cfg, seed=0).microbatches()
+    tr = DecentralizedTrainer(cfg, net, churn=0.1, lr=3e-3, seed=0)
+    dn = net.data_nodes()[0].id
+    reroutes = 0
+    for _ in range(8):
+        r = tr.iteration({dn: mbs})
+        assert r.completed > 0
+        reroutes += r.rerouted
+    assert all(b < a for a, b in zip(tr.losses, tr.losses[1:]))
+    assert reroutes > 0        # churn actually exercised the repair path
+
+
+def test_churned_microbatch_grads_match_centralized():
+    """Every completed microbatch's gradient under churn equals the
+    centralized whole-model gradient for the same tokens — stage-local
+    recompute is numerically invisible (Fig. 6's precondition)."""
+    cfg = tiny_cfg()
+    net = make_net(seed=1)
+    mbs = make_shard(cfg, seed=1).microbatches()
+    probe = RuntimeTrainer(cfg, make_net(seed=1), lr=3e-3, seed=0,
+                           churn_model=TraceChurn([]))
+    dn = net.data_nodes()[0].id
+    probe.iteration({dn: mbs})
+    crash_relay = probe.last_resolution.completed[0].chain[1]
+    tr = RuntimeTrainer(cfg, net, lr=3e-3, seed=0,
+                        batch_microbatches=False,
+                        record_microbatch_grads=True,
+                        churn_model=TraceChurn(
+                            [(0, "crash", crash_relay, 0.1)]))
+    r = tr.iteration({dn: mbs})
+    assert r.fwd_recomputes > 0            # the repair path really ran
+    assert r.completed == r.launched
+    assert len(tr.last_microbatch_grads) == r.completed
+
+    S = net.num_stages
+    ref = RuntimeTrainer(cfg, make_net(seed=1), lr=3e-3, seed=0,
+                         churn_model=TraceChurn([]))   # pre-update params
+
+    def full(head_p, stage_ps, tokens, labels):
+        x = embed_fn(head_p, tokens)
+        for s in range(S):
+            x = stage_forward(stage_ps[s], x, cfg)
+        return loss_fn(head_p, x, labels, cfg)
+
+    vg = jax.jit(jax.value_and_grad(full, argnums=(0, 1)))
+    for idx, g_head, g_stages in tr.last_microbatch_grads:
+        mb = mbs[idx]
+        _, (gh, gs) = vg(ref.head_params[dn], ref.stage_params,
+                         jnp.asarray(mb["tokens"]),
+                         jnp.asarray(mb["labels"]))
+        for a, b in zip(jax.tree.leaves((g_head, g_stages)),
+                        jax.tree.leaves((gh, list(gs)))):
+            a = np.asarray(a, np.float64)
+            b = np.asarray(b, np.float64)
+            scale = np.abs(b).max() + 1e-12
+            assert np.abs(a - b).max() <= 1e-5 * scale
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint plumbing (tentpole: unified churn/checkpoint path)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_resume_round_trip(tmp_path):
+    cfg = tiny_cfg()
+    net = make_net(seed=4)
+    mbs = make_shard(cfg, seed=4).microbatches()
+    dn = net.data_nodes()[0].id
+    tr = DecentralizedTrainer(cfg, net, churn=0.0, lr=3e-3, seed=0,
+                              checkpoint_dir=str(tmp_path),
+                              checkpoint_every=2)
+    tr.iteration({dn: mbs})
+    tr.iteration({dn: mbs})                  # snapshot written at step 2
+    fresh = DecentralizedTrainer(cfg, make_net(seed=4), churn=0.0,
+                                 lr=3e-3, seed=0)
+    assert fresh.restore_checkpoint(str(tmp_path)) == 2
+    for a, b in zip(jax.tree.leaves(fresh.stage_params),
+                    jax.tree.leaves(tr.stage_params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(fresh.stage_opt),
+                    jax.tree.leaves(tr.stage_opt)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # resumed training continues on the same trajectory
+    r1 = tr.iteration({dn: mbs})
+    r2 = fresh.iteration({dn: mbs})
+    assert r1.loss == r2.loss
+
+
+def test_rejoining_node_bootstraps_from_stage_snapshot(tmp_path):
+    """Sec. V-E: a node that rejoins downloads its stage's snapshot
+    (restore_stage) before re-entering the flow graph."""
+    cfg = tiny_cfg()
+    net = make_net(seed=5)
+    mbs = make_shard(cfg, seed=5).microbatches()
+    dn = net.data_nodes()[0].id
+    relay = [n.id for n in net.nodes.values() if not n.is_data][0]
+    trace = TraceChurn([(0, "crash", relay, 0.95),
+                        (2, "rejoin", relay)])
+    tr = DecentralizedTrainer(cfg, net, lr=3e-3, seed=0,
+                              churn_model=trace,
+                              checkpoint_dir=str(tmp_path),
+                              checkpoint_every=1)
+    for _ in range(3):
+        tr.iteration({dn: mbs})
+    assert tr.joins_bootstrapped == 1
+    assert net.nodes[relay].alive
