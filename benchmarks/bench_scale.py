@@ -176,7 +176,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes + regression gate vs committed JSON")
-    ap.add_argument("--sizes", type=int, nargs="*", default=None)
+    ap.add_argument("--sizes", "--relays", type=int, nargs="*", default=None,
+                    dest="sizes",
+                    help="relay-count sweep (e.g. --relays 500 1000 2000)")
     ap.add_argument("--baseline-max", type=int, default=2000,
                     help="largest size at which the reference baseline runs")
     ap.add_argument("--no-optimal", action="store_true")

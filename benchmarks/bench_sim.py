@@ -76,6 +76,9 @@ def _run(cls, relays: int, scheduler: str, seed: int):
     return dict(
         pops=sum(m.events for m in ms),
         loop_s=sum(m.loop_seconds for m in ms),
+        plan_s=sum(m.plan_seconds for m in ms),
+        per_iter=[(round(m.plan_seconds, 4), round(m.loop_seconds, 4))
+                  for m in ms],
         total_s=total_s,
         launched=sum(m.launched for m in ms),
         completed=sum(m.completed for m in ms),
@@ -85,7 +88,7 @@ def _run(cls, relays: int, scheduler: str, seed: int):
     )
 
 
-def bench_size(relays: int, seed: int = SEED) -> dict:
+def bench_size(relays: int, seed: int = SEED, profile: bool = False) -> dict:
     rec = dict(relays=relays, stages=STAGES, churn=CHURN,
                iterations=ITERATIONS, schedulers={})
     for scheduler in ("gwtf", "swarm"):
@@ -96,12 +99,15 @@ def bench_size(relays: int, seed: int = SEED) -> dict:
             canonical_events=canonical,
             engine_pops=eng["pops"],
             engine_loop_s=round(eng["loop_s"], 4),
+            engine_plan_s=round(eng["plan_s"], 4),
             ref_loop_s=round(ref["loop_s"], 4),
             engine_events_per_sec=round(canonical / eng["loop_s"], 1),
             ref_events_per_sec=round(canonical / ref["loop_s"], 1),
             loop_speedup=round(ref["loop_s"] / eng["loop_s"], 2),
             completed=(eng["completed"], ref["completed"]),
         )
+        if profile:
+            cell["per_iter_plan_loop_s"] = eng["per_iter"]
         if scheduler == "gwtf":
             cell["metrics_identical"] = (
                 eng["completed"] == ref["completed"]
@@ -119,7 +125,14 @@ def print_rec(rec: dict):
               f"engine={c['engine_events_per_sec']:10,.0f} ev/s  "
               f"ref={c['ref_events_per_sec']:10,.0f} ev/s  "
               f"speedup={c['loop_speedup']:5.2f}x  "
+              f"plan={c['engine_plan_s']:6.2f}s loop={c['engine_loop_s']:6.3f}s  "
               f"{'identical' if eq else ('EQUIV-FAIL' if eq is False else '')}")
+        per_iter = c.get("per_iter_plan_loop_s")
+        if per_iter:
+            for k, (p, l) in enumerate(per_iter):
+                frac = p / (p + l) if (p + l) > 0 else 0.0
+                print(f"      iter {k}: plan={p:7.4f}s  loop={l:7.4f}s  "
+                      f"planning {100 * frac:5.1f}% of iteration")
 
 
 def smoke(committed_path: Path) -> int:
@@ -135,8 +148,30 @@ def smoke(committed_path: Path) -> int:
     failures = []
     print(f"== bench_sim --smoke (sizes {SMOKE_SIZES}) ==")
     for relays in SMOKE_SIZES:
-        rec = bench_size(relays)
+        # best-of-3: the engine loop at smoke size is tens of
+        # milliseconds, so a background load spike can halve a single
+        # ev/s sample; taking each implementation's best sample keeps
+        # the host-normalized gate meaningful on noisy CI machines
+        recs = [bench_size(relays) for _ in range(3)]
+        rec = recs[0]
+        for scheduler in rec["schedulers"]:
+            cells = [r["schedulers"][scheduler] for r in recs]
+            best = max(cells, key=lambda c: c["engine_events_per_sec"])
+            best_ref = max(c["ref_events_per_sec"] for c in cells)
+            merged = dict(best, ref_events_per_sec=best_ref)
+            if any("metrics_identical" in c for c in cells):
+                merged["metrics_identical"] = all(
+                    c.get("metrics_identical") for c in cells)
+            rec["schedulers"][scheduler] = merged
         print_rec(rec)
+        for scheduler, cell in rec["schedulers"].items():
+            # planning-vs-loop split in the CI log: a planning-side
+            # regression shows up here even when events/sec holds
+            tot = cell["engine_plan_s"] + cell["engine_loop_s"]
+            frac = cell["engine_plan_s"] / tot if tot > 0 else 0.0
+            print(f"    profile[{scheduler}]: plan {cell['engine_plan_s']:.2f}s"
+                  f" / loop {cell['engine_loop_s']:.3f}s "
+                  f"({100 * frac:.0f}% planning)")
         for scheduler, cell in rec["schedulers"].items():
             if cell.get("metrics_identical") is False:
                 failures.append(f"relays={relays} {scheduler}: engine "
@@ -171,6 +206,9 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="small size + regression gate vs committed JSON")
     ap.add_argument("--sizes", type=int, nargs="*", default=None)
+    ap.add_argument("--profile", action="store_true",
+                    help="report per-iteration planning vs event-loop "
+                         "wall-time split")
     ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
     args = ap.parse_args(argv)
 
@@ -182,7 +220,7 @@ def main(argv=None) -> int:
           f"data capacity, churn {CHURN}, sizes {sizes} ==")
     results = []
     for relays in sizes:
-        rec = bench_size(relays)
+        rec = bench_size(relays, profile=args.profile)
         print_rec(rec)
         results.append(rec)
     out = dict(

@@ -52,12 +52,42 @@ indexes over the protocol state, not from changing any decision:
   (worsening moves rejected *without* consuming randomness), a
   Request Change / Redirect scan that found no improving move is memoised
   against the stage epoch and skipped until some same-stage state
-  changes.  The RNG draws that precede the scan (segment choice,
-  candidate permutation) are still made, so the stream stays aligned
-  with the reference.
-* ``_refresh_costs`` is an iterative bounded-depth walk (explicit stack,
-  depth capped at ``num_stages + 2``) instead of recursion — same final
-  values, no recursion-limit exposure at deep pipelines.
+  changes.  Scans consume no randomness before their annealed accepts
+  (the per-round RNG block below), so memo hits stay stream-neutral.
+* ``_refresh_costs`` is an iterative stage-by-stage walk with
+  deduplicated visits (a node's recompute is an idempotent function of
+  its downstream values, so visiting each cone node once in
+  downstream-first order produces the reference recursion's exact final
+  values without its exponential revisit blowup).
+
+Batched annealing engine (this PR's rebuild)
+--------------------------------------------
+The refinement hot loop is a *batched array program*:
+
+* **Per-round RNG block.**  ``step_round`` draws the node-order shuffle
+  plus ONE uniform block ``rng.random((len(order), 4))`` per round —
+  source rotation, segment choice, and the two scan-visit rotations are
+  *indexed* out of the block instead of drawn per node, so the stream
+  position is a pure function of membership size (shared discipline
+  with ``ReferenceGWTFProtocol``).
+* **Segment slot arrays.**  Every relay-owned segment occupies a slot
+  in flat NumPy arrays (``_seg_owner/_seg_up/_seg_down/_seg_dnode/
+  _seg_ord``) kept current by the mutation helpers (O(1) scalar writes;
+  per-stage slot registries with tombstones + lazy compaction).  A scan
+  gathers its whole candidate set with a few vectorized ops instead of
+  a Python walk over peer segment lists.
+* **Vectorized scans.**  Frozen regime: "first improving candidate in
+  rotation order" is one masked argmin — no fallthrough rescans.
+  Annealing regime: the non-improving prefix's acceptance uniforms are
+  drawn as one sized block (bit-identical to the reference's scalar
+  draws), accepts are prefiltered with ``np.exp`` under a conservative
+  margin and confirmed with ``math.exp`` (the reference's function), and
+  unused draws are returned to the stream with ``bit_generator.advance``
+  so the stream stays exactly aligned.
+* ``strict_rng=True`` selects the scalar scan implementation (same
+  stream, same flows — the compatibility oracle inside the optimized
+  engine); the default batched mode is gated on flow-equality and in
+  practice reproduces the reference stream bit-for-bit as well.
 
 Cost queries go through a flattened copy of the dense cost matrix
 (``FlowNetwork.cost_matrix()`` or the explicit ``cost_matrix`` argument),
@@ -76,6 +106,9 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core.flow.graph import FlowNetwork, Node
+
+_EMPTY_F = np.empty(0)
+_EMPTY_SLOTS = np.empty(0, np.intp)
 
 
 @dataclass(eq=False)
@@ -145,6 +178,7 @@ class GWTFProtocol:
                  objective: str = "minmax",
                  peer_view: Optional[int] = None,
                  refine: bool = True,
+                 strict_rng: bool = False,
                  rng: Optional[np.random.Generator] = None):
         self.net = net
         self.cost_matrix = cost_matrix
@@ -152,7 +186,13 @@ class GWTFProtocol:
         self.alpha = alpha
         self.objective = objective
         self.refine = refine
+        self.strict_rng = strict_rng
         self.rng = rng or np.random.default_rng(0)
+        # the batched annealing prefix returns unused uniform draws via
+        # bit_generator.advance(); generators without it (e.g. MT19937,
+        # SFC64) fall back to per-candidate scalar draws — identical
+        # stream, still-batched delta evaluation
+        self._can_rewind = hasattr(self.rng.bit_generator, "advance")
         self.peer_view = peer_view
         self._flow_counter = itertools.count()
         self._order_counter = itertools.count()
@@ -170,26 +210,62 @@ class GWTFProtocol:
         # spuriously invalidate change memos.
         self._epoch: Dict[int, int] = defaultdict(int)
         self._epoch_down: Dict[Tuple[int, int], int] = defaultdict(int)
-        # epoch-keyed vectorized views of the refinement search space:
-        # _change_pairs[(stage, dn)] -> (epoch_down, J, D, w) arrays of
-        # candidate (owner, downstream) pairs; _redirect_triples[stage]
-        # -> (epoch, A, B, C, cur) arrays of (upstream, owner, downstream)
-        # triples with their current 2-hop cost.  Used only in the frozen
-        # regime to answer "can any improving move exist?" in a few numpy
-        # ops; a positive answer falls through to the exact scalar scan.
-        self._change_pairs: Dict[Tuple[int, int], tuple] = {}
-        self._redirect_triples: Dict[int, tuple] = {}
+        # _epoch_dn[stage]: bumped by downstream/membership mutations of
+        # any (stage, dn) — i.e. exactly what the change candidate table
+        # reads — so upstream-only pairings don't invalidate it.
+        self._epoch_dn: Dict[int, int] = defaultdict(int)
         self._memo_change: Dict[Tuple[int, int], int] = {}
         self._memo_redirect: Dict[int, int] = {}
+        # --- segment slot arrays (batched scan candidate store) ---
+        # slot s of a live relay-owned segment: _seg_owner[s] = owner id
+        # (-1 = tombstone), _seg_up/_seg_down = peer ids (-1 = unpaired),
+        # _seg_dnode = the flow's data node, _seg_ord = the segment's
+        # append-order stamp (ascending _seg_ord within an owner ==
+        # segment-list order), _seg_objs[s] = the Segment object.
+        cap0 = 256
+        self._seg_owner = np.full(cap0, -1, np.int64)
+        self._seg_up = np.full(cap0, -1, np.int64)
+        self._seg_down = np.full(cap0, -1, np.int64)
+        self._seg_dnode = np.full(cap0, -1, np.int64)
+        self._seg_ord = np.zeros(cap0, np.int64)
+        self._seg_objs: List[Optional[Segment]] = [None] * cap0
+        self._seg_free: List[int] = []
+        self._seg_top = 0
+        # per-stage slot registries (append order, preallocated int
+        # buffers; tombstones compacted lazily once they outnumber half
+        # the registry)
+        self._stage_slot_buf: Dict[int, np.ndarray] = {}
+        self._stage_slot_n: Dict[int, int] = defaultdict(int)
+        self._stage_dead: Dict[int, int] = defaultdict(int)
+        self._stage_slots_ver: Dict[int, int] = defaultdict(int)
+        self._cand_cache_r: Dict[int, tuple] = {}
+        self._cand_cache_c: Dict[int, tuple] = {}
         # sorted per-stage membership lists: _stage_alive[s] == the sorted
         # alive relay ids of stage s (== any member's known_same + itself);
         # _stage_with_segs[s] == the subset that currently carries >=1
         # segment.  They let the refinement scans take their candidate
         # lists in O(stage) slicing instead of sorted(genexpr) per call.
+        # The *_ver counters key cached ndarray views of both lists.
         self._stage_alive: Dict[int, List[int]] = defaultdict(list)
         self._stage_with_segs: Dict[int, List[int]] = defaultdict(list)
+        self._alive_ver: Dict[int, int] = defaultdict(int)
+        self._wseg_ver: Dict[int, int] = defaultdict(int)
+        self._alive_arr_cache: Dict[int, tuple] = {}
+        self._wseg_arr_cache: Dict[int, tuple] = {}
+        self._order_cache: Optional[np.ndarray] = None   # sorted proto ids
+        # dense advertised-cost vectors: _adv_cost[dn][j] == the cheapest
+        # cost-to-sink j advertises toward dn (+inf when none), kept
+        # current by _adv_update at every advertisement mutation; and
+        # per-node known_next snapshots in set-iteration order (the
+        # reference's scan order), used to vectorize _best_advertiser.
+        self._adv_cost: Dict[int, np.ndarray] = {}
+        self._known_arr: Dict[int, np.ndarray] = {}
         self._data_ids: List[int] = [n.id for n in net.data_nodes()]
         self._data_set: Set[int] = set(self._data_ids)
+        n_ids = (max(net.nodes) + 1) if net.nodes else 0
+        self._is_data_arr = np.zeros(n_ids, bool)
+        for d in self._data_ids:
+            self._is_data_arr[d] = True
         self._cml: Optional[List[List[float]]] = None
         self._cml_ver: Optional[int] = None
         self._refresh_cost_source()
@@ -211,11 +287,12 @@ class GWTFProtocol:
             self._cml = self.net.cost_matrix().tolist()
             self._cm_np = self.net.cost_matrix()
             self._cml_ver = ver
-            # cost changes invalidate every memoised refinement scan
+            # cost changes invalidate every memoised refinement scan and
+            # the candidate tables' cached edge costs
             self._memo_change.clear()
             self._memo_redirect.clear()
-            self._change_pairs.clear()
-            self._redirect_triples.clear()
+            self._cand_cache_r.clear()
+            self._cand_cache_c.clear()
 
     def d(self, i: int, j: int) -> float:
         return self._cml[i][j]
@@ -271,6 +348,104 @@ class GWTFProtocol:
     def _touch_down(self, p: ProtoNode, data_node: int):
         if p.stage >= 0:
             self._epoch_down[(p.stage, data_node)] += 1
+            self._epoch_dn[p.stage] += 1
+
+    # -- segment slot store (see module docstring) ----------------------
+    def _slot_alloc(self) -> int:
+        if self._seg_free:
+            return self._seg_free.pop()
+        if self._seg_top == len(self._seg_owner):
+            new = 2 * len(self._seg_owner)
+            for name in ("_seg_owner", "_seg_up", "_seg_down",
+                         "_seg_dnode", "_seg_ord"):
+                old = getattr(self, name)
+                arr = np.full(new, -1, np.int64) if name != "_seg_ord" \
+                    else np.zeros(new, np.int64)
+                arr[:self._seg_top] = old[:self._seg_top]
+                setattr(self, name, arr)
+            self._seg_objs.extend([None] * (new - len(self._seg_objs)))
+        slot = self._seg_top
+        self._seg_top += 1
+        return slot
+
+    def _slot_add(self, p: ProtoNode, seg: Segment):
+        slot = self._slot_alloc()
+        seg._slot = slot
+        self._seg_owner[slot] = p.node_id
+        self._seg_up[slot] = -1 if seg.upstream is None else seg.upstream
+        self._seg_down[slot] = -1 if seg.downstream is None else seg.downstream
+        self._seg_dnode[slot] = seg.data_node
+        self._seg_ord[slot] = seg._order
+        self._seg_objs[slot] = seg
+        stage = p.stage
+        buf = self._stage_slot_buf.get(stage)
+        n = self._stage_slot_n[stage]
+        if buf is None or n == len(buf):
+            grown = np.empty(max(64, 2 * (0 if buf is None else len(buf))),
+                             np.intp)
+            if buf is not None:
+                grown[:n] = buf[:n]
+            buf = self._stage_slot_buf[stage] = grown
+        buf[n] = slot
+        self._stage_slot_n[stage] = n + 1
+        self._stage_slots_ver[stage] += 1
+
+    def _slot_drop(self, p: ProtoNode, seg: Segment):
+        slot = getattr(seg, "_slot", -1)
+        if slot < 0:
+            return
+        self._seg_owner[slot] = -1           # tombstone
+        self._seg_objs[slot] = None
+        seg._slot = -1
+        stage = p.stage
+        dead = self._stage_dead[stage] + 1
+        n = self._stage_slot_n[stage]
+        if dead > 16 and 2 * dead > n:
+            buf = self._stage_slot_buf[stage]
+            used = buf[:n]
+            live = used[self._seg_owner[used] >= 0]
+            self._seg_free.extend(used[self._seg_owner[used] < 0].tolist())
+            k = len(live)
+            buf[:k] = live
+            self._stage_slot_n[stage] = k
+            self._stage_dead[stage] = 0
+            self._stage_slots_ver[stage] += 1
+        else:
+            self._stage_dead[stage] = dead
+
+    def _stage_slot_arr(self, stage: int) -> np.ndarray:
+        buf = self._stage_slot_buf.get(stage)
+        if buf is None:
+            return _EMPTY_SLOTS
+        return buf[:self._stage_slot_n[stage]]
+
+    def _alive_arr(self, stage: int) -> np.ndarray:
+        ver = self._alive_ver[stage]
+        cached = self._alive_arr_cache.get(stage)
+        if cached is None or cached[0] != ver:
+            cached = (ver, np.asarray(self._stage_alive[stage], np.int64))
+            self._alive_arr_cache[stage] = cached
+        return cached[1]
+
+    def _wseg_arr(self, stage: int) -> np.ndarray:
+        ver = self._wseg_ver[stage]
+        cached = self._wseg_arr_cache.get(stage)
+        if cached is None or cached[0] != ver:
+            cached = (ver, np.asarray(self._stage_with_segs[stage], np.int64))
+            self._wseg_arr_cache[stage] = cached
+        return cached[1]
+
+    def _adv_update(self, j: int, dn: int):
+        """Refresh the dense advertised-cost entry for (j, dn)."""
+        arr = self._adv_cost.get(dn)
+        if arr is None:
+            arr = self._adv_cost[dn] = np.full(len(self._is_data_arr),
+                                               np.inf)
+        idx = self._unpaired.get((j, dn))
+        if idx:
+            arr[j] = min(s.cost_to_sink for s in idx.values())
+        else:
+            arr[j] = np.inf
 
     def _index_add(self, p: ProtoNode, seg: Segment):
         key = (p.node_id, seg.data_node)
@@ -280,6 +455,7 @@ class GWTFProtocol:
         if not idx:
             self._advertisers.setdefault(seg.data_node, set()).add(p.node_id)
         idx[seg._order] = seg
+        self._adv_update(p.node_id, seg.data_node)
 
     def _index_discard(self, p: ProtoNode, seg: Segment):
         key = (p.node_id, seg.data_node)
@@ -288,6 +464,7 @@ class GWTFProtocol:
             del idx[seg._order]
             if not idx:
                 self._advertisers[seg.data_node].discard(p.node_id)
+            self._adv_update(p.node_id, seg.data_node)
 
     def _append_segment(self, p: ProtoNode, seg: Segment):
         seg._order = next(self._order_counter)
@@ -299,6 +476,10 @@ class GWTFProtocol:
                 self._index_add(p, seg)
             if len(p.segments) == 1:
                 insort(self._stage_with_segs[p.stage], p.node_id)
+                self._wseg_ver[p.stage] += 1
+            self._slot_add(p, seg)
+        else:
+            seg._slot = -1
         if seg.downstream is None:
             p.n_down_unpaired += 1
             self._broken.add(p.node_id)
@@ -314,6 +495,8 @@ class GWTFProtocol:
                 self._index_discard(p, seg)
             if not p.segments:
                 self._stage_with_segs[p.stage].remove(p.node_id)
+                self._wseg_ver[p.stage] += 1
+            self._slot_drop(p, seg)
             # evict the dead segment's memo entry so the cache stays
             # bounded by the number of live segments
             self._memo_change.pop((p.node_id, seg._order), None)
@@ -334,6 +517,9 @@ class GWTFProtocol:
                 p.n_up_unpaired += 1
                 self._index_add(p, seg)
         seg.upstream = up
+        slot = getattr(seg, "_slot", -1)
+        if slot >= 0:
+            self._seg_up[slot] = -1 if up is None else up
         self._touch(p)
 
     def _set_downstream(self, p: ProtoNode, seg: Segment, down: Optional[int]):
@@ -345,6 +531,9 @@ class GWTFProtocol:
             p.n_down_unpaired += 1
             self._broken.add(p.node_id)
         seg.downstream = down
+        slot = getattr(seg, "_slot", -1)
+        if slot >= 0:
+            self._seg_down[slot] = -1 if down is None else down
         self._touch(p)
         self._touch_down(p, seg.data_node)
 
@@ -376,13 +565,27 @@ class GWTFProtocol:
     # ------------------------------------------------------------------
     # Request Flow
     # ------------------------------------------------------------------
+    def _known_arr_of(self, i: int) -> np.ndarray:
+        """``known_next`` snapshot in set-iteration order (the scan
+        order of the reference's loop); invalidated on membership
+        churn."""
+        arr = self._known_arr.get(i)
+        if arr is None:
+            known = self.protos[i].known_next
+            arr = np.fromiter(known, np.int64, len(known))
+            self._known_arr[i] = arr
+        return arr
+
     def _best_advertiser(self, i: int, data_node: int):
         """Cheapest known next-stage peer with an unpaired outflow toward
         ``data_node`` (or the sink itself), as (j, total, cost_to_sink).
 
-        Iterates ``known_next`` in set order with O(1) index rejections —
-        the strict ``<`` tie-breaking matches the reference's full scan
-        exactly.  Shared by _request_flow and _repair_downstream."""
+        When the sink itself is not in view (every stage but the last),
+        the scan is one vectorized argmin over the dense advertised-cost
+        vector in ``known_next`` set order — ``np.argmin``'s
+        first-minimum rule reproduces the reference loop's strict ``<``
+        tie-breaking exactly.  Otherwise it falls back to the scalar
+        scan.  Shared by _request_flow and _repair_downstream."""
         pi = self.protos[i]
         adv = self._advertisers.get(data_node)
         known = pi.known_next
@@ -390,6 +593,18 @@ class GWTFProtocol:
                 and (data_node not in known
                      or self._sink_slots[data_node] <= 0)):
             return None, None, None
+        if data_node not in known:
+            arr = self._adv_cost.get(data_node)
+            if arr is None:
+                return None, None, None
+            ks = self._known_arr_of(i)
+            totals = arr[ks] + self._cm_np[i, ks]
+            k = int(np.argmin(totals))
+            total = totals[k]
+            if total == np.inf:
+                return None, None, None
+            j = int(ks[k])
+            return j, float(total), float(arr[j])
         best_j, best_total, best_cts = None, None, None
         row = self._cml[i]
         data_set = self._data_set
@@ -438,96 +653,171 @@ class GWTFProtocol:
         return True
 
     # ------------------------------------------------------------------
-    # Vectorized frozen-regime prefilters.  Both answer "does any
-    # improving move exist?" from epoch-cached numpy views; they never
-    # decide *which* move — a positive answer falls through to the exact
-    # scalar scan, so outcomes and RNG consumption match the reference.
+    # Batched scan core.  A refinement scan visits a candidate list in
+    # rotation order (sorted peers, random start offset) and resolves
+    # the annealed accept/reject sequence.  The helpers below do that as
+    # array programs over the segment slot store; outcomes and RNG
+    # consumption are bit-identical to the scalar scans (strict_rng).
     # ------------------------------------------------------------------
-    def _change_possible(self, stage: int, dn: int, i: int,
-                         si_dn: int) -> bool:
-        key = (stage, dn)
-        ep = self._epoch_down[key]
-        cached = self._change_pairs.get(key)
-        if cached is None or cached[0] != ep:
-            owners: List[int] = []
-            downs: List[int] = []
-            data_set = self._data_set
-            for j in self._stage_with_segs[stage]:
-                for sj in self.protos[j].segments:
-                    d_j = sj.downstream
-                    if (sj.data_node == dn and d_j is not None
-                            and d_j not in data_set):
-                        owners.append(j)
-                        downs.append(d_j)
-            J = np.asarray(owners, np.intp)
-            D = np.asarray(downs, np.intp)
-            w = self._cm_np[J, D] if J.size else np.empty(0)
-            cached = (ep, J, D, w)
-            self._change_pairs[key] = cached
-        _, J, D, w = cached
-        if not J.size:
-            return False
-        cm = self._cm_np
-        a_cost = cm[i, si_dn]
-        if self.objective == "sum":
-            cur = a_cost + w
-            new = cm[i, D] + cm[J, si_dn]
-        else:
-            cur = np.maximum(a_cost, w)
-            new = np.maximum(cm[i, D], cm[J, si_dn])
-        mask = new < cur
-        mask &= D != si_dn
-        mask &= J != i
-        return bool(mask.any())
+    def _rotation_ranks(self, peers_arr: np.ndarray, self_id: int,
+                        u_rot: float, owners: np.ndarray):
+        """Visit rank of each candidate's owner under the rotation order
+        over ``peers_arr`` minus ``self_id``.  Returns (ranks, n); n == 0
+        means the scan has no peers at all."""
+        n_all = len(peers_arr)
+        pos_self = int(np.searchsorted(peers_arr, self_id))
+        present = pos_self < n_all and peers_arr[pos_self] == self_id
+        n = n_all - 1 if present else n_all
+        if n <= 0:
+            return None, 0
+        start = int(u_rot * n)
+        pos = np.searchsorted(peers_arr, owners)
+        if present:
+            pos = pos - (pos > pos_self)
+        rank = pos - start
+        rank[rank < 0] += n
+        return rank, n
 
-    def _redirect_possible(self, stage: int, m: int) -> bool:
-        ep = self._epoch[stage]
-        cached = self._redirect_triples.get(stage)
-        if cached is None or cached[0] != ep:
-            ups: List[int] = []
-            owners: List[int] = []
-            downs: List[int] = []
-            for b in self._stage_with_segs[stage]:
-                for sb in self.protos[b].segments:
-                    if sb.upstream is not None and sb.downstream is not None:
-                        ups.append(sb.upstream)
-                        owners.append(b)
-                        downs.append(sb.downstream)
-            A = np.asarray(ups, np.intp)
-            B = np.asarray(owners, np.intp)
-            C = np.asarray(downs, np.intp)
-            cur = (self._cm_np[A, B] + self._cm_np[B, C]) if A.size \
-                else np.empty(0)
-            cached = (ep, A, B, C, cur)
-            self._redirect_triples[stage] = cached
-        _, A, B, C, cur = cached
-        if not A.size:
-            return False
+    def _redirect_cands(self, stage: int):
+        """Epoch-cached Request Redirect candidate table of a stage,
+        gathered from the slot store: (slot, A=up, B=owner, C=down,
+        cur=d(A,B)+d(B,C), order stamp).  Any segment mutation in the
+        stage bumps its epoch and invalidates."""
+        key = (self._epoch[stage], self._stage_slots_ver[stage])
+        cached = self._cand_cache_r.get(stage)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        slots = self._stage_slot_arr(stage)
+        owner = self._seg_owner[slots]
+        up = self._seg_up[slots]
+        down = self._seg_down[slots]
+        vr = (owner >= 0) & (up >= 0) & (down >= 0)
+        sr = slots[vr]
+        Ar = up[vr]
+        Br = owner[vr]
+        Cr = down[vr]
         cm = self._cm_np
-        new = cm[A, m] + cm[m, C]
-        mask = new < cur
-        mask &= B != m
-        return bool(mask.any())
+        cur_r = cm[Ar, Br] + cm[Br, Cr] if sr.size else _EMPTY_F
+        data = (sr, Ar, Br, Cr, cur_r, self._seg_ord[sr])
+        self._cand_cache_r[stage] = (key, data)
+        return data
+
+    def _change_cands(self, stage: int):
+        """Epoch-cached Request Change candidate table of a stage:
+        (slot, J=owner, D=down [non-sink], data node, w=d(J,D), order
+        stamp).  Keyed on the downstream/membership epoch — upstream-
+        only pairings leave it valid."""
+        key = (self._epoch_dn[stage], self._stage_slots_ver[stage])
+        cached = self._cand_cache_c.get(stage)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        slots = self._stage_slot_arr(stage)
+        owner = self._seg_owner[slots]
+        down = self._seg_down[slots]
+        vc = (owner >= 0) & (down >= 0)
+        dc = down[vc]
+        keep = ~self._is_data_arr[dc]
+        sc = slots[vc][keep]
+        Jc = owner[vc][keep]
+        Dc = dc[keep]
+        dnc = self._seg_dnode[sc]
+        cm = self._cm_np
+        wc = cm[Jc, Dc] if sc.size else _EMPTY_F
+        data = (sc, Jc, Dc, dnc, wc, self._seg_ord[sc])
+        self._cand_cache_c[stage] = (key, data)
+        return data
+
+    def _batched_pick(self, cur: np.ndarray, new: np.ndarray,
+                      owners: np.ndarray, ords: np.ndarray,
+                      peers_arr: np.ndarray, self_id: int,
+                      u_rot: float) -> int:
+        """Resolve a scan over the candidate arrays.  Returns the index
+        (into cur/new) of the accepted candidate or -1, consuming
+        acceptance uniforms exactly as the scalar scan: one per
+        non-improving candidate visited before the accept (none when
+        frozen)."""
+        impr_u = new < cur
+        if self.T <= 1e-6:                       # frozen: no draws at all
+            # only the improving candidates matter; rank just them
+            if not impr_u.any():
+                return -1
+            sub = np.flatnonzero(impr_u)
+            rank, n = self._rotation_ranks(peers_arr, self_id, u_rot,
+                                           owners[sub])
+            if n <= 0:
+                return -1
+            k = np.lexsort((ords[sub], rank))[0]
+            self.T *= self.alpha
+            return int(sub[k])
+        rank, n = self._rotation_ranks(peers_arr, self_id, u_rot, owners)
+        if n <= 0:
+            return -1
+        order = np.lexsort((ords, rank))
+        cur_o = cur[order]
+        new_o = new[order]
+        impr = impr_u[order]
+        has_impr = bool(impr.any())
+        fi = int(np.argmax(impr)) if has_impr else len(order)
+        if fi and not self._can_rewind:
+            # no advance(): draw the prefix uniforms one at a time (the
+            # reference's exact consumption), deltas still vectorized
+            xs = np.minimum((cur_o[:fi] - new_o[:fi]) / self.T,
+                            0.0).tolist()
+            uniform = self.rng.uniform
+            for t, xv in enumerate(xs):
+                if math.exp(xv) > uniform(0.0, 1.0):
+                    self.T *= self.alpha
+                    return int(order[t])
+        elif fi:
+            # the non-improving prefix: one uniform each, in visit order.
+            # Sized draws produce the reference's exact scalar sequence;
+            # np.exp can differ from the reference's math.exp by ~1 ulp,
+            # so it only prefilters (with a conservative margin) and the
+            # first plausible accept onward is confirmed with math.exp.
+            u = self.rng.uniform(0.0, 1.0, size=fi)
+            x = np.minimum((cur_o[:fi] - new_o[:fi]) / self.T, 0.0)
+            maybe = u < np.exp(x) * (1.0 + 1e-12)
+            if maybe.any():
+                k0 = int(np.argmax(maybe))
+                xl = x[k0:].tolist()
+                ul = u[k0:].tolist()
+                for t, xv in enumerate(xl):
+                    if math.exp(xv) > ul[t]:
+                        a = k0 + t
+                        unused = fi - (a + 1)
+                        if unused:       # return unconsumed draws
+                            bg = self.rng.bit_generator
+                            st = bg.state
+                            bg.advance(-unused)
+                            # advance() zeroes the buffered 32-bit half
+                            # (has_uint32/uinteger) that bounded-integer
+                            # draws (e.g. the round-order shuffle) leave
+                            # behind; double draws never touch it, so
+                            # restore it to keep the full state
+                            # bit-identical to the scalar scan's.
+                            st2 = bg.state
+                            st2["has_uint32"] = st["has_uint32"]
+                            st2["uinteger"] = st["uinteger"]
+                            bg.state = st2
+                        self.T *= self.alpha
+                        return int(order[a])
+        if has_impr:
+            self.T *= self.alpha
+            return int(order[fi])
+        return -1
 
     # ------------------------------------------------------------------
     # Request Change (same-stage peer swap, annealed)
     # ------------------------------------------------------------------
-    def _request_change(self, i: int) -> bool:
+    def _request_change(self, i: int, u_seg: float, u_rot: float) -> bool:
         pi = self.protos[i]
         if not pi.segments:
             return False
-        si = pi.segments[int(self.rng.integers(len(pi.segments)))]
-        if si.downstream is None or si.downstream in self._data_set:
+        si = pi.segments[int(u_seg * len(pi.segments))]
+        si_dn = si.downstream
+        if si_dn is None or si_dn in self._data_set:
             return False
-        # == sorted(j for j in pi.known_same if alive proto), via the
-        # maintained per-stage membership list.  Only the *length* is
-        # needed before the memo check, so the (O(stage)) exclusion copy
-        # is deferred past it — memo hits never build the list.
-        stage_lst = self._stage_alive[pi.stage]
-        k_self = bisect_left(stage_lst, i)
-        present = k_self < len(stage_lst) and stage_lst[k_self] == i
-        perm = self.rng.permutation(len(stage_lst) - 1 if present
-                                    else len(stage_lst))
+        stage = pi.stage
         frozen = self.T <= 1e-6
         if frozen:
             # T is frozen: worsening moves are rejected without drawing
@@ -537,15 +827,62 @@ class GWTFProtocol:
             # fruitless scan fruitful, so membership-only shrinkage
             # needs no bump).
             memo_key = (i, si._order)
-            epoch_now = self._epoch_down[(pi.stage, si.data_node)]
+            epoch_now = self._epoch_down[(stage, si.data_node)]
             if self._memo_change.get(memo_key) == epoch_now:
                 return False
-            if not self._change_possible(pi.stage, si.data_node, i,
-                                         si.downstream):
-                self._memo_change[memo_key] = epoch_now
-                return False
+        if self.strict_rng:
+            found = self._change_scan_scalar(i, pi, si, u_rot, frozen)
+        else:
+            found = self._change_scan_batched(i, pi, si, u_rot)
+        if found:
+            return True
+        if frozen:
+            self._memo_change[memo_key] = epoch_now
+        return False
+
+    def _change_scan_batched(self, i: int, pi: ProtoNode, si: Segment,
+                             u_rot: float) -> bool:
+        stage = pi.stage
+        sc, Jc, Dc, dnc, wc, ordc = self._change_cands(stage)
+        if not sc.size:
+            return False
+        si_dn = si.downstream
+        mask = (Jc != i) & (dnc == si.data_node) & (Dc != si_dn)
+        if not mask.any():
+            return False
+        idx = np.flatnonzero(mask)
+        J = Jc[idx]
+        D = Dc[idx]
+        w = wc[idx]
+        cm = self._cm_np
+        a_cost = cm[i, si_dn]
+        if self.objective == "sum":
+            cur = a_cost + w
+            new = cm[i, D] + cm[J, si_dn]
+        else:
+            cur = np.maximum(a_cost, w)
+            new = np.maximum(cm[i, D], cm[J, si_dn])
+        pick = self._batched_pick(cur, new, J, ordc[idx],
+                                  self._alive_arr(stage), i, u_rot)
+        if pick < 0:
+            return False
+        sj = self._seg_objs[sc[idx[pick]]]
+        self._apply_change(i, pi, si, int(J[pick]), sj)
+        return True
+
+    def _change_scan_scalar(self, i: int, pi: ProtoNode, si: Segment,
+                            u_rot: float, frozen: bool) -> bool:
+        """strict_rng compatibility scan: the reference's per-candidate
+        loop, visit order = sorted peers rotated by ``int(u_rot * n)``."""
+        stage_lst = self._stage_alive[pi.stage]
+        k_self = bisect_left(stage_lst, i)
+        present = k_self < len(stage_lst) and stage_lst[k_self] == i
         candidates = (stage_lst[:k_self] + stage_lst[k_self + 1:]
                       if present else stage_lst)
+        n = len(candidates)
+        if n == 0:
+            return False
+        start = int(u_rot * n)
         # invariants of the scan, hoisted: si's fields cannot change until
         # an accept (which returns immediately), and T cannot cross the
         # frozen threshold mid-scan for the same reason.
@@ -555,8 +892,9 @@ class GWTFProtocol:
         sum_obj = self.objective == "sum"
         a_cost = row_i[si_dn]
         protos = self.protos
-        for k in perm.tolist():
-            j = candidates[k]
+        for k in range(n):
+            t = start + k
+            j = candidates[t if t < n else t - n]
             pj = protos[j]
             row_j = self._cml[j]
             rj_si = row_j[si_dn]
@@ -580,19 +918,24 @@ class GWTFProtocol:
                     continue
                 elif not self._anneal_worsening(cur, new):
                     continue
-                # swap downstream peers; inform next-stage nodes
-                self._repoint_upstream(si_dn, old_up=i, new_up=j,
-                                       data_node=si_data)
-                self._repoint_upstream(sj_dn, old_up=j, new_up=i,
-                                       data_node=sj.data_node)
-                self._set_downstream(pi, si, sj_dn)
-                self._set_downstream(pj, sj, si_dn)
-                self._refresh_costs(i)
-                self._refresh_costs(j)
+                self._apply_change(i, pi, si, j, sj)
                 return True
-        if frozen:
-            self._memo_change[memo_key] = epoch_now
         return False
+
+    def _apply_change(self, i: int, pi: ProtoNode, si: Segment,
+                      j: int, sj: Segment):
+        """Accepted Request Change: swap downstream peers; inform the
+        next-stage nodes (identical mutation order to the reference)."""
+        pj = self.protos[j]
+        si_dn, sj_dn = si.downstream, sj.downstream
+        self._repoint_upstream(si_dn, old_up=i, new_up=j,
+                               data_node=si.data_node)
+        self._repoint_upstream(sj_dn, old_up=j, new_up=i,
+                               data_node=sj.data_node)
+        self._set_downstream(pi, si, sj_dn)
+        self._set_downstream(pj, sj, si_dn)
+        self._refresh_costs(i)
+        self._refresh_costs(j)
 
     def _repoint_upstream(self, downstream_id: int, *, old_up: int,
                           new_up: Optional[int], data_node: int):
@@ -607,33 +950,75 @@ class GWTFProtocol:
     # ------------------------------------------------------------------
     # Request Redirect (node substitution, annealed)
     # ------------------------------------------------------------------
-    def _request_redirect(self, m: int) -> bool:
+    def _request_redirect(self, m: int, u_rot: float) -> bool:
         """Spare node m offers to replace peer b on a chain a -> b -> c."""
         pm = self.protos[m]
-        if pm.free <= 0:
+        if pm.capacity <= len(pm.segments):      # == pm.free <= 0
             return False
-        # == sorted(j for j in pm.known_same if alive proto w/ segments);
-        # list construction deferred past the memo check (see
-        # _request_change)
+        stage = pm.stage
+        frozen = self.T <= 1e-6
+        if frozen:
+            epoch_now = self._epoch[stage]
+            if self._memo_redirect.get(m) == epoch_now:
+                return False
+        if self.strict_rng:
+            found = self._redirect_scan_scalar(m, pm, u_rot, frozen)
+        else:
+            found = self._redirect_scan_batched(m, pm, u_rot)
+        if found:
+            return True
+        if frozen:
+            self._memo_redirect[m] = epoch_now
+        return False
+
+    def _redirect_scan_batched(self, m: int, pm: ProtoNode,
+                               u_rot: float) -> bool:
+        stage = pm.stage
+        sr, Ar, Br, Cr, cur_r, ordr = self._redirect_cands(stage)
+        if not sr.size:
+            return False
+        cm = self._cm_np
+        mask = Br != m
+        if mask.all():
+            sl, A, B, C, cur, ords = sr, Ar, Br, Cr, cur_r, ordr
+        else:
+            if not mask.any():
+                return False
+            idx = np.flatnonzero(mask)
+            sl = sr[idx]
+            A = Ar[idx]
+            B = Br[idx]
+            C = Cr[idx]
+            cur = cur_r[idx]
+            ords = ordr[idx]
+        new = cm[A, m] + cm[m, C]
+        pick = self._batched_pick(cur, new, B, ords,
+                                  self._wseg_arr(stage), m, u_rot)
+        if pick < 0:
+            return False
+        sb = self._seg_objs[sl[pick]]
+        self._apply_redirect(m, pm, int(B[pick]), sb)
+        return True
+
+    def _redirect_scan_scalar(self, m: int, pm: ProtoNode, u_rot: float,
+                              frozen: bool) -> bool:
+        """strict_rng compatibility scan (rotation visit order)."""
+        # == sorted(j for j in pm.known_same if alive proto w/ segments)
         stage_lst = self._stage_with_segs[pm.stage]
         k_self = bisect_left(stage_lst, m)
         present = k_self < len(stage_lst) and stage_lst[k_self] == m
-        perm = self.rng.permutation(len(stage_lst) - 1 if present
-                                    else len(stage_lst))
-        frozen = self.T <= 1e-6
-        if frozen:
-            if self._memo_redirect.get(m) == self._epoch[pm.stage]:
-                return False
-            if not self._redirect_possible(pm.stage, m):
-                self._memo_redirect[m] = self._epoch[pm.stage]
-                return False
         peers = (stage_lst[:k_self] + stage_lst[k_self + 1:]
                  if present else stage_lst)
+        n = len(peers)
+        if n == 0:
+            return False
+        start = int(u_rot * n)
         row_m = self._cml[m]
         cml = self._cml
         protos = self.protos
-        for k in perm.tolist():
-            b = peers[k]
+        for k in range(n):
+            t = start + k
+            b = peers[t if t < n else t - n]
             pb = protos[b]
             row_b = cml[b]
             for sb in pb.segments:
@@ -651,27 +1036,32 @@ class GWTFProtocol:
                     continue
                 elif not self._anneal_worsening(cur, new):
                     continue
-                # b approves: m takes over the segment
-                self._remove_segment(pb, sb)
-                seg = dataclasses.replace(
-                    sb, cost_to_sink=sb.cost_to_sink
-                    - row_b[c] + row_m[c])
-                self._append_segment(pm, seg)
-                # upstream a (may be the data node) and downstream c repoint
-                pa = protos.get(a)
-                if pa is not None:
-                    for s in pa.segments:
-                        if s.downstream == b and s.data_node == sb.data_node:
-                            self._set_downstream(pa, s, m)
-                            break
-                if c not in self._data_set:
-                    self._repoint_upstream(c, old_up=b, new_up=m,
-                                           data_node=sb.data_node)
-                self._refresh_costs(m)
+                self._apply_redirect(m, pm, b, sb)
                 return True
-        if frozen:
-            self._memo_redirect[m] = self._epoch[pm.stage]
         return False
+
+    def _apply_redirect(self, m: int, pm: ProtoNode, b: int, sb: Segment):
+        """Accepted Request Redirect: b approves, m takes over the
+        segment (identical mutation order to the reference)."""
+        pb = self.protos[b]
+        a, c = sb.upstream, sb.downstream
+        row_m = self._cml[m]
+        row_b = self._cml[b]
+        self._remove_segment(pb, sb)
+        seg = dataclasses.replace(
+            sb, cost_to_sink=sb.cost_to_sink - row_b[c] + row_m[c])
+        self._append_segment(pm, seg)
+        # upstream a (may be the data node) and downstream c repoint
+        pa = self.protos.get(a)
+        if pa is not None:
+            for s in pa.segments:
+                if s.downstream == b and s.data_node == sb.data_node:
+                    self._set_downstream(pa, s, m)
+                    break
+        if c not in self._data_set:
+            self._repoint_upstream(c, old_up=b, new_up=m,
+                                   data_node=sb.data_node)
+        self._refresh_costs(m)
 
     def _anneal_accept(self, cur: float, new: float) -> bool:
         """Semantic definition of annealed acceptance.  The hot scans in
@@ -696,37 +1086,68 @@ class GWTFProtocol:
     def _refresh_costs(self, i: int):
         """Recompute cost_to_sink for node i and propagate to feeders.
 
-        Iterative bounded-depth walk (upstream chains strictly decrease
-        in stage, so depth <= num_stages + 1); replaces the reference's
-        recursion with identical resulting values.
+        Level-order propagation with the shared message-passing rules
+        (see ``ReferenceGWTFProtocol._refresh_costs``): each wave node
+        recomputes all its segments once, and only *changed* values are
+        forwarded to the segment's feeder.  ``pair_map`` carries the
+        previous level's just-recomputed (node, upstream, data_node) ->
+        cost entries so the feeder resolves its downstream pairing in
+        O(1); pairings outside the wave fall back to the reference's
+        segment-list scan (first match wins) and read the same values.
         """
         data_set = self._data_set
         cml = self._cml
-        max_depth = self.net.num_stages + 2
-        stack = [(i, 0)]
-        while stack:
-            nid, depth = stack.pop()
-            pi = self.protos.get(nid)
-            if pi is None:
-                continue
-            row = cml[nid]
-            for s in pi.segments:
-                if s.downstream is None:
+        protos = self.protos
+        level = [i]
+        seen = {i}
+        pair_map: Dict[Tuple[int, int, int], float] = {}
+        while level:
+            nxt: List[int] = []
+            new_pairs: Dict[Tuple[int, int, int], float] = {}
+            setpair = new_pairs.setdefault
+            for nid in level:
+                pi = protos.get(nid)
+                if pi is None:
                     continue
-                down_cost = 0.0
-                if s.downstream not in data_set:
-                    pd = self.protos.get(s.downstream)
-                    if pd is not None:
-                        for sd in pd.segments:
-                            if sd.upstream == nid and sd.data_node == s.data_node:
-                                down_cost = sd.cost_to_sink
-                                break
-                s.cost_to_sink = down_cost + row[s.downstream]
-            if depth + 1 >= max_depth:
-                continue
-            for s in pi.segments:
-                if s.upstream is not None and s.upstream not in data_set:
-                    stack.append((s.upstream, depth + 1))
+                row = cml[nid]
+                for s in pi.segments:
+                    sd = s.downstream
+                    changed = False
+                    if sd is not None:
+                        if sd in data_set:
+                            down_cost = 0.0
+                        else:
+                            down_cost = pair_map.get((sd, nid, s.data_node))
+                            if down_cost is None:
+                                down_cost = 0.0
+                                pd = protos.get(sd)
+                                if pd is not None:
+                                    for seg_d in pd.segments:
+                                        if (seg_d.upstream == nid
+                                                and seg_d.data_node
+                                                == s.data_node):
+                                            down_cost = seg_d.cost_to_sink
+                                            break
+                        val = down_cost + row[sd]
+                        if val != s.cost_to_sink:
+                            s.cost_to_sink = val
+                            changed = True
+                            if s.upstream is None:
+                                # an advertised (unpaired-outflow) cost
+                                # moved: keep the dense vector current
+                                self._adv_update(nid, s.data_node)
+                    su = s.upstream
+                    if su is not None and su not in data_set:
+                        # record every pairing (first match in segment-
+                        # list order wins, exactly like the scan — an
+                        # earlier unchanged or unpaired-downstream
+                        # segment must shadow a later changed one)
+                        setpair((nid, su, s.data_node), s.cost_to_sink)
+                        if changed and su not in seen:
+                            seen.add(su)
+                            nxt.append(su)
+            level = nxt
+            pair_map = new_pairs
 
     # ------------------------------------------------------------------
     # Round driver
@@ -735,22 +1156,53 @@ class GWTFProtocol:
         """One synchronous protocol round; returns number of state changes."""
         self._refresh_cost_source()
         changes = 0
-        order = np.asarray(sorted(self.protos))
+        if self._order_cache is None:
+            self._order_cache = np.asarray(sorted(self.protos))
+        order = self._order_cache.copy()
         self.rng.shuffle(order)
+        # the round's RNG block (shared discipline with the reference):
+        # row k = (source rotation, segment choice, change rotation,
+        # redirect rotation) for node order[k]; unused slots unread.
+        block = self.rng.random((len(order), 4))
         data_set = self._data_set
-        for i in order.tolist():
-            pi = self.protos[i]
+        # liveness is static within a round: hoist the alive source list
+        # the per-node rotations index into
+        nodes = self.net.nodes
+        alive_dns = [d for d in self._data_ids if nodes[d].alive]
+        ndns = len(alive_dns)
+        refine = self.refine
+        protos = self.protos
+        broken = self._broken
+        adv_get = self._advertisers.get
+        sink_slots = self._sink_slots
+        request_flow = self._request_flow
+        request_change = self._request_change
+        request_redirect = self._request_redirect
+        for k, i in enumerate(order.tolist()):
+            pi = protos[i]
             if not pi.alive or i in data_set:
                 continue
             if (pi.capacity > len(pi.segments)
                     and pi.n_up_unpaired == 0 and pi.n_down_unpaired == 0):
-                for dn in self._known_data_nodes(i):
-                    if pi.free <= 0:
+                if ndns > 1:
+                    r = int(block[k, 0] * ndns)
+                    dns = alive_dns[r:] + alive_dns[:r]
+                else:
+                    dns = alive_dns
+                known = pi.known_next
+                for dn in dns:
+                    if pi.capacity <= len(pi.segments):
                         break
-                    if self._request_flow(i, dn):
+                    # inline fast-fail of _best_advertiser: no known
+                    # advertiser and no reachable free sink slot
+                    adv = adv_get(dn)
+                    if ((not adv or adv.isdisjoint(known))
+                            and (dn not in known or sink_slots[dn] <= 0)):
+                        continue
+                    if request_flow(i, dn):
                         changes += 1
             # nodes with unpaired inflow (downstream lost) re-pair downstream
-            if i in self._broken:
+            if i in broken:
                 for s in list(pi.segments):
                     if s.downstream is None:
                         if self._repair_downstream(i, s):
@@ -766,10 +1218,10 @@ class GWTFProtocol:
                                 changes += 1
             # annealed refinement runs for every relay, every round
             # (paper Sec. V-C)
-            if self.refine:
-                if self._request_change(i):
+            if refine:
+                if request_change(i, block[k, 1], block[k, 2]):
                     changes += 1
-                if self._request_redirect(i):
+                if request_redirect(i, block[k, 3]):
                     changes += 1
         # data nodes also repair source-side segments whose downstream died
         for dn_id in self._data_ids:
@@ -784,11 +1236,6 @@ class GWTFProtocol:
         changes += self._connect_sources()
         return changes
 
-    def _known_data_nodes(self, i: int) -> List[int]:
-        dns = [d for d in self._data_ids if self.net.nodes[d].alive]
-        self.rng.shuffle(dns)          # avoid fixed-priority source bias
-        return dns
-
     def _repair_downstream(self, i: int, seg: Segment) -> bool:
         """Re-pair a segment whose downstream crashed (unpaired inflow)."""
         pi = self.protos[i]
@@ -802,12 +1249,16 @@ class GWTFProtocol:
             self._sink_slots[best_j] -= 1
             self._set_downstream(pi, seg, best_j)
             seg.cost_to_sink = row[best_j]
+            if seg.upstream is None:
+                self._adv_update(i, seg.data_node)
             return True
         for s in self._unpaired_in_list_order(best_j, seg.data_node):
             if abs(s.cost_to_sink - best_cts) < 1e-9:
                 self._set_upstream(self.protos[best_j], s, i)
                 self._set_downstream(pi, seg, best_j)
                 seg.cost_to_sink = s.cost_to_sink + row[best_j]
+                if seg.upstream is None:
+                    self._adv_update(i, seg.data_node)
                 return True
         return False
 
@@ -984,20 +1435,26 @@ class GWTFProtocol:
         p = self.protos.pop(nid, None)
         if p is None:
             return
+        self._order_cache = None
+        self._known_arr.clear()     # membership views change below
         if nid not in self._data_set:
             for seg in p.segments:
                 if seg.upstream is None:
                     self._index_discard(p, seg)
                 self._memo_change.pop((nid, seg._order), None)
+                self._slot_drop(p, seg)
             self._memo_redirect.pop(nid, None)
             if p.stage >= 0:
                 self._epoch[p.stage] += 1
+                self._epoch_dn[p.stage] += 1
                 alive = self._stage_alive[p.stage]
                 k = bisect_left(alive, nid)
                 if k < len(alive) and alive[k] == nid:
                     del alive[k]
+                    self._alive_ver[p.stage] += 1
                 if p.segments:
                     self._stage_with_segs[p.stage].remove(nid)
+                    self._wseg_ver[p.stage] += 1
         self._broken.discard(nid)
         for other in self.protos.values():
             other.known_next.discard(nid)
@@ -1026,9 +1483,21 @@ class GWTFProtocol:
             p.known_next = {m.id for m in self.net.stage_nodes(node.stage + 1)}
         p.known_same = {m.id for m in self.net.stage_nodes(node.stage)} - {node.id}
         self.protos[node.id] = p
+        self._order_cache = None
+        self._known_arr.clear()     # membership views change below
+        if node.id >= len(self._is_data_arr):
+            new_n = max(node.id + 1, 2 * len(self._is_data_arr))
+            grown = np.zeros(new_n, bool)
+            grown[:len(self._is_data_arr)] = self._is_data_arr
+            self._is_data_arr = grown
+            for dn, arr in list(self._adv_cost.items()):
+                big = np.full(new_n, np.inf)
+                big[:len(arr)] = arr
+                self._adv_cost[dn] = big
         if 0 <= node.stage:
             self._epoch[node.stage] += 1
             insort(self._stage_alive[node.stage], node.id)
+            self._alive_ver[node.stage] += 1
         for other in self.protos.values():
             if other.node_id == node.id:
                 continue

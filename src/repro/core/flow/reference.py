@@ -9,11 +9,21 @@ optimized engine:
   annealed refinement effectively never executed; here (and in the
   optimized engine) they run once per relay per round as the paper
   specifies (Sec. V-C);
-* the refinement sampling uses cheap RNG primitives
-  (``rng.integers`` for the segment choice, ``sorted`` candidates +
-  ``rng.permutation`` for the visit order, ndarray ``rng.shuffle`` for
-  the round order) so the optimized engine can reproduce the exact same
-  stream without paying object-array conversion costs.
+* the refinement sampling uses a *batched per-round RNG discipline*: a
+  round draws ``rng.shuffle`` for the node order and then ONE uniform
+  block ``rng.random((len(order), 4))`` whose row ``k`` holds the four
+  variates node ``order[k]`` may need this round — source polling
+  rotation, refinement segment choice, and the Request Change / Request
+  Redirect visit-order rotations (candidate lists are visited in sorted
+  order starting at a random offset, ``int(u * n)``).  Unused slots are
+  simply not read, so the stream position after a round is a pure
+  function of the membership size — which is what lets the optimized
+  engine vectorize whole scans without perturbing the stream.  The only
+  draws made *inside* a scan are the annealed-acceptance uniforms, one
+  per non-improving candidate visited while T > 1e-6, taken from the
+  same stream in visit order (``numpy`` sized draws produce the
+  identical sequence, so the optimized engine may draw them as one
+  block).
 
 Every query here is a linear scan (O(peers x segments) per round) and
 ``_refresh_costs`` is recursive — this is intentionally the *slow but
@@ -149,18 +159,20 @@ class ReferenceGWTFProtocol:
     # ------------------------------------------------------------------
     # Request Change (same-stage peer swap, annealed)
     # ------------------------------------------------------------------
-    def _request_change(self, i: int) -> bool:
+    def _request_change(self, i: int, u_seg: float, u_rot: float) -> bool:
         pi = self.protos[i]
         if not pi.segments:
             return False
-        si = pi.segments[int(self.rng.integers(len(pi.segments)))]
+        si = pi.segments[int(u_seg * len(pi.segments))]
         if si.downstream is None or self.net.nodes[si.downstream].is_data:
             return False
         candidates = sorted(j for j in pi.known_same
                             if j in self.protos and self.protos[j].alive)
-        perm = self.rng.permutation(len(candidates))
-        for k in perm.tolist():
-            j = candidates[k]
+        n = len(candidates)
+        start = int(u_rot * n) if n else 0
+        for k in range(n):
+            t = start + k
+            j = candidates[t if t < n else t - n]
             pj = self.protos[j]
             for sj in pj.segments:
                 if (sj.data_node != si.data_node or sj.downstream is None
@@ -199,7 +211,7 @@ class ReferenceGWTFProtocol:
     # ------------------------------------------------------------------
     # Request Redirect (node substitution, annealed)
     # ------------------------------------------------------------------
-    def _request_redirect(self, m: int) -> bool:
+    def _request_redirect(self, m: int, u_rot: float) -> bool:
         """Spare node m offers to replace peer b on a chain a -> b -> c."""
         pm = self.protos[m]
         if pm.free <= 0:
@@ -207,9 +219,11 @@ class ReferenceGWTFProtocol:
         peers = sorted(j for j in pm.known_same
                        if j in self.protos and self.protos[j].alive
                        and self.protos[j].segments)
-        perm = self.rng.permutation(len(peers))
-        for k in perm.tolist():
-            b = peers[k]
+        n = len(peers)
+        start = int(u_rot * n) if n else 0
+        for k in range(n):
+            t = start + k
+            b = peers[t if t < n else t - n]
             pb = self.protos[b]
             for sb in pb.segments:
                 if sb.upstream is None or sb.downstream is None:
@@ -251,25 +265,43 @@ class ReferenceGWTFProtocol:
         return False
 
     def _refresh_costs(self, i: int):
-        """Recompute cost_to_sink for node i and broadcast upstream."""
-        pi = self.protos.get(i)
-        if pi is None:
-            return
-        for s in pi.segments:
-            if s.downstream is None:
-                continue
-            down_cost = 0.0
-            pd = self.protos.get(s.downstream)
-            if pd is not None and not self.net.nodes[s.downstream].is_data:
-                for sd in pd.segments:
-                    if sd.upstream == i and sd.data_node == s.data_node:
-                        down_cost = sd.cost_to_sink
-                        break
-            s.cost_to_sink = down_cost + self.d(i, s.downstream)
-        # propagate to feeders (bounded recursion: stage count)
-        for s in pi.segments:
-            if s.upstream is not None and not self.net.nodes[s.upstream].is_data:
-                self._refresh_costs(s.upstream)
+        """Recompute cost_to_sink for node i and broadcast upstream.
+
+        Level-order (stage-by-stage) propagation with two message-passing
+        rules shared with the optimized engine: a node visited once per
+        wave recomputes *all* its segments, and a cost update is
+        forwarded to a segment's feeder only if recomputation *changed*
+        that segment's value (a no-op advertisement is not sent).
+        """
+        level = [i]
+        seen = {i}
+        while level:
+            nxt: List[int] = []
+            for nid in level:
+                pi = self.protos.get(nid)
+                if pi is None:
+                    continue
+                for s in pi.segments:
+                    if s.downstream is None:
+                        continue
+                    down_cost = 0.0
+                    pd = self.protos.get(s.downstream)
+                    if (pd is not None
+                            and not self.net.nodes[s.downstream].is_data):
+                        for sd in pd.segments:
+                            if (sd.upstream == nid
+                                    and sd.data_node == s.data_node):
+                                down_cost = sd.cost_to_sink
+                                break
+                    val = down_cost + self.d(nid, s.downstream)
+                    if val != s.cost_to_sink:
+                        s.cost_to_sink = val
+                        up = s.upstream
+                        if (up is not None and up not in seen
+                                and not self.net.nodes[up].is_data):
+                            seen.add(up)
+                            nxt.append(up)
+            level = nxt
 
     # ------------------------------------------------------------------
     # Round driver
@@ -279,12 +311,16 @@ class ReferenceGWTFProtocol:
         changes = 0
         order = np.asarray(sorted(self.protos))
         self.rng.shuffle(order)
-        for i in order.tolist():
+        # the round's RNG block: row k = (source rotation, segment choice,
+        # change rotation, redirect rotation) for node order[k].  Drawn
+        # unconditionally so the stream position is decision-independent.
+        block = self.rng.random((len(order), 4))
+        for k, i in enumerate(order.tolist()):
             pi = self.protos[i]
             if not pi.alive or self.net.nodes[i].is_data:
                 continue
             if pi.free > 0 and pi.stable():
-                for dn in self._known_data_nodes(i):
+                for dn in self._known_data_nodes(i, block[k, 0]):
                     if pi.free <= 0:
                         break
                     if self._request_flow(i, dn):
@@ -306,9 +342,9 @@ class ReferenceGWTFProtocol:
             # annealed refinement runs for every relay, every round
             # (paper Sec. V-C)
             if self.refine:
-                if self._request_change(i):
+                if self._request_change(i, block[k, 1], block[k, 2]):
                     changes += 1
-                if self._request_redirect(i):
+                if self._request_redirect(i, block[k, 3]):
                     changes += 1
         # data nodes also repair source-side segments whose downstream died
         for dn in self.net.data_nodes():
@@ -323,9 +359,13 @@ class ReferenceGWTFProtocol:
         changes += self._connect_sources()
         return changes
 
-    def _known_data_nodes(self, i: int) -> List[int]:
+    def _known_data_nodes(self, i: int, u_rot: float) -> List[int]:
+        # rotation from a random offset: avoids fixed-priority source
+        # bias without a per-node shuffle draw
         dns = [n.id for n in self.net.data_nodes() if n.alive]
-        self.rng.shuffle(dns)          # avoid fixed-priority source bias
+        if len(dns) > 1:
+            r = int(u_rot * len(dns))
+            dns = dns[r:] + dns[:r]
         return dns
 
     def _repair_downstream(self, i: int, seg: Segment) -> bool:

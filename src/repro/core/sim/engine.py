@@ -138,6 +138,10 @@ class SimulationEngine:
         self._tables_key = None          # (cost_version, size, N)
         self._comm_rows: List[List[float]] = []
         self._edge_rows: List[List[float]] = []
+        self._node_tables_key = None     # (cost_version, N)
+        self._fwd_t: List[float] = []
+        self._bwd_t: List[float] = []
+        self._caps: List[int] = []
 
     # ------------------------------------------------------------------
     # Batched per-iteration cost tables
@@ -179,22 +183,34 @@ class SimulationEngine:
         self._iteration += 1
 
         # ---- scheduler layer: build this iteration's paths ------------
+        plan_t0 = time.perf_counter()
         mbs = [_MB(next(self._mb_ids), path[0], list(path))
                for path in self.policy.plan()]
+        m.plan_seconds = time.perf_counter() - plan_t0
         m.launched = len(mbs)
 
         # ---- batched cost tables (resolved against the Eq. 1 caches) --
         N = (max(net.nodes) + 1) if net.nodes else 0
         comm, edge = self._cost_tables(N)
-        fwd_t = [0.05] * N
-        caps = [0] * N
+        # node-attribute tables: compute times and capacities move only
+        # with the cost epoch / membership size, so they are part of the
+        # reusable planning context; liveness is per-iteration state
+        nt_key = (net.cost_version, N)
+        if nt_key != self._node_tables_key:
+            fwd_t = [0.05] * N
+            caps = [0] * N
+            for nid, node in net.nodes.items():
+                fwd_t[nid] = max(0.05, node.compute_cost)
+                caps[nid] = node.capacity
+            bwd_mult = self.profile.bwd_mult
+            self._fwd_t = fwd_t
+            self._bwd_t = [c * bwd_mult for c in fwd_t]
+            self._caps = caps
+            self._node_tables_key = nt_key
+        fwd_t, bwd_t, caps = self._fwd_t, self._bwd_t, self._caps
         alive = [False] * N
         for nid, node in net.nodes.items():
-            fwd_t[nid] = max(0.05, node.compute_cost)
-            caps[nid] = node.capacity
             alive[nid] = node.alive
-        bwd_mult = self.profile.bwd_mult
-        bwd_t = [c * bwd_mult for c in fwd_t]
         INF = float("inf")
         crash = [INF] * N
         for nid, ct in crash_times.items():

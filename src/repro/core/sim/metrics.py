@@ -61,6 +61,8 @@ class IterationMetrics:
     # --- engine observability (new in the layered engine) -------------
     events: int = 0               # calendar pops processed this iteration
     loop_seconds: float = 0.0     # wall time spent inside the event loop
+    plan_seconds: float = 0.0     # wall time spent in policy.plan()
+    #   (planning vs event-loop split: surfaced by bench_sim --profile)
     reroutes: int = 0             # successful fault reroutes/restarts
     queue_depth_peak: int = 0     # max concurrent queued microbatches
     queue_enqueues: int = 0       # total capacity-wait enqueues

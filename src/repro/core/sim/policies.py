@@ -174,9 +174,13 @@ class SwarmPolicy:
 
     def plan(self) -> List[Sequence[int]]:
         paths: List[Sequence[int]] = []
+        # one routing context for the whole wave: membership cannot
+        # change while a plan is built, so the per-stage candidate
+        # tables and the cost matrix are derived once, not per hop
+        ctx = self.router.route_context()
         for dn in self.net.data_nodes():
             for _ in range(dn.capacity):
-                path = self.router.route(dn.id)
+                path = self.router.route(dn.id, ctx=ctx)
                 if path is not None:
                     paths.append(path)
         return paths

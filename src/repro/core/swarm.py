@@ -20,7 +20,17 @@ from repro.core.flow.graph import FlowNetwork
 
 
 class SwarmRouter:
-    """Greedy next-stage selection with optional stochastic tie-breaking."""
+    """Greedy next-stage selection with optional stochastic tie-breaking.
+
+    The per-hop cost scan is batched: candidate costs come from one row
+    gather of the cached dense Eq. 1 matrix instead of a per-pair
+    ``d()`` call per candidate, and a *routing context* (per-stage alive
+    membership snapshot + the matrix) can be shared across every path
+    of a planning wave — membership cannot change while a plan is being
+    built, so ``SwarmPolicy.plan`` derives it once instead of re-scanning
+    the node table per hop.  Results (and the RNG stream of stochastic
+    tie-breaking) are identical to the scalar scan's.
+    """
 
     def __init__(self, net: FlowNetwork, *,
                  cost_matrix: Optional[np.ndarray] = None,
@@ -30,24 +40,45 @@ class SwarmRouter:
         self.cost_matrix = cost_matrix
         self.stochastic = stochastic
         self.rng = rng or np.random.default_rng(0)
+        self._cm: Optional[np.ndarray] = None
 
     def d(self, i: int, j: int) -> float:
         if self.cost_matrix is not None:
             return float(self.cost_matrix[i, j])
         return self.net.edge_cost(i, j)
 
+    def _matrix(self) -> np.ndarray:
+        if self.cost_matrix is not None:
+            if self._cm is None:
+                self._cm = np.asarray(self.cost_matrix, np.float64)
+            return self._cm
+        return self.net.cost_matrix()    # cached by the network
+
+    def route_context(self) -> tuple:
+        """Snapshot (cost matrix, per-stage alive candidate ids) for one
+        planning wave."""
+        return (self._matrix(),
+                [[n.id for n in self.net.stage_nodes(s)]
+                 for s in range(self.net.num_stages)])
+
     def next_hop(self, current: int, next_stage: int, data_node: int,
-                 exclude: Optional[set] = None) -> Optional[int]:
+                 exclude: Optional[set] = None,
+                 ctx: Optional[tuple] = None) -> Optional[int]:
         """Greedy: closest alive node of the next stage (or the data node
         when the pipeline is done).  ``exclude`` = peers already timed out."""
-        exclude = exclude or set()
         if next_stage >= self.net.num_stages:
             return data_node if self.net.nodes[data_node].alive else None
-        cands = [n.id for n in self.net.stage_nodes(next_stage)
-                 if n.id not in exclude]
+        if ctx is not None:
+            cands = ctx[1][next_stage]
+            cm = ctx[0]
+        else:
+            cands = [n.id for n in self.net.stage_nodes(next_stage)]
+            cm = self._matrix()
+        if exclude:
+            cands = [j for j in cands if j not in exclude]
         if not cands:
             return None
-        costs = np.array([self.d(current, j) for j in cands])
+        costs = cm[current][cands]
         if self.stochastic:
             # SWARM prioritises faster peers stochastically
             w = 1.0 / np.maximum(costs, 1e-9)
@@ -55,12 +86,15 @@ class SwarmRouter:
             return int(self.rng.choice(cands, p=w))
         return int(cands[int(np.argmin(costs))])
 
-    def route(self, data_node: int) -> Optional[List[int]]:
+    def route(self, data_node: int,
+              ctx: Optional[tuple] = None) -> Optional[List[int]]:
         """A full greedy path for one microbatch (no capacity checks)."""
+        if ctx is None:
+            ctx = self.route_context()
         path = [data_node]
         cur = data_node
         for s in range(self.net.num_stages):
-            nxt = self.next_hop(cur, s, data_node)
+            nxt = self.next_hop(cur, s, data_node, ctx=ctx)
             if nxt is None:
                 return None
             path.append(nxt)
@@ -68,18 +102,21 @@ class SwarmRouter:
         path.append(data_node)
         return path
 
-    def route_with_capacity(self, data_node: int, used: dict
+    def route_with_capacity(self, data_node: int, used: dict,
+                            ctx: Optional[tuple] = None
                             ) -> Optional[List[int]]:
         """Greedy path that only uses nodes with remaining capacity
         (``used`` is a shared node_id -> consumed-slots dict).  This is
         the *feasible* SWARM baseline of Fig. 7 — a schedule that
         over-commits capacity is not executable."""
+        if ctx is None:
+            ctx = self.route_context()
         path = [data_node]
         cur = data_node
         for s in range(self.net.num_stages):
             full = {nid for nid, u in used.items()
                     if u >= self.net.nodes[nid].capacity}
-            nxt = self.next_hop(cur, s, data_node, exclude=full)
+            nxt = self.next_hop(cur, s, data_node, exclude=full, ctx=ctx)
             if nxt is None:
                 return None
             path.append(nxt)

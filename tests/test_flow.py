@@ -51,6 +51,99 @@ class TestMinCostFlow:
         min_stage = min(net.stage_capacity(s) for s in range(net.num_stages))
         assert plan.flow <= min_stage
 
+    def test_add_edges_matches_scalar_add_edge(self):
+        """Batched arc appends produce the identical arc table (ids,
+        reverse pairing, caps, costs) as the scalar loop."""
+        us = [0, 0, 1, 2]
+        vs = [1, 2, 3, 3]
+        caps = [1.0, 2.0, 3.0, 4.0]
+        costs = [5.0, 6.0, -7.0, 8.0]
+        a = MinCostFlow(4)
+        for u, v, c, w in zip(us, vs, caps, costs):
+            a.add_edge(u, v, c, w)
+        b = MinCostFlow(4)
+        fwd = b.add_edges(us, vs, caps, costs)
+        assert fwd.tolist() == [0, 2, 4, 6]
+        assert a.to.tolist() == b.to.tolist()
+        assert a.cap.tolist() == b.cap.tolist()
+        assert a.cost.tolist() == b.cost.tolist()
+        assert a.graph == b.graph
+
+
+class TestDialQueueMCMF:
+    """The integer-cost bucket-queue core must compute the exact same
+    optimum as the dense masked-argmin core."""
+
+    @staticmethod
+    def _random_graph(seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(4, 14))
+        edges = []
+        for _ in range(int(rng.integers(6, 40))):
+            u, v = (int(x) for x in rng.integers(0, n, 2))
+            if u == v:
+                continue
+            edges.append((u, v, float(rng.integers(1, 6)),
+                          float(rng.integers(0, 12))))
+        return n, edges
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 100_000))
+    def test_cost_optimality_equals_dense_on_random_graphs(self, seed):
+        n, edges = self._random_graph(seed)
+        dial = MinCostFlow(n)
+        dense = MinCostFlow(n)
+        for u, v, c, w in edges:
+            dial.add_edge(u, v, c, w)
+            dense.add_edge(u, v, c, w)
+        f1, c1 = dial.solve(0, n - 1, method="dial")
+        f2, c2 = dense.solve(0, n - 1, method="dense")
+        assert f1 == f2
+        assert c1 == pytest.approx(c2, abs=1e-9)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 100_000), cap=st.integers(1, 8))
+    def test_max_flow_cap_respected(self, seed, cap):
+        n, edges = self._random_graph(seed)
+        dial = MinCostFlow(n)
+        dense = MinCostFlow(n)
+        for u, v, c, w in edges:
+            dial.add_edge(u, v, c, w)
+            dense.add_edge(u, v, c, w)
+        f1, c1 = dial.solve(0, n - 1, max_flow=cap, method="dial")
+        f2, c2 = dense.solve(0, n - 1, max_flow=cap, method="dense")
+        assert f1 == f2 <= cap
+        assert c1 == pytest.approx(c2, abs=1e-9)
+
+    def test_auto_selects_dense_for_fractional_costs(self):
+        """Non-integer costs: auto must fall back to the dense core
+        (and produce its exact result); forcing dial raises."""
+        def build_mc():
+            mc = MinCostFlow(4)
+            mc.add_edge(0, 1, 1, 0.5)
+            mc.add_edge(0, 2, 1, 1.25)
+            mc.add_edge(1, 3, 1, 0.75)
+            mc.add_edge(2, 3, 1, 0.25)
+            return mc
+        auto = build_mc()
+        dense = build_mc()
+        fa, ca = auto.solve(0, 3)            # method="auto"
+        fd, cd = dense.solve(0, 3, method="dense")
+        assert (fa, ca) == (fd, cd)
+        with pytest.raises(ValueError):
+            build_mc().solve(0, 3, method="dial")
+
+    def test_training_flow_dial_matches_dense(self):
+        """End-to-end: the layered training graph (integer d_ij) solved
+        by both cores yields the identical (flow, cost) optimum."""
+        net, cost = build(seed=7, stages=5, relays=5, source_cap=8)
+        p_auto = solve_training_flow(net, cost_matrix=cost)
+        net2, cost2 = build(seed=7, stages=5, relays=5, source_cap=8)
+        p_dense = solve_training_flow(net2, cost_matrix=cost2,
+                                      method="dense")
+        assert p_auto.flow == p_dense.flow
+        assert p_auto.cost == pytest.approx(p_dense.cost, abs=1e-9)
+
 
 # ---------------------------------------------------------------------------
 # Decentralized protocol

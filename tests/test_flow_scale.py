@@ -114,6 +114,92 @@ class TestProtocolEquivalence:
             ref.run(60)
             assert_equivalent(opt, ref, f"geo seed {seed}")
 
+    @pytest.mark.parametrize("relays,stages", [(120, 6), (300, 10)])
+    def test_batched_mode_flow_equality_at_scale(self, relays, stages):
+        """The default batched annealing engine is gated on
+        flow-equality: identical final flows and total cost vs the
+        scalar reference, at bench-style relay counts."""
+        for seed in range(2):
+            s = dict(sources=2, relays=relays, stages=stages,
+                     cap=(1, 4), cost=(1, 20))
+            net_o, cost_o = build_setting(s, seed, source_capacity=relays // 20)
+            net_r, cost_r = build_setting(s, seed, source_capacity=relays // 20)
+            opt = GWTFProtocol(net_o, cost_matrix=cost_o, objective="sum",
+                               rng=np.random.default_rng(seed + 3))
+            ref = ReferenceGWTFProtocol(net_r, cost_matrix=cost_r,
+                                        objective="sum",
+                                        rng=np.random.default_rng(seed + 3))
+            opt.run(max_rounds=80)
+            ref.run(max_rounds=80)
+            assert opt.complete_flows() == ref.complete_flows(), \
+                f"relays={relays} seed={seed}: batched flows diverged"
+            assert opt.total_cost() == ref.total_cost(), \
+                f"relays={relays} seed={seed}: batched total cost diverged"
+            assert len(opt.complete_flows()) > 0
+
+    @pytest.mark.parametrize("relays,stages", [(120, 6), (300, 10)])
+    def test_strict_rng_mode_stream_bit_equality(self, relays, stages):
+        """strict_rng=True reproduces the reference RNG stream exactly
+        (bit-identical generator state after a full run), at >= 2 relay
+        counts."""
+        for seed in range(2):
+            s = dict(sources=2, relays=relays, stages=stages,
+                     cap=(1, 4), cost=(1, 20))
+            net_o, cost_o = build_setting(s, seed, source_capacity=relays // 20)
+            net_r, cost_r = build_setting(s, seed, source_capacity=relays // 20)
+            opt = GWTFProtocol(net_o, cost_matrix=cost_o, objective="sum",
+                               strict_rng=True,
+                               rng=np.random.default_rng(seed + 3))
+            ref = ReferenceGWTFProtocol(net_r, cost_matrix=cost_r,
+                                        objective="sum",
+                                        rng=np.random.default_rng(seed + 3))
+            opt.run(max_rounds=80)
+            ref.run(max_rounds=80)
+            assert opt.rng.bit_generator.state == ref.rng.bit_generator.state, \
+                f"relays={relays} seed={seed}: strict_rng stream diverged"
+            assert opt.complete_flows() == ref.complete_flows()
+            assert opt.T == ref.T
+
+    def test_batched_mode_without_advance_capable_generator(self):
+        """Bit generators lacking advance() (MT19937) can't rewind the
+        uniform block; the batched engine must fall back to scalar
+        prefix draws and stay in lockstep with the reference."""
+        s = TABLE_V[0]
+        for seed in range(2):
+            net_o, cost_o = build_setting(s, seed)
+            net_r, cost_r = build_setting(s, seed)
+            opt = GWTFProtocol(
+                net_o, cost_matrix=cost_o,
+                rng=np.random.Generator(np.random.MT19937(seed)))
+            ref = ReferenceGWTFProtocol(
+                net_r, cost_matrix=cost_r,
+                rng=np.random.Generator(np.random.MT19937(seed)))
+            opt.run(max_rounds=100)
+            ref.run(max_rounds=100)
+            assert opt.complete_flows() == ref.complete_flows()
+            assert opt.total_cost() == ref.total_cost()
+            so = opt.rng.bit_generator.state["state"]
+            sr = ref.rng.bit_generator.state["state"]
+            assert so["pos"] == sr["pos"]
+            assert np.array_equal(so["key"], sr["key"])
+
+    def test_batched_and_strict_modes_agree(self):
+        """The two optimized scan implementations make identical
+        decisions (same flows, same stream) on the same seeds."""
+        s = TABLE_V[5]
+        for seed in range(2):
+            net_b, cost_b = build_setting(s, seed)
+            net_s, cost_s = build_setting(s, seed)
+            batched = GWTFProtocol(net_b, cost_matrix=cost_b,
+                                   rng=np.random.default_rng(seed))
+            strict = GWTFProtocol(net_s, cost_matrix=cost_s, strict_rng=True,
+                                  rng=np.random.default_rng(seed))
+            batched.run(max_rounds=100)
+            strict.run(max_rounds=100)
+            assert batched.complete_flows() == strict.complete_flows()
+            assert batched.rng.bit_generator.state == \
+                strict.rng.bit_generator.state
+
     def test_advertisement_index_matches_scan(self):
         """_advertised() via the index == the reference's segment scan,
         for every (peer, data node) pair after convergence."""
