@@ -1,0 +1,119 @@
+"""Scenario-corpus benchmark: per-scenario wall time across the layers.
+
+Scenario breadth is a tracked perf surface: every committed corpus
+scenario is materialized and timed through
+
+* **flow** — the batched `GWTFProtocol` run (plan construction),
+* **oracle** — the `MinCostFlow` optimum (auto method),
+* **sim** — the full `TrainingSimulator` run (`spec.iterations`
+  iterations, planning + event loop),
+* **runtime** (``--runtime`` only; needs JAX) — the reduced
+  real-compute `RuntimeTrainer` run.
+
+``--json PATH`` writes the table for tracking; ``--fuzz SECONDS`` runs
+the seeded differential fuzz session from `scenarios.harness` after
+the sweep and fails the process on any discrepancy (the CI scenarios
+job uses the pytest entry point instead, but this keeps the whole
+surface drivable from one command line).  Numpy-only unless
+``--runtime`` is given.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.core.scenarios import generate
+from repro.core.scenarios.corpus import load_corpus
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def bench_scenario(spec, runtime: bool = False) -> dict:
+    row = {"name": spec.name, "topology": spec.topology,
+           "nodes": spec.base_nodes + spec.spare_nodes,
+           "stages": spec.num_stages,
+           "churn": ",".join(c["kind"] for c in spec.churn) or "-"}
+    t0 = time.perf_counter()
+    flow = generate.run_flow(spec, "batched")
+    row["flow_s"] = time.perf_counter() - t0
+    row["chains"] = len(flow.flows)
+    t0 = time.perf_counter()
+    generate.solve_optimal(spec)
+    row["oracle_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    metrics = generate.run_sim(spec)
+    row["sim_s"] = time.perf_counter() - t0
+    row["sim_events"] = sum(m.events for m in metrics)
+    if runtime:
+        t0 = time.perf_counter()
+        generate.run_runtime(spec, iterations=min(spec.iterations, 2))
+        row["runtime_s"] = time.perf_counter() - t0
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--runtime", action="store_true",
+                    help="also time the reduced real-compute runtime "
+                         "(imports JAX)")
+    ap.add_argument("--scenario", action="append", default=None,
+                    help="restrict to named scenario(s)")
+    ap.add_argument("--fuzz", type=float, default=0.0, metavar="SECONDS",
+                    help="run the seeded differential fuzz session for "
+                         "SECONDS after the sweep; non-zero exit on any "
+                         "discrepancy")
+    ap.add_argument("--json", type=Path, default=None,
+                    help="write the rows to this path")
+    args = ap.parse_args(argv)
+
+    specs = load_corpus()
+    if args.scenario:
+        specs = [s for s in specs if s.name in set(args.scenario)]
+        if not specs:
+            print(f"no scenarios match {args.scenario}", file=sys.stderr)
+            return 2
+
+    rows = []
+    hdr = (f"{'scenario':28s} {'topo':9s} {'nodes':>5s} {'chains':>6s} "
+           f"{'flow s':>7s} {'oracle s':>8s} {'sim s':>7s}"
+           + ("  runtime s" if args.runtime else ""))
+    print(hdr)
+    print("-" * len(hdr))
+    for spec in specs:
+        row = bench_scenario(spec, runtime=args.runtime)
+        rows.append(row)
+        line = (f"{row['name']:28s} {row['topology']:9s} "
+                f"{row['nodes']:5d} {row['chains']:6d} "
+                f"{row['flow_s']:7.3f} {row['oracle_s']:8.3f} "
+                f"{row['sim_s']:7.3f}")
+        if args.runtime:
+            line += f" {row['runtime_s']:10.3f}"
+        print(line)
+    total = sum(r["flow_s"] + r["oracle_s"] + r["sim_s"] +
+                r.get("runtime_s", 0.0) for r in rows)
+    print(f"{len(rows)} scenarios, {total:.2f}s total")
+
+    if args.json:
+        args.json.write_text(json.dumps(
+            {"rows": rows, "total_seconds": total}, indent=2) + "\n")
+        print(f"wrote {args.json}")
+
+    if args.fuzz > 0:
+        from repro.core.scenarios.harness import FUZZ_CHECKS, fuzz
+        rep = fuzz(seed=20260728, budget_seconds=args.fuzz,
+                   checks=FUZZ_CHECKS)
+        print(f"fuzz: {rep.cases} cases in {rep.elapsed:.1f}s, "
+              f"{len(rep.failures)} discrepancies")
+        for f in rep.failures:
+            print(f"  FAIL [{f.check}] {f.detail}")
+            print(f"  minimized spec:\n{f.minimized.to_json()}")
+        if rep.failures:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

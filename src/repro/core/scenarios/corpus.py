@@ -1,0 +1,194 @@
+"""The committed scenario corpus (paper Table II/III regimes + beyond).
+
+~12 named `ScenarioSpec`s covering the paper's evaluation axes — the
+10-location geo topology, 5-20% Bernoulli churn, heterogeneous
+capacities and compute — plus the failure modes the related systems
+literature calls under-evaluated: scripted regional blackouts,
+correlated regional outages, flash-crowd joins, link degradation, and
+the abstract Table IV/V flow settings.
+
+`load_corpus()` also picks up any ``*.json`` spec dropped into
+``corpus/`` next to this module — that directory is where the fuzz
+harness (`scenarios.harness.fuzz`) writes minimized failing specs, so
+a shrunk reproducer automatically becomes a named regression scenario
+on the next corpus sweep.
+
+Golden metrics (`golden.json`) pin the flow-layer outcome (chain
+count, total cost — bit-stable by the engines' equivalence guarantee)
+and the simulator's Table II/III `summarize` columns for every corpus
+scenario.  Regenerate after an intentional behavior change with::
+
+    PYTHONPATH=src python -m repro.core.scenarios.corpus --regen-golden
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.core.scenarios import generate
+from repro.core.scenarios.spec import ScenarioSpec
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+CORPUS_DIR = os.path.join(_HERE, "corpus")
+GOLDEN_PATH = os.path.join(_HERE, "golden.json")
+
+#: scenarios whose sim `summarize` columns the golden regression test
+#: pins tolerance-free (GWTF runs are bit-deterministic per seed)
+GOLDEN_PINNED = ("table2-het-churn10", "geo-regional-blackout")
+
+
+def _corpus() -> List[ScenarioSpec]:
+    geo = dict(topology="geo", num_stages=4, relays_per_stage=4,
+               num_data_nodes=2, data_capacity=4, num_locations=10,
+               iterations=6)
+    specs = [
+        # ---- paper Table II/III regimes (geo, 10 locations) ----------
+        ScenarioSpec(name="table2-hom-churn10", seed=11,
+                     capacity_range=(4, 5),
+                     churn=[{"kind": "bernoulli", "p": 0.10}], **geo),
+        ScenarioSpec(name="table2-het-churn10", seed=12,
+                     capacity_range=(1, 4),
+                     churn=[{"kind": "bernoulli", "p": 0.10}], **geo),
+        ScenarioSpec(name="table3-het-churn20", seed=13,
+                     capacity_range=(1, 4),
+                     churn=[{"kind": "bernoulli", "p": 0.20}], **geo),
+        ScenarioSpec(name="geo-churn5", seed=14, capacity_range=(1, 4),
+                     churn=[{"kind": "bernoulli", "p": 0.05}], **geo),
+        ScenarioSpec(name="geo-zero-churn", seed=15, capacity_range=(2, 4),
+                     topology="geo", num_stages=2, relays_per_stage=3,
+                     num_data_nodes=1, data_capacity=4, num_locations=10,
+                     iterations=6, churn=[]),
+        # ---- geo failure modes beyond Bernoulli ----------------------
+        ScenarioSpec(name="geo-regional-blackout", seed=16,
+                     capacity_range=(1, 4),
+                     churn=[{"kind": "regional_blackout", "location": 3,
+                             "at_iteration": 2, "duration": 2,
+                             "when": 0.25}], **geo),
+        ScenarioSpec(name="geo-correlated-outages", seed=17,
+                     capacity_range=(1, 4),
+                     churn=[{"kind": "regional_outage", "outage_prob": 0.4,
+                             "severity": 0.8, "rejoin_prob": 0.5}], **geo),
+        ScenarioSpec(name="geo-flash-crowd", seed=18,
+                     capacity_range=(1, 4), spare_nodes=4,
+                     churn=[{"kind": "flash_crowd", "at_iteration": 2,
+                             "nodes": 4},
+                            {"kind": "bernoulli", "p": 0.05}], **geo),
+        ScenarioSpec(name="geo-link-degradation", seed=19,
+                     capacity_range=(1, 4),
+                     churn=[{"kind": "link_degradation", "at_iteration": 2,
+                             "factor": 6.0, "duration": 2},
+                            {"kind": "bernoulli", "p": 0.05}], **geo),
+        ScenarioSpec(name="geo-hetero-compute", seed=20,
+                     capacity_range=(1, 4),
+                     region_compute_scale=[1.0, 4.0, 1.5, 2.0, 1.0,
+                                           3.0, 1.0, 2.5, 1.0, 2.0],
+                     region_bandwidth_scale=[1.0, 0.25, 1.0, 0.5, 1.0,
+                                             0.5, 1.0, 1.0, 0.3, 1.0],
+                     churn=[{"kind": "bernoulli", "p": 0.10}], **geo),
+        ScenarioSpec(name="trace-crash-rejoin", seed=21,
+                     capacity_range=(2, 4),
+                     churn=[{"kind": "trace",
+                             "events": [[1, "crash", 3, 0.3],
+                                        [1, "crash", 7, 0.6],
+                                        [3, "rejoin", 3],
+                                        [4, "rejoin", 7],
+                                        [4, "crash", 11, 0.2]]}], **geo),
+        # ---- abstract flow settings (paper Tables IV/V) --------------
+        ScenarioSpec(name="flow-tableV-1", seed=22, topology="synthetic",
+                     num_stages=8, relays_per_stage=5, num_data_nodes=1,
+                     source_capacity=4, capacity_range=(1, 3),
+                     cost_range=(1, 20), iterations=2),
+        ScenarioSpec(name="flow-tableV-multisource", seed=23,
+                     topology="synthetic", num_stages=8,
+                     relays_per_stage=10, num_data_nodes=4,
+                     source_capacity=3, capacity_range=(1, 3),
+                     cost_range=(1, 20), iterations=2),
+    ]
+    for s in specs:
+        s.validate()
+    return specs
+
+
+def load_corpus(include_shrunk: bool = True) -> List[ScenarioSpec]:
+    """All committed scenarios: the named set plus any fuzz-minimized
+    ``corpus/*.json`` regression specs."""
+    specs = _corpus()
+    if include_shrunk and os.path.isdir(CORPUS_DIR):
+        for path in sorted(glob.glob(os.path.join(CORPUS_DIR, "*.json"))):
+            with open(path) as fh:
+                specs.append(ScenarioSpec.from_json(fh.read()))
+    names = [s.name for s in specs]
+    if len(set(names)) != len(names):
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(f"duplicate scenario names in corpus: {dupes}")
+    return specs
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    for spec in load_corpus():
+        if spec.name == name:
+            return spec
+    raise KeyError(f"unknown scenario {name!r}; corpus has "
+                   f"{[s.name for s in load_corpus()]}")
+
+
+# ---------------------------------------------------------------------------
+# Golden metrics
+# ---------------------------------------------------------------------------
+
+def compute_golden(spec: ScenarioSpec) -> Dict:
+    """The pinned observables for one scenario: flow-layer outcome and
+    the simulator's summarize() table."""
+    from repro.core.sim.metrics import summarize
+
+    flow = generate.run_flow(spec, "batched")
+    table = summarize(generate.run_sim(spec), warmup=1)
+    return {
+        "flow": {"chains": len(flow.flows),
+                 "total_cost": flow.total_cost,
+                 "rounds": flow.rounds},
+        "sim": {k: list(v) for k, v in table.items()},
+    }
+
+
+def load_golden() -> Dict[str, Dict]:
+    with open(GOLDEN_PATH) as fh:
+        return json.load(fh)
+
+
+def regen_golden(path: Optional[str] = None) -> Dict[str, Dict]:
+    golden = {spec.name: compute_golden(spec)
+              for spec in load_corpus(include_shrunk=False)}
+    with open(path or GOLDEN_PATH, "w") as fh:
+        json.dump(golden, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return golden
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--regen-golden", action="store_true",
+                    help="rerun every corpus scenario and rewrite "
+                         "golden.json")
+    ap.add_argument("--list", action="store_true",
+                    help="print the corpus table")
+    args = ap.parse_args(argv)
+    if args.regen_golden:
+        golden = regen_golden()
+        print(f"wrote {GOLDEN_PATH} ({len(golden)} scenarios)")
+    if args.list or not args.regen_golden:
+        print(f"{'name':28s} {'topology':9s} {'nodes':>5s} "
+              f"{'stages':>6s} churn")
+        for spec in load_corpus():
+            kinds = ",".join(c["kind"] for c in spec.churn) or "-"
+            print(f"{spec.name:28s} {spec.topology:9s} "
+                  f"{spec.base_nodes + spec.spare_nodes:5d} "
+                  f"{spec.num_stages:6d} {kinds}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,644 @@
+"""Cross-layer differential / metamorphic harness over scenario specs.
+
+One `ScenarioSpec` drives every execution layer the repo has; the
+harness checks that they *agree*:
+
+* `check_flow_equivalence` — the three flow engines (batched
+  `GWTFProtocol`, its ``strict_rng`` scalar mode, and the frozen
+  `ReferenceGWTFProtocol`) produce bit-identical flows, total cost,
+  annealing temperature and RNG stream on the scenario — including
+  after a scripted crash/reclaim/repair/rejoin episode;
+* `check_optimal_consistency` — the `MinCostFlow` dial (bucket-queue)
+  and dense Dijkstra cores find the same optimum on the scenario's
+  layered graph;
+* `check_sim_runtime_consistency` — the event simulator and the
+  real-compute runtime, given the same spec, plan identical chain
+  sets every iteration and agree on reroute/requeue/recompute
+  accounting for deterministic churn programs;
+* metamorphic invariants — `check_capacity_monotonicity` (adding
+  relay capacity never increases the optimal cost of the same flow
+  volume), `check_zero_churn` (no churn ⇒ no wasted GPU, no reroutes,
+  and the runtime's trajectory is bit-identical to
+  `CentralizedTrainer`), `check_permutation_invariance` (relabeling
+  node ids preserves the optimum);
+* `fuzz` — seeded randomized spec generation under a wall-clock
+  budget; a failing spec is shrunk (`minimize`) to a minimal
+  reproducer and written into the committed corpus directory so it
+  becomes a named regression scenario on the next run.
+
+Failures raise `ScenarioDiscrepancy` carrying the spec (as JSON) so a
+reproducer is always one ``ScenarioSpec.from_json`` away.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.scenarios import generate
+from repro.core.scenarios.spec import ScenarioSpec
+
+
+class ScenarioDiscrepancy(AssertionError):
+    """Two layers (or two engines) disagreed on the same scenario."""
+
+    def __init__(self, spec: ScenarioSpec, check: str, detail: str):
+        self.spec = spec
+        self.check = check
+        self.detail = detail
+        super().__init__(
+            f"[{check}] {detail}\n--- failing spec ---\n{spec.to_json()}")
+
+
+def _require(cond: bool, spec: ScenarioSpec, check: str, detail: str) -> None:
+    if not cond:
+        raise ScenarioDiscrepancy(spec, check, detail)
+
+
+# ---------------------------------------------------------------------------
+# Flow-layer differential: batched vs strict vs reference, bit-equal
+# ---------------------------------------------------------------------------
+
+def check_flow_equivalence(spec: ScenarioSpec, max_rounds: int = 120,
+                           churn_episode: bool = True) -> Dict[str, Any]:
+    """All three flow engines agree bit-for-bit on the scenario."""
+    runs = {eng: generate.run_flow(spec, eng, max_rounds=max_rounds)
+            for eng in generate.FLOW_ENGINES}
+    ref = runs["reference"]
+    for eng in ("batched", "strict"):
+        r = runs[eng]
+        _require(r.flows == ref.flows, spec, "flow-equivalence",
+                 f"{eng}: flows diverged from reference "
+                 f"({len(r.flows)} vs {len(ref.flows)} chains)")
+        _require(r.total_cost == ref.total_cost, spec, "flow-equivalence",
+                 f"{eng}: total cost {r.total_cost!r} != "
+                 f"reference {ref.total_cost!r}")
+        _require(r.temperature == ref.temperature, spec, "flow-equivalence",
+                 f"{eng}: annealing temperature diverged")
+        _require(r.rng_state == ref.rng_state, spec, "flow-equivalence",
+                 f"{eng}: RNG stream diverged from reference")
+    episode = None
+    if churn_episode and ref.flows:
+        episode = _flow_churn_episode(spec, runs)
+    return {"flows": len(ref.flows), "total_cost": ref.total_cost,
+            "rounds": ref.rounds, "churn_episode": episode}
+
+
+def _flow_churn_episode(spec: ScenarioSpec, runs) -> Dict[str, Any]:
+    """Crash the same deterministically-chosen relays in every engine,
+    repair, rejoin, and re-check bit-equality (exercises remove_node /
+    reclaim / add_node index maintenance on the scenario topology)."""
+    flows = runs["reference"].flows
+    victims = sorted({flows[0][1]} |
+                     ({flows[-1][2]} if spec.num_stages > 1 else set()))
+    for phase in ("crash", "rejoin"):
+        for r in runs.values():
+            for v in victims:
+                if phase == "crash":
+                    r.net.kill_node(v)
+                    r.protocol.remove_node(v)
+                else:
+                    r.net.nodes[v].alive = True
+                    r.protocol.add_node(r.net.nodes[v])
+            r.protocol.reclaim_sink_slots()
+            r.protocol.run(40, quiet_rounds=5)
+        ref = runs["reference"].protocol
+        for eng in ("batched", "strict"):
+            p = runs[eng].protocol
+            _require(p.complete_flows() == ref.complete_flows(), spec,
+                     "flow-equivalence",
+                     f"{eng}: flows diverged after {phase} of {victims}")
+            _require(p.total_cost() == ref.total_cost(), spec,
+                     "flow-equivalence",
+                     f"{eng}: cost diverged after {phase} of {victims}")
+            _require(p.rng.bit_generator.state ==
+                     ref.rng.bit_generator.state, spec, "flow-equivalence",
+                     f"{eng}: RNG stream diverged after {phase}")
+    return {"victims": victims,
+            "flows_after": len(ref.complete_flows())}
+
+
+# ---------------------------------------------------------------------------
+# Oracle differential: dial vs dense Dijkstra cores
+# ---------------------------------------------------------------------------
+
+def check_optimal_consistency(spec: ScenarioSpec) -> Dict[str, Any]:
+    """`MinCostFlow` dial and dense cores agree on the scenario's
+    layered graph (exact on the synthetic integer-cost topologies)."""
+    net, cm = generate.build_network(spec)
+    dense = generate.solve_optimal(spec, "dense", net=net, cost_matrix=cm)
+    if spec.topology == "synthetic":
+        net2, cm2 = generate.build_network(spec)
+        dial = generate.solve_optimal(spec, "dial", net=net2,
+                                      cost_matrix=cm2)
+        _require(dial.flow == dense.flow, spec, "optimal-consistency",
+                 f"dial flow {dial.flow} != dense flow {dense.flow}")
+        _require(abs(dial.cost - dense.cost) <= 1e-6 * max(1.0, dense.cost),
+                 spec, "optimal-consistency",
+                 f"dial cost {dial.cost!r} != dense cost {dense.cost!r}")
+        return {"flow": dense.flow, "cost": dense.cost, "methods": 2}
+    return {"flow": dense.flow, "cost": dense.cost, "methods": 1}
+
+
+# ---------------------------------------------------------------------------
+# Sim vs runtime: plans and fault accounting
+# ---------------------------------------------------------------------------
+
+class RecordingPolicy:
+    """Transparent `RoutingPolicy` wrapper recording per-iteration
+    plans and recover() decisions without touching any RNG stream."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = inner.name
+        self.plans: List[List[List[int]]] = []
+        self.recover_calls: int = 0
+
+    @property
+    def protocol(self):
+        return getattr(self.inner, "protocol", None)
+
+    def plan(self):
+        paths = self.inner.plan()
+        self.plans.append([list(p) for p in paths])
+        return paths
+
+    def recover(self, view, mb, frm, dead, t):
+        self.recover_calls += 1
+        return self.inner.recover(view, mb, frm, dead, t)
+
+    def on_rejoin(self, node):
+        self.inner.on_rejoin(node)
+
+    def on_crash(self, nid):
+        self.inner.on_crash(nid)
+
+
+def check_sim_runtime_consistency(spec: ScenarioSpec,
+                                  iterations: Optional[int] = None
+                                  ) -> Dict[str, Any]:
+    """The simulator and the real-compute runtime, driven by the same
+    spec, must agree on what was *planned* and on the shape of what
+    went wrong.
+
+    Checked every iteration:
+
+    * identical planned chain sets (GWTF recovery draws no RNG, so the
+      policy streams stay aligned across layers);
+    * runtime conservation: ``completed + dropped == launched`` and
+      ``fwd_recomputes + bwd_replays == rerouted``;
+    * with a *deterministic* churn program: iterations whose crash set
+      is empty are clean on both layers (no reroutes, no wasted GPU,
+      no drops), and iterations where a planned relay crashes before
+      mid-sweep produce repair activity on both layers.
+    """
+    its = iterations if iterations is not None else spec.iterations
+    sim_rec: Dict[str, RecordingPolicy] = {}
+
+    def wrap_sim(p):
+        sim_rec["p"] = RecordingPolicy(p)
+        return sim_rec["p"]
+
+    sim = generate.build_sim(spec, policy_wrapper=wrap_sim)
+    sim_metrics = sim.run(its)
+
+    rt_rec: Dict[str, RecordingPolicy] = {}
+
+    def wrap_rt(p):
+        rt_rec["p"] = RecordingPolicy(p)
+        return rt_rec["p"]
+
+    trainer, batches = generate.build_runtime(spec, policy_wrapper=wrap_rt)
+    rt_results = [trainer.iteration(batches) for _ in range(its)]
+
+    sim_plans = sim_rec["p"].plans
+    rt_plans = rt_rec["p"].plans
+    _require(len(sim_plans) == len(rt_plans) == its, spec,
+             "sim-runtime", "per-iteration plan counts diverged")
+    if spec.scheduler == "gwtf":
+        # SWARM's backward recovery replans with RNG draws, so its
+        # streams legitimately diverge after the first fault; GWTF's
+        # recovery is RNG-free and must stay in lock-step.
+        for i, (a, b) in enumerate(zip(sim_plans, rt_plans)):
+            _require(a == b, spec, "sim-runtime",
+                     f"iteration {i}: planned chain sets diverged "
+                     f"(sim {len(a)} chains vs runtime {len(b)})")
+
+    for i, (m, r) in enumerate(zip(sim_metrics, rt_results)):
+        _require(r.completed + r.dropped == r.launched, spec, "sim-runtime",
+                 f"iteration {i}: runtime conservation violated "
+                 f"({r.completed} + {r.dropped} != {r.launched})")
+        _require(r.fwd_recomputes + r.bwd_replays == r.rerouted, spec,
+                 "sim-runtime",
+                 f"iteration {i}: runtime recompute accounting violated "
+                 f"({r.fwd_recomputes} + {r.bwd_replays} != {r.rerouted})")
+        _require(r.requeued <= r.rerouted, spec, "sim-runtime",
+                 f"iteration {i}: requeued > rerouted")
+        _require(m.completed <= m.launched, spec, "sim-runtime",
+                 f"iteration {i}: sim completed > launched")
+        if spec.microbatches >= spec.data_capacity:
+            _require(r.launched == m.launched, spec, "sim-runtime",
+                     f"iteration {i}: launch counts diverged "
+                     f"(sim {m.launched} vs runtime {r.launched})")
+
+    if spec.deterministic_churn:
+        crash_plan = generate.iteration_crash_plan(spec)
+        for i, (m, r) in enumerate(zip(sim_metrics, rt_results)):
+            crashes = crash_plan.get(i, [])
+            planned = {nid for chain in rt_plans[i] for nid in chain}
+            on_plan_early = [nid for nid, when in crashes
+                             if nid in planned and when <= 0.5]
+            if not crashes:
+                _require(m.reroutes == 0 and m.wasted_gpu == 0.0, spec,
+                         "sim-runtime",
+                         f"iteration {i}: sim reports faults "
+                         f"(reroutes={m.reroutes}, "
+                         f"wasted={m.wasted_gpu}) on a crash-free "
+                         f"iteration")
+                _require(r.rerouted == 0 and r.dropped == 0, spec,
+                         "sim-runtime",
+                         f"iteration {i}: runtime reports faults on a "
+                         f"crash-free iteration")
+            elif on_plan_early and spec.scheduler == "gwtf":
+                sim_saw = (m.reroutes > 0 or m.completed < m.launched
+                           or m.wasted_gpu > 0.0)
+                rt_saw = r.rerouted > 0 or r.dropped > 0
+                _require(sim_saw, spec, "sim-runtime",
+                         f"iteration {i}: relays {on_plan_early} crashed "
+                         f"on-plan but the simulator saw no fault")
+                _require(rt_saw, spec, "sim-runtime",
+                         f"iteration {i}: relays {on_plan_early} crashed "
+                         f"on-plan but the runtime saw no fault")
+    return {
+        "iterations": its,
+        "sim_launched": [m.launched for m in sim_metrics],
+        "runtime_launched": [r.launched for r in rt_results],
+        "runtime_rerouted": sum(r.rerouted for r in rt_results),
+        "sim_reroutes": sum(m.reroutes for m in sim_metrics),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Metamorphic invariants
+# ---------------------------------------------------------------------------
+
+def check_capacity_monotonicity(spec: ScenarioSpec,
+                                bumps: int = 3) -> Dict[str, Any]:
+    """Adding relay capacity never increases the optimal cost of
+    routing the *same* flow volume."""
+    net, cm = generate.build_network(spec)
+    base = generate.solve_optimal(spec, "dense", net=net, cost_matrix=cm)
+    if base.flow <= 0:
+        return {"flow": 0.0, "skipped": True}
+    relays = [n for n in net.nodes.values() if not n.is_data]
+    for k in range(min(bumps, len(relays))):
+        relays[(k * 7919) % len(relays)].capacity += 1
+    grown = generate.solve_optimal(spec, "dense", net=net, cost_matrix=cm,
+                                   max_flow=base.flow)
+    _require(grown.flow == base.flow, spec, "capacity-monotonicity",
+             f"flow changed under a flow cap ({grown.flow} != {base.flow})")
+    tol = 1e-9 * max(1.0, abs(base.cost))
+    _require(grown.cost <= base.cost + tol, spec, "capacity-monotonicity",
+             f"adding capacity increased optimal cost "
+             f"({base.cost!r} -> {grown.cost!r})")
+    return {"flow": base.flow, "cost": base.cost, "grown_cost": grown.cost}
+
+
+def check_zero_churn(spec: ScenarioSpec,
+                     iterations: Optional[int] = None,
+                     runtime: bool = True) -> Dict[str, Any]:
+    """Zero churn ⇒ a perfectly clean simulation (no wasted GPU, no
+    reroutes, nothing truncated) and — for single-data-node scenarios —
+    a runtime loss trajectory bit-identical to `CentralizedTrainer`
+    on the same completed microbatch prefix."""
+    if spec.churn:
+        raise ValueError(f"{spec.name}: check_zero_churn needs an empty "
+                         f"churn program")
+    its = iterations if iterations is not None else spec.iterations
+    metrics = generate.run_sim(spec, iterations=its)
+    for i, m in enumerate(metrics):
+        _require(m.wasted_gpu == 0.0, spec, "zero-churn",
+                 f"iteration {i}: wasted_gpu={m.wasted_gpu} without churn")
+        _require(m.reroutes == 0, spec, "zero-churn",
+                 f"iteration {i}: reroutes={m.reroutes} without churn")
+        _require(not m.truncated, spec, "zero-churn",
+                 f"iteration {i}: truncated without churn")
+        _require(m.completed == m.launched > 0, spec, "zero-churn",
+                 f"iteration {i}: {m.completed}/{m.launched} completed")
+    result = {"iterations": its, "sim_completed":
+              [m.completed for m in metrics]}
+    if runtime and spec.num_data_nodes == 1:
+        from repro.core.runtime.trainer import CentralizedTrainer
+
+        trainer, batches = generate.build_runtime(spec)
+        dn = next(iter(batches))
+        cen = CentralizedTrainer(generate.model_config(spec),
+                                 spec.num_stages, lr=3e-3, seed=spec.seed)
+        rt_its = min(its, 3)       # real compute: keep the check cheap
+        for i in range(rt_its):
+            r = trainer.iteration(batches)
+            _require(r.dropped == 0 and r.rerouted == 0, spec, "zero-churn",
+                     f"iteration {i}: runtime repaired/dropped without "
+                     f"churn")
+            cl = cen.iteration(batches[dn][:r.completed])
+            _require(r.loss == cl, spec, "zero-churn",
+                     f"iteration {i}: decentralized loss {r.loss!r} != "
+                     f"centralized {cl!r} (bit-equality broken)")
+        result["runtime_iterations"] = rt_its
+    return result
+
+
+def permuted_network(net, perm: Dict[int, int]):
+    """Relabel node ids by ``perm`` (a bijection over all ids), keeping
+    every attribute and permuting the link matrices accordingly."""
+    from repro.core.flow.graph import FlowNetwork, Node
+
+    n = net.latency.shape[0]
+    inv = np.empty(n, np.int64)
+    for old, new in perm.items():
+        inv[new] = old
+    nodes = {}
+    for old, node in net.nodes.items():
+        new = perm[old]
+        nodes[new] = Node(new, node.stage, node.capacity, node.compute_cost,
+                          is_data=node.is_data, alive=node.alive,
+                          location=node.location)
+    return FlowNetwork(nodes=nodes, num_stages=net.num_stages,
+                       latency=net.latency[np.ix_(inv, inv)].copy(),
+                       bandwidth=net.bandwidth[np.ix_(inv, inv)].copy(),
+                       activation_size=net.activation_size)
+
+
+def check_permutation_invariance(spec: ScenarioSpec) -> Dict[str, Any]:
+    """Relabeling node ids (data nodes fixed, relays permuted) must not
+    change the centralized optimum."""
+    net, cm = generate.build_network(spec)
+    base = generate.solve_optimal(spec, "dense", net=net, cost_matrix=cm)
+    n = net.latency.shape[0]
+    relay_ids = [nid for nid, node in net.nodes.items() if not node.is_data]
+    shuffled = list(relay_ids)
+    rng = np.random.default_rng([spec.seed, 17])
+    rng.shuffle(shuffled)
+    perm = {nid: nid for nid in net.nodes}
+    perm.update(dict(zip(relay_ids, shuffled)))
+    pnet = permuted_network(net, perm)
+    pcm = None
+    if cm is not None:
+        inv = np.empty(n, np.int64)
+        for old, new in perm.items():
+            inv[new] = old
+        pcm = np.asarray(cm)[np.ix_(inv, inv)].copy()
+    from repro.core.flow.mincost import solve_training_flow
+    permuted = solve_training_flow(pnet, cost_matrix=pcm, method="dense")
+    _require(permuted.flow == base.flow, spec, "permutation-invariance",
+             f"optimal flow changed under relabeling "
+             f"({base.flow} -> {permuted.flow})")
+    exact = spec.topology == "synthetic"
+    tol = 0.0 if exact else 1e-9 * max(1.0, abs(base.cost))
+    _require(abs(permuted.cost - base.cost) <= tol, spec,
+             "permutation-invariance",
+             f"optimal cost changed under relabeling "
+             f"({base.cost!r} -> {permuted.cost!r})")
+    return {"flow": base.flow, "cost": base.cost}
+
+
+def check_sim_invariants(spec: ScenarioSpec,
+                         iterations: Optional[int] = None) -> Dict[str, Any]:
+    """Cheap engine-level invariants that hold under *any* churn
+    program — this is the fuzz check that actually samples the spec's
+    churn clauses through the full event engine: conservation
+    (completed <= launched), non-negative accounting, no event-budget
+    runaway, and bit-determinism of a seeded rerun."""
+    from repro.core.sim.metrics import summarize
+
+    its = min(iterations if iterations is not None else spec.iterations, 3)
+    first = generate.run_sim(spec, iterations=its)
+    for i, m in enumerate(first):
+        _require(0 <= m.completed <= m.launched, spec, "sim-invariants",
+                 f"iteration {i}: completed {m.completed} out of "
+                 f"[0, launched={m.launched}]")
+        _require(m.wasted_gpu >= 0.0 and m.comm_time >= 0.0
+                 and m.duration >= 0.0, spec, "sim-invariants",
+                 f"iteration {i}: negative accounting "
+                 f"(wasted={m.wasted_gpu}, comm={m.comm_time}, "
+                 f"duration={m.duration})")
+        _require(m.reroutes >= 0 and m.queue_depth_peak >= 0, spec,
+                 "sim-invariants",
+                 f"iteration {i}: negative reroute/queue accounting")
+        _require(not m.truncated, spec, "sim-invariants",
+                 f"iteration {i}: event budget exhausted on a tiny "
+                 f"scenario (runaway event loop)")
+    second = generate.run_sim(spec, iterations=its)
+    _require(summarize(first) == summarize(second), spec, "sim-invariants",
+             "seeded rerun diverged — simulator lost determinism")
+    return {"iterations": its,
+            "completed": [m.completed for m in first]}
+
+
+# ---------------------------------------------------------------------------
+# Check registry / corpus sweep
+# ---------------------------------------------------------------------------
+
+#: name -> (callable, applicability predicate)
+CHECKS: Dict[str, Tuple[Callable[[ScenarioSpec], Dict], Callable]] = {
+    "flow-equivalence": (check_flow_equivalence, lambda s: True),
+    "optimal-consistency": (check_optimal_consistency, lambda s: True),
+    "capacity-monotonicity": (check_capacity_monotonicity, lambda s: True),
+    "permutation-invariance": (check_permutation_invariance,
+                               lambda s: True),
+    "zero-churn": (check_zero_churn, lambda s: not s.churn),
+    "sim-invariants": (check_sim_invariants, lambda s: True),
+    "sim-runtime": (check_sim_runtime_consistency,
+                    lambda s: s.scheduler == "gwtf"),
+}
+
+#: checks cheap enough for the fuzz loop (no real JAX compute).
+#: sim-invariants is what exercises the generated churn programs — the
+#: flow/oracle checks never sample them.
+FUZZ_CHECKS = ("flow-equivalence", "optimal-consistency",
+               "capacity-monotonicity", "permutation-invariance",
+               "sim-invariants")
+
+
+def run_checks(spec: ScenarioSpec,
+               checks: Optional[Sequence[str]] = None) -> Dict[str, Any]:
+    """Run the named (or all applicable) checks; raises on the first
+    discrepancy, returns per-check summaries otherwise."""
+    names = checks if checks is not None else list(CHECKS)
+    out: Dict[str, Any] = {}
+    for name in names:
+        fn, applicable = CHECKS[name]
+        if not applicable(spec):
+            out[name] = {"skipped": True}
+            continue
+        out[name] = fn(spec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fuzzing with shrinking
+# ---------------------------------------------------------------------------
+
+def random_spec(rng: np.random.Generator, index: int) -> ScenarioSpec:
+    """One random small scenario (kept tiny: the fuzz loop's value is
+    breadth of shapes, not node count)."""
+    topology = "geo" if rng.uniform() < 0.5 else "synthetic"
+    num_stages = int(rng.integers(2, 5))
+    spec = ScenarioSpec(
+        name=f"fuzz-{index}",
+        seed=int(rng.integers(0, 2 ** 16)),
+        topology=topology,
+        num_stages=num_stages,
+        relays_per_stage=int(rng.integers(2, 5)),
+        num_data_nodes=int(rng.integers(1, 3)),
+        data_capacity=int(rng.integers(2, 5)),
+        capacity_range=(1, int(rng.integers(2, 5))),
+        cost_range=(1, int(rng.integers(3, 21))),
+        source_capacity=int(rng.integers(2, 5)),
+        num_locations=int(rng.integers(2, 11)),
+        compute_jitter=float(rng.uniform(0.0, 0.4)),
+        iterations=2,
+        objective="sum" if rng.uniform() < 0.5 else "minmax",
+    )
+    clauses: List[Dict[str, Any]] = []
+    if topology == "geo" and rng.uniform() < 0.5:
+        clauses.append({"kind": "regional_blackout",
+                        "location": int(rng.integers(0, spec.num_locations)),
+                        "at_iteration": 0,
+                        "duration": 1,
+                        "when": float(rng.uniform(0.1, 0.9))})
+    if rng.uniform() < 0.5:
+        clauses.append({"kind": "bernoulli",
+                        "p": float(rng.uniform(0.0, 0.3))})
+    if topology == "geo" and rng.uniform() < 0.3:
+        clauses.append({"kind": "link_degradation", "at_iteration": 0,
+                        "factor": float(rng.uniform(1.5, 8.0)),
+                        "duration": 1})
+    spec = spec.replace(churn=clauses)
+    if topology == "geo" and rng.uniform() < 0.3:
+        spare = int(rng.integers(1, 4))
+        spec = spec.replace(spare_nodes=spare, churn=spec.churn + [
+            {"kind": "flash_crowd", "at_iteration": 1, "nodes": spare}])
+    return spec
+
+
+def _fails(spec: ScenarioSpec, checks: Sequence[str]
+           ) -> Optional[ScenarioDiscrepancy]:
+    try:
+        run_checks(spec, checks)
+        return None
+    except ScenarioDiscrepancy as e:
+        return e
+    except Exception as e:                       # noqa: BLE001
+        # a crash-class bug (IndexError deep in an engine, a numerical
+        # blow-up in the oracle, ...) is exactly what differential
+        # fuzzing is for: wrap it so the shrink+commit pipeline runs on
+        # it instead of aborting the session with a spec-less traceback
+        return ScenarioDiscrepancy(
+            spec, f"crash:{type(e).__name__}", repr(e))
+
+
+_SHRINK_PASSES: Tuple[Tuple[str, Callable[[ScenarioSpec], Dict]], ...] = (
+    ("drop-churn", lambda s: {"churn": s.churn[:-1],
+                              "spare_nodes": 0
+                              if not any(c["kind"] == "flash_crowd"
+                                         for c in s.churn[:-1])
+                              else s.spare_nodes}),
+    ("fewer-relays", lambda s: {"relays_per_stage": s.relays_per_stage - 1}),
+    ("fewer-stages", lambda s: {"num_stages": s.num_stages - 1}),
+    ("one-source", lambda s: {"num_data_nodes": 1}),
+    ("no-jitter", lambda s: {"compute_jitter": 0.0}),
+    ("tight-caps", lambda s: {"capacity_range": (1, 2)}),
+    ("tight-costs", lambda s: {"cost_range": (1, 3)}),
+    ("fewer-iterations", lambda s: {"iterations": 1}),
+)
+
+
+def minimize(spec: ScenarioSpec, checks: Sequence[str],
+             max_attempts: int = 64) -> ScenarioSpec:
+    """Greedy shrink: repeatedly try simplifying edits, keeping any
+    that still reproduce a discrepancy.  Deterministic (no RNG)."""
+    current = spec
+    attempts = 0
+    improved = True
+    while improved and attempts < max_attempts:
+        improved = False
+        for tag, edit in _SHRINK_PASSES:
+            attempts += 1
+            if attempts >= max_attempts:
+                break
+            try:
+                candidate = current.replace(**edit(current))
+            except (ValueError, TypeError):
+                continue                     # edit made the spec invalid
+            if candidate == current:
+                continue
+            if _fails(candidate, checks) is not None:
+                current = candidate
+                improved = True
+    return current
+
+
+@dataclass
+class FuzzFailure:
+    spec: ScenarioSpec
+    minimized: ScenarioSpec
+    check: str
+    detail: str
+    written_to: Optional[str] = None
+
+
+@dataclass
+class FuzzReport:
+    seed: int
+    budget_seconds: float
+    cases: int = 0
+    elapsed: float = 0.0
+    failures: List[FuzzFailure] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+
+def fuzz(seed: int = 0, budget_seconds: float = 10.0,
+         corpus_dir: Optional[str] = None,
+         checks: Sequence[str] = FUZZ_CHECKS,
+         max_cases: Optional[int] = None) -> FuzzReport:
+    """Seeded randomized differential testing under a wall-clock budget.
+
+    Each failing case is shrunk with `minimize` and (when
+    ``corpus_dir`` is given — defaulting it to the committed corpus
+    directory is the caller's choice) written as
+    ``shrunk-<check>-<seed>.json`` so it permanently joins the corpus.
+    """
+    rng = np.random.default_rng(seed)
+    report = FuzzReport(seed=seed, budget_seconds=budget_seconds)
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < budget_seconds:
+        if max_cases is not None and report.cases >= max_cases:
+            break
+        spec = random_spec(rng, report.cases)
+        report.cases += 1
+        err = _fails(spec, checks)
+        if err is None:
+            continue
+        small = minimize(spec, checks)
+        small_err = _fails(small, checks) or err
+        failure = FuzzFailure(spec=spec, minimized=small,
+                              check=small_err.check,
+                              detail=small_err.detail)
+        if corpus_dir:
+            os.makedirs(corpus_dir, exist_ok=True)
+            named = small.replace(
+                name=f"shrunk-{small_err.check}-{spec.seed}")
+            path = os.path.join(corpus_dir, f"{named.name}.json")
+            with open(path, "w") as fh:
+                fh.write(named.to_json() + "\n")
+            failure.written_to = path
+        report.failures.append(failure)
+    report.elapsed = time.monotonic() - t0
+    return report

@@ -1,0 +1,252 @@
+"""Declarative scenario specification (the corpus' single source of truth).
+
+A `ScenarioSpec` names everything the three execution layers need to
+materialize *the same* training scenario deterministically:
+
+* topology — geo-distributed (paper Sec. VI: 10 locations, 50-500 Mb/s
+  links, heterogeneous compute) or abstract synthetic (paper Tables
+  IV/V: integer d_ij drawn directly), node counts, capacity ranges,
+  per-region compute/bandwidth heterogeneity, and a pool of *spare*
+  nodes (created dead) for flash-crowd joins;
+* churn program — an ordered list of clauses composed into one
+  `ChurnModel`: Bernoulli coin-flips, deterministic trace replay,
+  scripted regional blackouts, correlated regional outages,
+  flash-crowd joins, link degradation;
+* model family and run shape — the reduced model config the
+  real-compute runtime trains, the simulator profile derived from it,
+  iterations and per-data-node microbatch provisioning;
+* seed — every random draw in the generator is keyed on
+  ``(spec.seed, fixed salt)`` so the same spec always materializes the
+  same networks, plans and faults across the flow, sim, and runtime
+  layers.
+
+Specs round-trip through plain dicts/JSON (`to_dict` / `from_dict`);
+`from_dict` rejects unknown fields and `validate()` rejects
+out-of-range or cross-field-inconsistent values, so a corpus file that
+drifts from the schema fails loudly instead of silently running a
+different scenario.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+#: churn clause schema: kind -> (required fields, {optional: default}).
+CHURN_CLAUSES: Dict[str, Tuple[Tuple[str, ...], Dict[str, Any]]] = {
+    # independent per-relay crash/rejoin coin flips (paper Sec. VI)
+    "bernoulli": (("p",), {}),
+    # deterministic replay: events = [[iteration, "crash"|"rejoin",
+    # node_id(, when)], ...]
+    "trace": (("events",), {}),
+    # scripted blackout: every relay in `location` crashes at
+    # `at_iteration` (fraction `when` into it), rejoins `duration`
+    # iterations later
+    "regional_blackout": (("location", "at_iteration"),
+                          {"duration": 2, "when": 0.25}),
+    # correlated random outages keyed on Node.location
+    "regional_outage": (("outage_prob",),
+                        {"severity": 1.0, "rejoin_prob": 0.5}),
+    # `nodes` spare relays (pre-created dead) join at `at_iteration`
+    "flash_crowd": (("at_iteration", "nodes"), {}),
+    # inter-region bandwidth divided by `factor` at `at_iteration`,
+    # restored `duration` iterations later (0 = permanent)
+    "link_degradation": (("at_iteration", "factor"),
+                         {"duration": 0, "inter_region_only": True}),
+}
+
+#: clause kinds that draw no randomness (replayable / analyzable exactly)
+DETERMINISTIC_CLAUSES = frozenset(
+    {"trace", "regional_blackout", "flash_crowd", "link_degradation"})
+
+#: clause kinds that only make sense on the geo topology
+GEO_ONLY_CLAUSES = frozenset(
+    {"regional_blackout", "regional_outage", "link_degradation"})
+
+
+@dataclass
+class ScenarioSpec:
+    """One scenario, materializable as a flow problem, a simulated
+    training run, and a reduced real-compute training run."""
+
+    name: str
+    seed: int = 0
+
+    # ---- topology -----------------------------------------------------
+    topology: str = "geo"                 # "geo" | "synthetic"
+    num_stages: int = 4
+    relays_per_stage: int = 4
+    num_data_nodes: int = 2
+    data_capacity: int = 4
+    capacity_range: Tuple[int, int] = (1, 4)   # relay cap ~ int(U[lo, hi))
+    num_locations: int = 10                     # geo only
+    compute_cost: float = 6.0                   # geo: mean sec/microbatch
+    compute_jitter: float = 0.3                 # geo: per-node jitter
+    min_bandwidth: float = 50e6 / 8             # geo: inter-location floor
+    max_bandwidth: float = 500e6 / 8            # geo: intra-location links
+    region_compute_scale: Optional[List[float]] = None   # geo: c_i multiplier
+    region_bandwidth_scale: Optional[List[float]] = None  # geo: bw multiplier
+    cost_range: Tuple[int, int] = (1, 20)       # synthetic: integer d_ij
+    source_capacity: int = 4                    # synthetic source capacity
+    spare_nodes: int = 0                        # flash-crowd pool (geo)
+
+    # ---- churn program ------------------------------------------------
+    churn: List[Dict[str, Any]] = field(default_factory=list)
+
+    # ---- run shape ----------------------------------------------------
+    iterations: int = 6
+    scheduler: str = "gwtf"                     # "gwtf" | "swarm"
+    objective: str = "minmax"                   # GWTF refinement objective
+
+    # ---- model family (runtime + simulator profile) -------------------
+    model: str = "gwtf-llama-300m"
+    model_layers: int = 4
+    model_d: int = 128
+    model_vocab: int = 256
+    seq_len: int = 64
+    microbatch_size: int = 2
+    microbatches: int = 4                       # per data node per iteration
+
+    # ------------------------------------------------------------------
+    @property
+    def num_relays(self) -> int:
+        return self.num_stages * self.relays_per_stage
+
+    @property
+    def base_nodes(self) -> int:
+        """Node count before the spare (flash-crowd) pool."""
+        return self.num_data_nodes + self.num_relays
+
+    @property
+    def deterministic_churn(self) -> bool:
+        """True iff every churn clause replays without RNG draws."""
+        return all(c.get("kind") in DETERMINISTIC_CLAUSES
+                   for c in self.churn)
+
+    # ------------------------------------------------------------------
+    def validate(self) -> "ScenarioSpec":
+        """Raise ``ValueError`` on any inconsistent field; returns self."""
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError("scenario name must be a non-empty string")
+        if self.topology not in ("geo", "synthetic"):
+            raise ValueError(
+                f"{self.name}: unknown topology {self.topology!r} "
+                f"(expected 'geo' | 'synthetic')")
+        if self.scheduler not in ("gwtf", "swarm"):
+            raise ValueError(
+                f"{self.name}: unknown scheduler {self.scheduler!r} "
+                f"(expected 'gwtf' | 'swarm')")
+        if self.objective not in ("minmax", "sum"):
+            raise ValueError(f"{self.name}: unknown objective "
+                             f"{self.objective!r}")
+        for fld, lo in (("num_stages", 1), ("relays_per_stage", 1),
+                        ("num_data_nodes", 1), ("data_capacity", 1),
+                        ("num_locations", 1), ("iterations", 1),
+                        ("microbatches", 1), ("microbatch_size", 1),
+                        ("seq_len", 1), ("spare_nodes", 0)):
+            v = getattr(self, fld)
+            if not isinstance(v, int) or v < lo:
+                raise ValueError(f"{self.name}: {fld}={v!r} must be an "
+                                 f"int >= {lo}")
+        for rng_fld in ("capacity_range", "cost_range"):
+            lo, hi = getattr(self, rng_fld)
+            if not (lo >= 1 and hi > lo):
+                raise ValueError(f"{self.name}: {rng_fld}=({lo}, {hi}) "
+                                 f"must satisfy 1 <= lo < hi")
+        for scale_fld in ("region_compute_scale", "region_bandwidth_scale"):
+            scale = getattr(self, scale_fld)
+            if scale is None:
+                continue
+            if self.topology != "geo":
+                raise ValueError(f"{self.name}: {scale_fld} requires the "
+                                 f"geo topology")
+            if len(scale) != self.num_locations:
+                raise ValueError(
+                    f"{self.name}: {scale_fld} has {len(scale)} entries "
+                    f"for {self.num_locations} locations")
+            if any(s <= 0 for s in scale):
+                raise ValueError(f"{self.name}: {scale_fld} entries must "
+                                 f"be positive")
+        if self.spare_nodes and self.topology != "geo":
+            raise ValueError(f"{self.name}: spare_nodes (flash crowd) "
+                             f"requires the geo topology")
+        self._validate_churn()
+        return self
+
+    def _validate_churn(self) -> None:
+        flash_total = 0
+        for i, clause in enumerate(self.churn):
+            if not isinstance(clause, dict):
+                raise ValueError(f"{self.name}: churn[{i}] must be a dict")
+            kind = clause.get("kind")
+            if kind not in CHURN_CLAUSES:
+                raise ValueError(
+                    f"{self.name}: churn[{i}] has unknown kind {kind!r} "
+                    f"(expected one of {sorted(CHURN_CLAUSES)})")
+            required, optional = CHURN_CLAUSES[kind]
+            fields = set(clause) - {"kind"}
+            missing = set(required) - fields
+            unknown = fields - set(required) - set(optional)
+            if missing:
+                raise ValueError(f"{self.name}: churn[{i}] ({kind}) is "
+                                 f"missing field(s) {sorted(missing)}")
+            if unknown:
+                raise ValueError(f"{self.name}: churn[{i}] ({kind}) has "
+                                 f"unknown field(s) {sorted(unknown)}")
+            if kind in GEO_ONLY_CLAUSES and self.topology != "geo":
+                raise ValueError(f"{self.name}: churn[{i}] ({kind}) "
+                                 f"requires the geo topology")
+            if kind == "bernoulli" and not 0.0 <= clause["p"] <= 1.0:
+                raise ValueError(f"{self.name}: churn[{i}] p={clause['p']} "
+                                 f"out of [0, 1]")
+            if kind == "flash_crowd":
+                flash_total += int(clause["nodes"])
+            if kind == "regional_blackout" and not (
+                    0 <= clause["location"] < self.num_locations):
+                raise ValueError(
+                    f"{self.name}: churn[{i}] location={clause['location']} "
+                    f"out of range for {self.num_locations} locations")
+            if kind == "link_degradation" and clause["factor"] <= 0:
+                raise ValueError(f"{self.name}: churn[{i}] factor must be "
+                                 f"positive")
+        if flash_total > self.spare_nodes:
+            raise ValueError(
+                f"{self.name}: flash_crowd clauses join {flash_total} nodes "
+                f"but only spare_nodes={self.spare_nodes} are provisioned")
+
+    # ------------------------------------------------------------------
+    # dict / JSON round-trip
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["capacity_range"] = list(self.capacity_range)
+        d["cost_range"] = list(self.cost_range)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ScenarioSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"scenario {d.get('name', '<unnamed>')!r}: unknown "
+                f"field(s) {sorted(unknown)} — the spec schema is "
+                f"documented in scenarios/README.md")
+        kwargs = dict(d)
+        for rng_fld in ("capacity_range", "cost_range"):
+            if rng_fld in kwargs:
+                kwargs[rng_fld] = tuple(kwargs[rng_fld])
+        spec = cls(**kwargs)
+        return spec.validate()
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ScenarioSpec":
+        return cls.from_dict(json.loads(text))
+
+    def replace(self, **changes) -> "ScenarioSpec":
+        """Functional update (used by the fuzz shrinker); validates."""
+        return dataclasses.replace(self, **changes).validate()

@@ -21,8 +21,8 @@ Layers, each its own module:
 from repro.core.sim.engine import SimulationEngine
 from repro.core.sim.facade import TrainingSimulator
 from repro.core.sim.faults import (BernoulliChurn, ChurnContext, ChurnModel,
-                                   ComposedChurn, RegionalOutageChurn,
-                                   TraceChurn)
+                                   ComposedChurn, LinkDegradationChurn,
+                                   RegionalOutageChurn, TraceChurn)
 from repro.core.sim.metrics import IterationMetrics, ModelProfile, summarize
 from repro.core.sim.policies import (FixedPolicy, GWTFPolicy, RoutingPolicy,
                                      SwarmPolicy, make_policy)
@@ -30,7 +30,7 @@ from repro.core.sim.policies import (FixedPolicy, GWTFPolicy, RoutingPolicy,
 __all__ = [
     "SimulationEngine", "TrainingSimulator",
     "BernoulliChurn", "ChurnContext", "ChurnModel", "ComposedChurn",
-    "RegionalOutageChurn", "TraceChurn",
+    "LinkDegradationChurn", "RegionalOutageChurn", "TraceChurn",
     "IterationMetrics", "ModelProfile", "summarize",
     "FixedPolicy", "GWTFPolicy", "RoutingPolicy", "SwarmPolicy",
     "make_policy",

@@ -15,6 +15,12 @@ New capabilities are opt-in keyword arguments:
 * ``policy=`` — a pre-built `RoutingPolicy`, overriding ``scheduler=``;
 * ``max_events=`` — the per-iteration event budget (exhaustion is now
   reported via `IterationMetrics.truncated` + a ``RuntimeWarning``).
+
+Conflicting keyword combinations used to be resolved by silently
+ignoring one side (``churn=`` dropped when ``churn_model=`` was given,
+``scheduler=``/``fixed_paths=`` dropped when ``policy=`` was given) —
+a scenario spec that set both would run a *different* scenario than it
+described.  They now raise ``ValueError``.
 """
 from __future__ import annotations
 
@@ -31,7 +37,8 @@ from repro.core.sim.policies import (GWTFPolicy, RoutingPolicy, SwarmPolicy,
 
 
 class TrainingSimulator:
-    def __init__(self, net: FlowNetwork, *, scheduler: str = "gwtf",
+    def __init__(self, net: FlowNetwork, *,
+                 scheduler: Optional[str] = None,
                  profile: Optional[ModelProfile] = None,
                  churn: float = 0.0, timeout: float = 30.0,
                  max_retries: int = 2, fixed_paths=None,
@@ -39,8 +46,28 @@ class TrainingSimulator:
                  churn_model: Optional[ChurnModel] = None,
                  policy: Optional[RoutingPolicy] = None,
                  max_events: int = 500_000):
-        """scheduler: 'gwtf' | 'swarm' | 'fixed' (preset paths — used for
-        the DT-FM optimal-schedule baseline of Table VI)."""
+        """scheduler: 'gwtf' (default) | 'swarm' | 'fixed' (preset paths
+        — used for the DT-FM optimal-schedule baseline of Table VI)."""
+        if churn and churn_model is not None:
+            raise ValueError(
+                f"churn={churn} and churn_model={churn_model!r} both "
+                f"given — the Bernoulli rate would be silently ignored; "
+                f"pass exactly one (compose with ComposedChurn instead)")
+        if policy is not None:
+            if scheduler is not None:
+                raise ValueError(
+                    f"scheduler={scheduler!r} and policy={policy!r} both "
+                    f"given — the scheduler name would be silently "
+                    f"ignored; pass exactly one")
+            if fixed_paths:
+                raise ValueError(
+                    "fixed_paths given alongside policy= — they would be "
+                    "silently ignored; build the FixedPolicy yourself")
+        elif fixed_paths and scheduler != "fixed":
+            raise ValueError(
+                f"fixed_paths given but scheduler={scheduler!r} — preset "
+                f"paths are only consumed by scheduler='fixed'")
+        scheduler = scheduler or "gwtf"
         self.net = net
         self.profile = profile or ModelProfile(fwd_compute=2.0)
         self.churn = churn

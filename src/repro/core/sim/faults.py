@@ -24,11 +24,17 @@ Models:
 * `ComposedChurn` — applies several models in sequence (union of
   crashes, earliest crash time wins), e.g. background Bernoulli churn
   plus rare regional outages.
+* `LinkDegradationChurn` — deterministic link-quality fault: at a
+  scripted iteration the (optionally inter-region-only) bandwidth
+  matrix is divided by a factor and restored a fixed number of
+  iterations later.  Crashes nobody; the fault propagates through the
+  Eq. 1 cost caches instead.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, List, Protocol, Sequence, Tuple
+from typing import (Callable, Dict, Iterable, List, Optional, Protocol,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -165,6 +171,71 @@ class RegionalOutageChurn:
                     n.alive = True
                     ctx.on_rejoin(n)
         return crash_times
+
+
+class LinkDegradationChurn:
+    """Scripted bandwidth degradation (no crashes).
+
+    At ``at_iteration`` every link's bandwidth is divided by ``factor``
+    (``inter_region_only=True`` restricts the cut to links whose
+    endpoints live in different ``Node.location`` regions — the WAN
+    legs of the paper's geo topology); ``duration`` iterations later
+    the cut is undone by re-multiplying the degraded entries
+    (0 = permanent).  The multiplicative undo composes correctly with
+    other concurrent degradations (a snapshot restore would clobber
+    them); it is bit-exact for power-of-two factors and within 1 ulp
+    otherwise.  The mutation goes
+    through ``FlowNetwork.invalidate_costs`` so every consumer of the
+    Eq. 1 caches — the GWTF protocol's cost oracle, the engine's
+    batched cost tables, the runtime's fault views — sees the change
+    on its next query.
+    """
+
+    def __init__(self, at_iteration: int, factor: float, *,
+                 duration: int = 0, inter_region_only: bool = True):
+        if factor <= 0:
+            raise ValueError("degradation factor must be positive")
+        self.at_iteration = at_iteration
+        self.factor = factor
+        self.duration = duration
+        self.inter_region_only = inter_region_only
+        # (size, mask-or-None) of the entries this model degraded; the
+        # restore *multiplies them back* rather than restoring a saved
+        # matrix, so overlapping degradation windows (e.g. two models in
+        # a ComposedChurn) compose and un-compose correctly instead of
+        # one model's snapshot clobbering the other's active cut
+        self._applied: Optional[Tuple[int, Optional[np.ndarray]]] = None
+
+    def sample(self, ctx: ChurnContext) -> Dict[int, float]:
+        net = ctx.net
+        if ctx.iteration == self.at_iteration:
+            bw = net.bandwidth
+            n = bw.shape[0]
+            if self.inter_region_only:
+                loc = np.full(n, -1, np.int64)
+                for nid, node in net.nodes.items():
+                    if nid < n:
+                        loc[nid] = node.location
+                inter = loc[:, None] != loc[None, :]
+                bw[inter] /= self.factor
+                self._applied = (n, inter)
+            else:
+                bw /= self.factor
+                self._applied = (n, None)
+            net.invalidate_costs()
+        elif (self.duration and self._applied is not None
+              and ctx.iteration == self.at_iteration + self.duration):
+            n, mask = self._applied
+            # the network may have grown since (joins); undo only the
+            # entries the degradation touched
+            if mask is None:
+                net.bandwidth[:n, :n] *= self.factor
+            else:
+                sub = net.bandwidth[:n, :n]
+                sub[mask] *= self.factor
+            self._applied = None
+            net.invalidate_costs()
+        return {}
 
 
 class ComposedChurn:

@@ -18,12 +18,13 @@ Import from `repro.core.sim` in new code; this module stays for the
 existing callers (tests, benchmarks, examples).
 """
 from repro.core.sim import (BernoulliChurn, ComposedChurn, IterationMetrics,
-                            ModelProfile, RegionalOutageChurn,
-                            SimulationEngine, TraceChurn, TrainingSimulator,
-                            summarize)
+                            LinkDegradationChurn, ModelProfile,
+                            RegionalOutageChurn, SimulationEngine, TraceChurn,
+                            TrainingSimulator, summarize)
 
 __all__ = [
     "TrainingSimulator", "SimulationEngine", "ModelProfile",
     "IterationMetrics", "BernoulliChurn", "TraceChurn",
-    "RegionalOutageChurn", "ComposedChurn", "summarize",
+    "RegionalOutageChurn", "ComposedChurn", "LinkDegradationChurn",
+    "summarize",
 ]

@@ -1,0 +1,442 @@
+"""Scenario corpus + cross-layer differential harness.
+
+Fast representative checks run in tier-1; the full corpus sweep, the
+runtime-involving differentials and the seeded fuzz session carry the
+``scenarios`` marker and run in the dedicated CI job
+(``pytest -m scenarios``; tier-1 deselects them via pytest.ini).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.flow.mincost import MinCostFlow, solve_training_flow
+from repro.core.scenarios import generate
+from repro.core.scenarios.corpus import (GOLDEN_PINNED, get_scenario,
+                                         load_corpus, load_golden)
+from repro.core.scenarios.harness import (FUZZ_CHECKS, ScenarioDiscrepancy,
+                                          check_capacity_monotonicity,
+                                          check_flow_equivalence,
+                                          check_optimal_consistency,
+                                          check_permutation_invariance,
+                                          check_sim_runtime_consistency,
+                                          check_zero_churn, fuzz, minimize)
+from repro.core.scenarios.spec import ScenarioSpec
+from repro.core.sim.metrics import summarize
+from tests._hypothesis_compat import given, settings, st
+
+CORPUS = load_corpus()
+CORPUS_IDS = [s.name for s in CORPUS]
+
+
+def small_spec(**kw):
+    base = dict(name="t", seed=1, topology="synthetic", num_stages=3,
+                relays_per_stage=3, num_data_nodes=1, source_capacity=3,
+                capacity_range=(1, 3), cost_range=(1, 9), iterations=2)
+    base.update(kw)
+    return ScenarioSpec(**base).validate()
+
+
+# ---------------------------------------------------------------------------
+# Spec schema (satellite: strict validation)
+# ---------------------------------------------------------------------------
+
+class TestSpecSchema:
+    def test_round_trip(self):
+        spec = get_scenario("geo-flash-crowd")
+        again = ScenarioSpec.from_json(spec.to_json())
+        assert again == spec
+
+    def test_unknown_field_rejected(self):
+        d = small_spec().to_dict()
+        d["chrun"] = []                      # typo'd field must not pass
+        with pytest.raises(ValueError, match="unknown field"):
+            ScenarioSpec.from_dict(d)
+
+    def test_unknown_churn_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown kind"):
+            small_spec(churn=[{"kind": "meteor_strike"}])
+
+    def test_churn_clause_field_typo_rejected(self):
+        with pytest.raises(ValueError, match="unknown field"):
+            small_spec(churn=[{"kind": "bernoulli", "p": 0.1,
+                               "prob": 0.1}])
+        with pytest.raises(ValueError, match="missing field"):
+            small_spec(churn=[{"kind": "bernoulli"}])
+
+    def test_geo_only_clause_on_synthetic_rejected(self):
+        with pytest.raises(ValueError, match="geo topology"):
+            small_spec(churn=[{"kind": "regional_blackout", "location": 0,
+                               "at_iteration": 0}])
+
+    def test_flash_crowd_needs_spares(self):
+        with pytest.raises(ValueError, match="spare_nodes"):
+            ScenarioSpec(name="t", topology="geo",
+                         churn=[{"kind": "flash_crowd", "at_iteration": 1,
+                                 "nodes": 3}]).validate()
+
+    def test_corpus_specs_validate_and_are_unique(self):
+        assert len(CORPUS) >= 12
+        assert len({s.name for s in CORPUS}) == len(CORPUS)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic materialization
+# ---------------------------------------------------------------------------
+
+class TestGenerator:
+    def test_network_deterministic(self):
+        spec = get_scenario("table2-het-churn10")
+        a, _ = generate.build_network(spec)
+        b, _ = generate.build_network(spec)
+        np.testing.assert_array_equal(a.latency, b.latency)
+        np.testing.assert_array_equal(a.bandwidth, b.bandwidth)
+        assert [(n.id, n.stage, n.capacity, n.compute_cost, n.location)
+                for n in a.nodes.values()] == \
+               [(n.id, n.stage, n.capacity, n.compute_cost, n.location)
+                for n in b.nodes.values()]
+
+    def test_spare_nodes_created_dead(self):
+        spec = get_scenario("geo-flash-crowd")
+        net, _ = generate.build_network(spec)
+        spares = generate.spare_node_ids(spec)
+        assert len(spares) == spec.spare_nodes
+        assert all(not net.nodes[nid].alive for nid in spares)
+        assert all(net.nodes[nid].alive for nid in range(spec.base_nodes))
+
+    def test_region_heterogeneity_applied(self):
+        spec = get_scenario("geo-hetero-compute")
+        flat = spec.replace(region_compute_scale=None,
+                            region_bandwidth_scale=None)
+        het, _ = generate.build_network(spec)
+        base, _ = generate.build_network(flat)
+        scaled = [nid for nid, n in het.nodes.items() if not n.is_data
+                  and n.compute_cost != base.nodes[nid].compute_cost]
+        assert scaled                        # some region got slower
+        assert (het.bandwidth <= base.bandwidth + 1e-9).all()
+        assert (het.bandwidth < base.bandwidth).any()
+
+    def test_sim_runs_are_reproducible(self):
+        spec = get_scenario("geo-churn5")
+        a = summarize(generate.run_sim(spec), warmup=1)
+        b = summarize(generate.run_sim(spec), warmup=1)
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Differential harness — fast representatives (tier-1)
+# ---------------------------------------------------------------------------
+
+class TestHarnessFast:
+    def test_flow_equivalence_synthetic(self):
+        check_flow_equivalence(small_spec(), max_rounds=80)
+
+    def test_flow_equivalence_geo_with_spares(self):
+        spec = ScenarioSpec(
+            name="t", seed=2, topology="geo", num_stages=3,
+            relays_per_stage=3, num_data_nodes=2, data_capacity=3,
+            spare_nodes=2, iterations=2,
+            churn=[{"kind": "flash_crowd", "at_iteration": 1, "nodes": 2}])
+        check_flow_equivalence(spec, max_rounds=80)
+
+    def test_metamorphic_synthetic(self):
+        spec = small_spec(seed=5, num_data_nodes=2)
+        check_optimal_consistency(spec)
+        check_capacity_monotonicity(spec)
+        check_permutation_invariance(spec)
+
+    def test_discrepancy_detected_on_tampered_engine(self, monkeypatch):
+        """The harness is not vacuous: perturbing the cost matrix that
+        one engine sees must make check_flow_equivalence itself raise
+        ScenarioDiscrepancy (guards the comparison polarity, not just
+        the engines)."""
+        spec = small_spec(seed=3)
+        real_build = generate.build_flow
+
+        def tampered(s, engine="batched", net=None, cost_matrix=None):
+            if engine == "batched" and cost_matrix is not None:
+                cost_matrix = np.asarray(cost_matrix) + 1.0
+            return real_build(s, engine, net=net, cost_matrix=cost_matrix)
+
+        monkeypatch.setattr(generate, "build_flow", tampered)
+        with pytest.raises(ScenarioDiscrepancy, match="batched"):
+            check_flow_equivalence(spec)
+
+    def test_capacity_monotonicity_is_falsifiable(self):
+        """Sanity: the invariant check actually compares costs (a fake
+        regression — raising all link costs — is caught by re-solving
+        at higher cost and asserting the bound manually)."""
+        spec = small_spec(seed=4)
+        base = generate.solve_optimal(spec, "dense")
+        net, cm = generate.build_network(spec)
+        worse = solve_training_flow(net, cost_matrix=np.asarray(cm) + 5.0,
+                                    max_flow=base.flow, method="dense")
+        assert worse.cost > base.cost
+
+
+# ---------------------------------------------------------------------------
+# Property tests: MinCostFlow dial vs dense on scenario-generated
+# layered graphs (satellite)
+# ---------------------------------------------------------------------------
+
+class TestMinCostFlowProperties:
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6), stages=st.integers(2, 5),
+           relays=st.integers(2, 5), chi=st.integers(3, 25),
+           sources=st.integers(1, 3))
+    def test_dial_matches_dense_on_layered_graphs(self, seed, stages,
+                                                  relays, chi, sources):
+        spec = ScenarioSpec(name="prop", seed=seed, topology="synthetic",
+                            num_stages=stages, relays_per_stage=relays,
+                            num_data_nodes=sources, source_capacity=3,
+                            capacity_range=(1, 3), cost_range=(1, chi),
+                            iterations=1).validate()
+        net, cm = generate.build_network(spec)
+        dense = solve_training_flow(net, cost_matrix=cm, method="dense")
+        dial = solve_training_flow(net, cost_matrix=cm, method="dial")
+        auto = solve_training_flow(net, cost_matrix=cm, method="auto")
+        assert dial.flow == dense.flow == auto.flow
+        assert abs(dial.cost - dense.cost) <= 1e-6 * max(1.0, dense.cost)
+        assert auto.cost == dial.cost        # auto selects dial here
+
+    def test_non_integer_costs_fall_back_to_dense(self):
+        spec = ScenarioSpec(name="t", seed=1, topology="geo", num_stages=2,
+                            relays_per_stage=2, num_data_nodes=1,
+                            iterations=1).validate()
+        net, _ = generate.build_network(spec)
+        auto = solve_training_flow(net, method="auto")
+        dense = solve_training_flow(net, method="dense")
+        assert auto.flow == dense.flow
+        assert auto.cost == pytest.approx(dense.cost, rel=1e-12)
+        with pytest.raises(ValueError, match="integer"):
+            solve_training_flow(net, method="dial")
+
+    def test_empty_and_degenerate_graphs(self):
+        # empty arc set: nothing flows, both cores agree
+        for method in ("dial", "dense"):
+            mc = MinCostFlow(4)
+            assert mc.solve(0, 3, method=method) == (0.0, 0.0)
+        # disconnected sink
+        for method in ("dial", "dense"):
+            mc = MinCostFlow(4)
+            mc.add_edge(0, 1, 5, 1)
+            assert mc.solve(0, 3, method=method) == (0.0, 0.0)
+        # zero-capacity path
+        for method in ("dial", "dense"):
+            mc = MinCostFlow(3)
+            mc.add_edge(0, 1, 0, 1)
+            mc.add_edge(1, 2, 4, 1)
+            assert mc.solve(0, 2, method=method) == (0.0, 0.0)
+        # a stage emptied by churn: the layered graph has no through-path
+        spec = small_spec(seed=6)
+        net, cm = generate.build_network(spec)
+        for n in net.stage_nodes(1):
+            net.kill_node(n.id)
+        plan = solve_training_flow(net, cost_matrix=cm)
+        assert plan.flow == 0.0 and plan.cost == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Golden-metrics regression (satellite): tolerance-free pins
+# ---------------------------------------------------------------------------
+
+class TestGoldenMetrics:
+    @pytest.mark.parametrize("name", GOLDEN_PINNED)
+    def test_pinned_summaries_bit_exact(self, name):
+        """Table II/III summarize() columns for the pinned corpus
+        scenarios — exact equality, no tolerances: seeded GWTF runs
+        are bit-deterministic end to end."""
+        spec = get_scenario(name)
+        golden = load_golden()[name]
+        flow = generate.run_flow(spec, "batched")
+        assert len(flow.flows) == golden["flow"]["chains"]
+        assert flow.total_cost == golden["flow"]["total_cost"]
+        assert flow.rounds == golden["flow"]["rounds"]
+        table = summarize(generate.run_sim(spec), warmup=1)
+        assert {k: list(v) for k, v in table.items()} == golden["sim"]
+
+    def test_golden_covers_whole_corpus(self):
+        golden = load_golden()
+        for spec in load_corpus(include_shrunk=False):
+            assert spec.name in golden, f"{spec.name} missing a golden"
+
+
+# ---------------------------------------------------------------------------
+# Facade kwarg validation (satellite)
+# ---------------------------------------------------------------------------
+
+class TestFacadeValidation:
+    def _net(self):
+        net, _ = generate.build_network(small_spec(topology="geo",
+                                                   num_data_nodes=1))
+        return net
+
+    def test_unknown_kwarg_raises(self):
+        from repro.core.simulator import TrainingSimulator
+        with pytest.raises(TypeError):
+            TrainingSimulator(self._net(), scheduler="gwtf",
+                              chrun_model=None)
+
+    def test_churn_rate_with_churn_model_raises(self):
+        from repro.core.simulator import TrainingSimulator, TraceChurn
+        with pytest.raises(ValueError, match="churn_model"):
+            TrainingSimulator(self._net(), churn=0.1,
+                              churn_model=TraceChurn([]))
+
+    def test_scheduler_with_policy_raises(self):
+        from repro.core.simulator import TrainingSimulator
+        from repro.core.sim.policies import FixedPolicy
+        net = self._net()
+        with pytest.raises(ValueError, match="scheduler"):
+            TrainingSimulator(net, scheduler="gwtf",
+                              policy=FixedPolicy(net, []))
+
+    def test_fixed_paths_without_fixed_scheduler_raises(self):
+        from repro.core.simulator import TrainingSimulator
+        with pytest.raises(ValueError, match="fixed"):
+            TrainingSimulator(self._net(), scheduler="gwtf",
+                              fixed_paths=[[0, 1, 2, 0]])
+
+    def test_valid_combinations_still_work(self):
+        from repro.core.simulator import TrainingSimulator, TraceChurn
+        net = self._net()
+        sim = TrainingSimulator(net, scheduler="gwtf",
+                                churn_model=TraceChurn([]),
+                                rng=np.random.default_rng(0))
+        m = sim.run_iteration()
+        assert m.completed == m.launched > 0
+
+
+# ---------------------------------------------------------------------------
+# Fuzz plumbing (shrinker correctness; budget session is marker-gated)
+# ---------------------------------------------------------------------------
+
+class TestFuzzPlumbing:
+    def test_minimize_shrinks_and_preserves_failure(self):
+        """Shrinking against an artificial predicate ('relays_per_stage
+        >= 3 fails') must return a still-failing, strictly smaller,
+        valid spec."""
+        from repro.core.scenarios import harness
+
+        spec = small_spec(seed=8, num_stages=4, relays_per_stage=4,
+                          num_data_nodes=2,
+                          churn=[{"kind": "bernoulli", "p": 0.2}])
+
+        def fake_check(s):
+            if s.relays_per_stage >= 3:
+                raise ScenarioDiscrepancy(s, "fake", "too many relays")
+            return {}
+
+        orig = harness.CHECKS
+        harness.CHECKS = dict(orig, fake=(fake_check, lambda s: True))
+        try:
+            small = minimize(spec, ["fake"])
+        finally:
+            harness.CHECKS = orig
+        assert small.relays_per_stage == 3      # shrunk to the boundary
+        assert small.num_stages < spec.num_stages
+        assert not small.churn
+        small.validate()
+
+    def test_fuzz_wraps_crash_class_bugs(self, tmp_path):
+        """A check that dies with an arbitrary exception (not a
+        ScenarioDiscrepancy) must still go through the shrink+commit
+        pipeline instead of aborting the session."""
+        from repro.core.scenarios import harness
+
+        def crashing_check(s):
+            raise IndexError("boom deep inside an engine")
+
+        orig = harness.CHECKS
+        harness.CHECKS = dict(orig, crashy=(crashing_check,
+                                            lambda s: True))
+        try:
+            rep = fuzz(seed=2, budget_seconds=30.0, max_cases=1,
+                       corpus_dir=str(tmp_path), checks=["crashy"])
+        finally:
+            harness.CHECKS = orig
+        assert len(rep.failures) == 1
+        f = rep.failures[0]
+        assert f.check == "crash:IndexError"
+        assert "boom" in f.detail
+        assert f.written_to and os.path.exists(f.written_to)
+
+    def test_fuzz_writes_shrunk_spec_into_corpus_dir(self, tmp_path):
+        from repro.core.scenarios import harness
+
+        calls = {"n": 0}
+
+        def fake_check(s):
+            calls["n"] += 1
+            raise ScenarioDiscrepancy(s, "fake", "always fails")
+
+        orig = harness.CHECKS
+        harness.CHECKS = dict(orig, fake=(fake_check, lambda s: True))
+        try:
+            rep = fuzz(seed=1, budget_seconds=30.0, max_cases=1,
+                       corpus_dir=str(tmp_path), checks=["fake"])
+        finally:
+            harness.CHECKS = orig
+        assert not rep.ok and len(rep.failures) == 1
+        f = rep.failures[0]
+        assert f.written_to and os.path.exists(f.written_to)
+        reloaded = ScenarioSpec.from_json(open(f.written_to).read())
+        assert reloaded.name.startswith("shrunk-fake-")
+
+
+# ===========================================================================
+# Marker-gated: full corpus sweep, runtime differentials, fuzz budget
+# ===========================================================================
+
+@pytest.mark.scenarios
+class TestCorpusSweep:
+    @pytest.mark.parametrize("spec", CORPUS, ids=CORPUS_IDS)
+    def test_flow_bit_equality(self, spec):
+        """Every corpus scenario: batched/strict/reference flow engines
+        bit-identical, including through a crash/rejoin episode."""
+        check_flow_equivalence(spec)
+
+    @pytest.mark.parametrize("spec", CORPUS, ids=CORPUS_IDS)
+    def test_oracle_and_metamorphic(self, spec):
+        check_optimal_consistency(spec)
+        check_capacity_monotonicity(spec)
+        check_permutation_invariance(spec)
+
+    @pytest.mark.parametrize("spec", CORPUS, ids=CORPUS_IDS)
+    def test_sim_runs_clean(self, spec):
+        ms = generate.run_sim(spec)
+        assert len(ms) == spec.iterations
+        for m in ms:
+            assert m.completed <= m.launched
+            assert not m.truncated
+
+
+@pytest.mark.scenarios
+class TestRuntimeDifferentials:
+    def test_zero_churn_corpus_scenario(self):
+        check_zero_churn(get_scenario("geo-zero-churn"))
+
+    @pytest.mark.parametrize("name", ["trace-crash-rejoin",
+                                      "table2-het-churn10",
+                                      "geo-flash-crowd"])
+    def test_sim_runtime_consistency(self, name):
+        spec = get_scenario(name)
+        # reduced shape: real compute per iteration is the expensive part
+        spec = spec.replace(iterations=min(spec.iterations, 4))
+        check_sim_runtime_consistency(spec)
+
+
+@pytest.mark.scenarios
+class TestFuzzBudget:
+    def test_seeded_fuzz_finds_no_discrepancies(self, tmp_path):
+        """A seeded randomized session (default 5 s locally; CI sets
+        SCENARIO_FUZZ_SECONDS=30) over the fast checks must find zero
+        discrepancies; any failure lands as a shrunk spec in tmp_path
+        and in the assertion message."""
+        budget = float(os.environ.get("SCENARIO_FUZZ_SECONDS", "5"))
+        rep = fuzz(seed=20260728, budget_seconds=budget,
+                   corpus_dir=str(tmp_path), checks=FUZZ_CHECKS)
+        assert rep.cases > 0
+        assert rep.ok, "\n\n".join(
+            f"[{f.check}] {f.detail}\nminimized: {f.minimized.to_json()}"
+            for f in rep.failures)

@@ -218,6 +218,166 @@ class TestChurnModels:
         assert crash[a] == pytest.approx(30.0)   # earliest of 90 / 30
         assert crash[b] == pytest.approx(20.0)
 
+    @staticmethod
+    def _ctx(net, iteration, rejoined=None):
+        from repro.core.sim.faults import ChurnContext
+        log = rejoined if rejoined is not None else []
+        return ChurnContext(net=net, rng=np.random.default_rng(0),
+                            horizon=100.0, iteration=iteration,
+                            on_rejoin=lambda n: log.append(n.id))
+
+    def test_composed_trace_and_blackout_overlap_same_node(self):
+        """Trace replay + regional blackout hitting the same relay:
+        the union keeps the earliest crash time, and the node's
+        *second* crash record does not double-kill or corrupt the
+        rejoin bookkeeping of either model."""
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[2] * 12, num_data_nodes=1,
+            data_capacity=2, compute_cost=1.0, num_locations=3,
+            rng=np.random.default_rng(4))
+        victim = net.stage_nodes(0)[0]
+        loc = victim.location
+        model = ComposedChurn([
+            TraceChurn([(0, "crash", victim.id, 0.8)]),
+            TraceChurn.regional_blackout(net, location=loc,
+                                         at_iteration=0, duration=2,
+                                         when=0.25),
+        ])
+        crash = model.sample(self._ctx(net, 0))
+        # the blackout's earlier moment wins for the shared victim
+        assert crash[victim.id] == pytest.approx(25.0)
+        region = [n.id for n in net.nodes.values()
+                  if not n.is_data and n.location == loc]
+        assert all(crash[nid] == pytest.approx(25.0) for nid in region)
+        for nid in crash:
+            net.kill_node(nid)
+        # iteration 1: nothing due in either model
+        assert model.sample(self._ctx(net, 1)) == {}
+        assert not net.nodes[victim.id].alive
+        # iteration 2: the blackout's rejoin revives the whole region,
+        # including the doubly-crashed victim, exactly once
+        rejoined = []
+        assert model.sample(self._ctx(net, 2, rejoined)) == {}
+        assert sorted(rejoined) == sorted(region)
+        assert net.nodes[victim.id].alive
+
+    def test_trace_rejoin_during_active_blackout(self):
+        """A later clause may revive a node mid-blackout (operator
+        intervention); the blackout's own scheduled rejoin then finds
+        the node alive and must skip it — and an earlier-in-composition
+        model can still re-crash the revived node in a later
+        iteration."""
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[2] * 12, num_data_nodes=1,
+            data_capacity=2, compute_cost=1.0, num_locations=3,
+            rng=np.random.default_rng(4))
+        victim = net.stage_nodes(0)[0]
+        loc = victim.location
+        model = ComposedChurn([
+            TraceChurn([(2, "crash", victim.id, 0.5)]),
+            TraceChurn.regional_blackout(net, location=loc,
+                                         at_iteration=0, duration=3,
+                                         when=0.25),
+            TraceChurn([(1, "rejoin", victim.id)]),     # mid-blackout
+        ])
+        for nid in model.sample(self._ctx(net, 0)):
+            net.kill_node(nid)
+        assert not net.nodes[victim.id].alive
+        rejoined = []
+        assert model.sample(self._ctx(net, 1, rejoined)) == {}
+        assert rejoined == [victim.id]                  # revived early
+        assert net.nodes[victim.id].alive
+        # iteration 2: the first model re-crashes the revived node
+        crash = model.sample(self._ctx(net, 2))
+        assert crash == {victim.id: pytest.approx(50.0)}
+        net.kill_node(victim.id)
+        # iteration 3: blackout's scheduled rejoin — the victim is dead
+        # again so it *is* revived (trace rejoins skip only alive
+        # nodes), together with the rest of its region, each exactly
+        # once
+        rejoined = []
+        region = [n.id for n in net.nodes.values()
+                  if not n.is_data and n.location == loc]
+        assert model.sample(self._ctx(net, 3, rejoined)) == {}
+        assert sorted(rejoined) == sorted(region)
+        assert all(net.nodes[nid].alive for nid in region)
+
+    def test_composed_interaction_through_full_engine(self):
+        """The overlap semantics hold end-to-end: a composed
+        trace+blackout program runs through the engine with the victim
+        region recovering on schedule."""
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[2] * 12, num_data_nodes=1,
+            data_capacity=2, compute_cost=1.0, num_locations=3,
+            rng=np.random.default_rng(4))
+        victim = net.stage_nodes(0)[0]
+        loc = victim.location
+        model = ComposedChurn([
+            TraceChurn([(0, "crash", victim.id, 0.9)]),
+            TraceChurn.regional_blackout(net, location=loc,
+                                         at_iteration=0, duration=2),
+        ])
+        sim = TrainingSimulator(net, scheduler="gwtf", churn_model=model,
+                                rng=np.random.default_rng(6))
+        sim.run(2)
+        region = [n.id for n in net.nodes.values()
+                  if not n.is_data and n.location == loc]
+        assert all(not net.nodes[nid].alive for nid in region)
+        sim.run(1)
+        assert all(net.nodes[nid].alive for nid in region)
+
+    def test_link_degradation_applies_and_restores(self):
+        from repro.core.sim.faults import LinkDegradationChurn
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[2] * 8, num_data_nodes=1,
+            data_capacity=2, compute_cost=1.0, num_locations=3,
+            rng=np.random.default_rng(4))
+        before = net.bandwidth.copy()
+        ver0 = net.cost_version
+        model = LinkDegradationChurn(1, 4.0, duration=2)
+        assert model.sample(self._ctx(net, 0)) == {}
+        np.testing.assert_array_equal(net.bandwidth, before)
+        assert model.sample(self._ctx(net, 1)) == {}     # degrade
+        assert net.cost_version > ver0
+        locs = np.array([net.nodes[i].location
+                         for i in range(before.shape[0])])
+        inter = locs[:, None] != locs[None, :]
+        np.testing.assert_allclose(net.bandwidth[inter],
+                                   before[inter] / 4.0)
+        np.testing.assert_array_equal(net.bandwidth[~inter],
+                                      before[~inter])
+        ver1 = net.cost_version
+        assert model.sample(self._ctx(net, 2)) == {}     # held
+        assert model.sample(self._ctx(net, 3)) == {}     # restore
+        np.testing.assert_array_equal(net.bandwidth, before)
+        assert net.cost_version > ver1
+
+    def test_overlapping_link_degradations_compose_and_undo(self):
+        """Two degradation windows overlapping in a ComposedChurn:
+        the cuts stack while both are active and each undo removes
+        only its own factor — after both expire the matrix is back to
+        the original (power-of-two factors: bit-exact)."""
+        from repro.core.sim.faults import LinkDegradationChurn
+        net = geo_distributed_network(
+            num_stages=2, relay_capacities=[2] * 8, num_data_nodes=1,
+            data_capacity=2, compute_cost=1.0, num_locations=3,
+            rng=np.random.default_rng(4))
+        before = net.bandwidth.copy()
+        model = ComposedChurn([
+            LinkDegradationChurn(0, 2.0, duration=2,
+                                 inter_region_only=False),
+            LinkDegradationChurn(1, 4.0, duration=2,
+                                 inter_region_only=False),
+        ])
+        model.sample(self._ctx(net, 0))                  # A on
+        np.testing.assert_array_equal(net.bandwidth, before / 2.0)
+        model.sample(self._ctx(net, 1))                  # B on: stacked
+        np.testing.assert_array_equal(net.bandwidth, before / 8.0)
+        model.sample(self._ctx(net, 2))                  # A off, B holds
+        np.testing.assert_array_equal(net.bandwidth, before / 4.0)
+        model.sample(self._ctx(net, 3))                  # B off
+        np.testing.assert_array_equal(net.bandwidth, before)
+
 
 class TestEventAccounting:
     def test_max_events_truncation_warns(self):
