@@ -11,17 +11,29 @@ For growing relay counts (default 100 -> 2000, 10 stages) this measures:
   like-for-like measurement of the indexing speedup;
 * **time-to-convergence** (init + rounds, wall seconds);
 * **solution quality vs. the centralized min-cost max-flow optimum**
-  (sum-of-edge-costs ratio at the same flow value).
+  (sum-of-edge-costs ratio at the same flow value);
+* **hierarchical vs. flat planning** on a paper-style geo topology
+  (10 locations, per-location-pair base latency + node jitter,
+  ``Node.location`` stamped): wall time and cost of
+  ``solve_hierarchical`` against the flat dial MCMF oracle at the same
+  flow value.  The gap is deterministic (seeded, host-independent), so
+  ``hier_gap_bound`` in the committed JSON is an exact gate.  Above
+  ``--optimal-max`` relays the flat oracle is skipped (it is the
+  quadratic cost the hierarchy exists to avoid) and only the
+  hierarchical planning time is recorded — this is how the
+  ``--relays 10000`` row stays tractable.
 
 Results are written to ``BENCH_scale.json`` at the repo root so future
 PRs have a perf trajectory to defend.
 
 ``--smoke`` runs the small sizes only and compares against the committed
 ``BENCH_scale.json``: it exits non-zero if the optimized engine's
-rounds/sec regressed by more than 2x.  To keep the gate meaningful on
-slower CI hosts, the comparison is normalized by the reference engine's
-rounds/sec measured in the same run (the reference is the
-host-speed calibration: a uniformly slower machine slows both engines).
+rounds/sec regressed by more than 2x, or if the hierarchical planner's
+optimality gap exceeds the committed bound.  To keep the time gate
+meaningful on slower CI hosts, the comparison is normalized by the
+reference engine's rounds/sec measured in the same run (the reference
+is the host-speed calibration: a uniformly slower machine slows both
+engines).
 
 This module deliberately avoids the jax-importing benchmark helpers —
 it needs only numpy, so the CI smoke job stays light.
@@ -37,7 +49,8 @@ from pathlib import Path
 import numpy as np
 
 from repro.core.flow.decentralized import GWTFProtocol
-from repro.core.flow.graph import synthetic_network
+from repro.core.flow.graph import FlowNetwork, Node, synthetic_network
+from repro.core.flow.hierarchy import solve_hierarchical
 from repro.core.flow.mincost import solve_training_flow
 from repro.core.flow.reference import ReferenceGWTFProtocol
 
@@ -47,7 +60,9 @@ DEFAULT_OUT = REPO_ROOT / "BENCH_scale.json"
 STAGES = 10
 SOURCES = 2
 SEED = 0
-FULL_SIZES = (100, 200, 500, 1000, 2000)
+LOCATIONS = 10
+HIER_GAP_BOUND = 1.15   # committed optimality-gap bound (deterministic)
+FULL_SIZES = (100, 200, 500, 1000, 2000, 10000)
 SMOKE_SIZES = (100, 200)
 
 
@@ -67,6 +82,58 @@ def build_network(relays: int, seed: int = SEED):
         link_costs=link_costs,
         num_sources=SOURCES, source_capacity=max(4, relays // 20),
         rng=rng)
+
+
+def build_geo_network(relays: int, seed: int = SEED):
+    """Paper-style geo topology (Sec. VI): ``LOCATIONS`` locations with
+    per-location-pair base latency ~U{4..20} (intra ~U{1..4}) plus
+    symmetric per-node-pair jitter ~U{0..2}; ``Node.location`` stamped
+    so the hierarchical planner can aggregate."""
+    rng = np.random.default_rng(seed)
+    N = relays + SOURCES
+    nodes, loc = {}, np.empty(N, np.int64)
+    for d in range(SOURCES):
+        nodes[d] = Node(d, -1, max(4, relays // 20), 0.0, is_data=True)
+        loc[d] = int(rng.integers(0, LOCATIONS))
+    for i in range(relays):
+        nid = SOURCES + i
+        nodes[nid] = Node(nid, i % STAGES, int(rng.integers(1, 4)), 0.0,
+                          location=int(rng.integers(0, LOCATIONS)))
+        loc[nid] = nodes[nid].location
+    base = rng.integers(4, 21, (LOCATIONS, LOCATIONS)).astype(float)
+    base = np.maximum(base, base.T)
+    np.fill_diagonal(base, 0.0)
+    base += np.diag(rng.integers(1, 5, LOCATIONS).astype(float))
+    jitter = rng.integers(0, 3, (N, N)).astype(float)
+    cm = base[np.ix_(loc, loc)] + np.maximum(jitter, jitter.T)
+    np.fill_diagonal(cm, 0.0)
+    net = FlowNetwork(nodes=nodes, num_stages=STAGES, latency=cm,
+                      bandwidth=np.full((N, N), np.inf),
+                      activation_size=0.0)
+    return net, cm
+
+
+def bench_geo(relays: int, *, flat: bool, seed: int = SEED) -> dict:
+    """Hierarchy-on vs. hierarchy-off planning columns (geo topology)."""
+    net, cost = build_geo_network(relays, seed)
+    rec = {}
+    t0 = time.perf_counter()
+    h = solve_hierarchical(net, cost_matrix=cost)
+    rec["hier_s"] = round(time.perf_counter() - t0, 4)
+    rec["hier_cost"] = h.cost
+    rec["hier_flow"] = h.flow
+    rec["hier_regions"] = h.num_regions
+    if flat:
+        t0 = time.perf_counter()
+        plan = solve_training_flow(net, cost_matrix=cost,
+                                   max_flow=h.flow, method="dial")
+        rec["geo_flat_s"] = round(time.perf_counter() - t0, 4)
+        rec["geo_flat_cost"] = plan.cost
+        if plan.cost > 0 and plan.flow >= h.flow:
+            rec["hier_gap"] = round(h.cost / plan.cost, 4)
+            rec["hier_speedup"] = round(rec["geo_flat_s"]
+                                        / max(rec["hier_s"], 1e-9), 2)
+    return rec
 
 
 def bench_size(relays: int, *, baseline: bool, optimal: bool,
@@ -129,6 +196,15 @@ def print_row(rec: dict):
           f"speedup={spd if spd is not None else 'n/a':>5}x  "
           f"conv={rec['convergence_s']:7.2f}s  "
           f"vs-optimal={ratio if ratio is not None else 'n/a'}")
+    if "hier_s" in rec:
+        flat_s = rec.get("geo_flat_s")
+        gap = rec.get("hier_gap")
+        print(f"    geo: hier={rec['hier_s']:7.2f}s  "
+              f"flat={flat_s if flat_s is not None else 'n/a (skipped)':>7}"
+              f"{'s' if flat_s is not None else ''}  "
+              f"gap={gap if gap is not None else 'n/a'}  "
+              f"regions={rec['hier_regions']}  "
+              f"flow={rec['hier_flow']:.0f}")
 
 
 def smoke(committed_path: Path) -> int:
@@ -141,11 +217,24 @@ def smoke(committed_path: Path) -> int:
     else:
         data = json.loads(committed_path.read_text())
         committed = {r["relays"]: r for r in data["results"]}
+    if committed_path.exists():
+        gap_bound = json.loads(committed_path.read_text())["meta"].get(
+            "hier_gap_bound", HIER_GAP_BOUND)
+    else:
+        gap_bound = HIER_GAP_BOUND
     failures = []
     print(f"== bench_scale --smoke (sizes {SMOKE_SIZES}) ==")
     for relays in SMOKE_SIZES:
         rec = bench_size(relays, baseline=True, optimal=False)
+        rec.update(bench_geo(relays, flat=True))
         print_row(rec)
+        gap = rec.get("hier_gap")
+        if gap is not None and gap > gap_bound:
+            failures.append(f"relays={relays}: hierarchical gap {gap} "
+                            f"exceeds committed bound {gap_bound}")
+        elif gap is None:
+            failures.append(f"relays={relays}: hierarchical planner did "
+                            f"not reach the oracle's flow value")
         if not rec.get("flows_match_reference", True):
             failures.append(f"relays={relays}: optimized flows diverged "
                             f"from reference")
@@ -181,7 +270,12 @@ def main(argv=None) -> int:
                     help="relay-count sweep (e.g. --relays 500 1000 2000)")
     ap.add_argument("--baseline-max", type=int, default=2000,
                     help="largest size at which the reference baseline runs")
+    ap.add_argument("--optimal-max", type=int, default=2000,
+                    help="largest size at which the exact MCMF oracle runs "
+                         "(flat geo planning obeys the same cap)")
     ap.add_argument("--no-optimal", action="store_true")
+    ap.add_argument("--no-hierarchy", action="store_true",
+                    help="skip the geo hierarchy-on/off columns")
     ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
     args = ap.parse_args(argv)
 
@@ -194,15 +288,21 @@ def main(argv=None) -> int:
     results = []
     for relays in sizes:
         rec = bench_size(relays, baseline=relays <= args.baseline_max,
-                         optimal=not args.no_optimal)
+                         optimal=(not args.no_optimal
+                                  and relays <= args.optimal_max))
+        if not args.no_hierarchy:
+            rec.update(bench_geo(relays, flat=relays <= args.optimal_max))
         print_row(rec)
         results.append(rec)
     out = dict(
         meta=dict(stages=STAGES, sources=SOURCES, seed=SEED,
+                  locations=LOCATIONS, hier_gap_bound=HIER_GAP_BOUND,
                   objective="sum", max_rounds=200, quiet_rounds=25,
                   metric="rounds_per_sec over a full convergence run; "
                          "reference = pre-optimization implementation "
-                         "(repro.core.flow.reference) on identical rounds"),
+                         "(repro.core.flow.reference) on identical rounds; "
+                         "hier_* = solve_hierarchical vs flat dial MCMF "
+                         "on the geo topology (build_geo_network)"),
         results=results)
     args.out.write_text(json.dumps(out, indent=2) + "\n")
     print(f"wrote {args.out}")

@@ -21,6 +21,13 @@ implementations and measures:
   slightly because the layered engine fixes the backward-restart slot
   leak, so only GWTF equivalence gates.
 
+``--profile`` additionally reports the per-iteration planning vs
+event-loop wall-time split and — on the GWTF scheduler — the online
+dial-oracle optimality gap of every plan
+(``IterationMetrics.cost_ratio_vs_optimal`` via
+``GWTFPolicy(track_optimality=True)``; the oracle's wall time is
+excluded from the engine's planning-overrun guard).
+
 Results go to ``BENCH_sim.json`` at the repo root.  ``--smoke`` runs
 the small size only and compares against the committed JSON: it exits
 non-zero if the engine's events/sec regressed by more than 2x
@@ -66,10 +73,18 @@ def build_network(relays: int, seed: int = SEED):
         compute_cost=0.5, rng=np.random.default_rng(seed))
 
 
-def _run(cls, relays: int, scheduler: str, seed: int):
+def _run(cls, relays: int, scheduler: str, seed: int,
+         track_optimality: bool = False):
     net = build_network(relays, seed)
-    sim = cls(net, scheduler=scheduler, churn=CHURN,
-              rng=np.random.default_rng(seed + 11))
+    rng = np.random.default_rng(seed + 11)
+    if track_optimality and cls is TrainingSimulator and scheduler == "gwtf":
+        # same construction order as make_policy — identical RNG stream
+        from repro.core.sim.policies import GWTFPolicy
+        sim = cls(net, policy=GWTFPolicy(net, rng=rng,
+                                         track_optimality=True),
+                  churn=CHURN, rng=rng)
+    else:
+        sim = cls(net, scheduler=scheduler, churn=CHURN, rng=rng)
     t0 = time.perf_counter()
     ms = sim.run(ITERATIONS)
     total_s = time.perf_counter() - t0
@@ -79,6 +94,9 @@ def _run(cls, relays: int, scheduler: str, seed: int):
         plan_s=sum(m.plan_seconds for m in ms),
         per_iter=[(round(m.plan_seconds, 4), round(m.loop_seconds, 4))
                   for m in ms],
+        cost_ratio=[None if getattr(m, "cost_ratio_vs_optimal", None)
+                    is None else round(m.cost_ratio_vs_optimal, 4)
+                    for m in ms],
         total_s=total_s,
         launched=sum(m.launched for m in ms),
         completed=sum(m.completed for m in ms),
@@ -92,7 +110,8 @@ def bench_size(relays: int, seed: int = SEED, profile: bool = False) -> dict:
     rec = dict(relays=relays, stages=STAGES, churn=CHURN,
                iterations=ITERATIONS, schedulers={})
     for scheduler in ("gwtf", "swarm"):
-        eng = _run(TrainingSimulator, relays, scheduler, seed)
+        eng = _run(TrainingSimulator, relays, scheduler, seed,
+                   track_optimality=profile)
         ref = _run(ReferenceTrainingSimulator, relays, scheduler, seed)
         canonical = ref["pops"]
         cell = dict(
@@ -108,6 +127,11 @@ def bench_size(relays: int, seed: int = SEED, profile: bool = False) -> dict:
         )
         if profile:
             cell["per_iter_plan_loop_s"] = eng["per_iter"]
+            if scheduler == "gwtf":
+                # online dial-oracle optimality gap of every plan
+                # (GWTFPolicy(track_optimality=True); None = no flows
+                # or non-finite costs)
+                cell["cost_ratio_vs_optimal"] = eng["cost_ratio"]
         if scheduler == "gwtf":
             cell["metrics_identical"] = (
                 eng["completed"] == ref["completed"]
@@ -129,10 +153,13 @@ def print_rec(rec: dict):
               f"{'identical' if eq else ('EQUIV-FAIL' if eq is False else '')}")
         per_iter = c.get("per_iter_plan_loop_s")
         if per_iter:
+            ratios = c.get("cost_ratio_vs_optimal") or [None] * len(per_iter)
             for k, (p, l) in enumerate(per_iter):
                 frac = p / (p + l) if (p + l) > 0 else 0.0
+                r = ratios[k] if k < len(ratios) else None
+                gap = f"  cost/optimal={r:.4f}" if r is not None else ""
                 print(f"      iter {k}: plan={p:7.4f}s  loop={l:7.4f}s  "
-                      f"planning {100 * frac:5.1f}% of iteration")
+                      f"planning {100 * frac:5.1f}% of iteration{gap}")
 
 
 def smoke(committed_path: Path) -> int:

@@ -21,8 +21,8 @@ state returned by an explicit query to a known peer — the global ``net``
 object is used strictly as a message channel / cost oracle (d_ij is
 measurable locally by the two endpoints).
 
-Index structures (scale rebuild)
---------------------------------
+Index structures (dirty-slot incremental maintenance)
+-----------------------------------------------------
 This implementation is behavior-preserving with respect to
 ``repro.core.flow.reference.ReferenceGWTFProtocol`` (the straightforward
 per-round-scan implementation): the same seed produces the *identical*
@@ -54,6 +54,27 @@ indexes over the protocol state, not from changing any decision:
   against the stage epoch and skipped until some same-stage state
   changes.  Scans consume no randomness before their annealed accepts
   (the per-round RNG block below), so memo hits stay stream-neutral.
+* **dirty-slot candidate tables** (``_tbl[stage]``) — each stage keeps a
+  position-aligned column store over its slot registry
+  (``_stage_slot_buf[stage][:n]``): up/owner/down/data-node/order
+  columns, the cached edge costs ``curR = d(up, owner) + d(owner,
+  down)`` and ``w = d(owner, down)``, and the redirect/change validity
+  masks.  The mutation helpers mark the touched slot's *position* dirty
+  (``_mark_slot_dirty`` via the global ``_slot_pos`` slot→position
+  map); ``_patch_stage`` re-gathers just the dirty positions on the
+  next query.  An accepted refinement move therefore invalidates O(1)
+  table rows instead of forcing an O(stage) rebuild — the epoch bumps
+  survive only to key the frozen-regime memos above.  Full rebuilds
+  remain the slow path behind three explicit triggers: registry
+  compaction (positions shuffle), slot-buffer growth, and a
+  cost-matrix refresh (cached edge costs go stale).  Candidate *sets*
+  and their values are identical to a from-scratch rebuild, and the
+  batched scans rank candidates by the unique (rotation rank, order
+  stamp) key, so table row order cannot influence any decision.
+  ``strict_rebuild=True`` keeps the pre-dirty-slot behavior — a full
+  epoch-keyed table rebuild per mutated stage — as the in-engine
+  equality oracle (``tests/test_flow_dirty_slots.py`` drives both modes
+  through randomized mutation sequences and asserts table equality).
 * ``_refresh_costs`` is an iterative stage-by-stage walk with
   deduplicated visits (a node's recompute is an idempotent function of
   its downstream values, so visiting each cone node once in
@@ -109,6 +130,37 @@ from repro.core.flow.graph import FlowNetwork, Node
 
 _EMPTY_F = np.empty(0)
 _EMPTY_SLOTS = np.empty(0, np.intp)
+_EMPTY_I = np.empty(0, np.int64)
+_EMPTY_B = np.empty(0, bool)
+
+
+class _StageTable:
+    """Dirty-slot candidate column store of one stage.
+
+    Columns are aligned with positions ``0..n-1`` of the stage's slot
+    registry (``_stage_slot_buf[stage]``); ``dirty`` holds positions
+    whose columns are stale, ``rebuild`` forces a from-scratch refill
+    (set on registry compaction, slot-buffer growth, or cost refresh).
+    ``ver`` bumps whenever a patch changed anything — a cheap identity
+    for downstream caches.
+    """
+    __slots__ = ("n", "ver", "rebuild", "dirty", "A", "B", "C", "dn",
+                 "ords", "curR", "w", "validR", "validC")
+
+    def __init__(self):
+        self.n = 0
+        self.ver = 0
+        self.rebuild = True
+        self.dirty: Set[int] = set()
+        self.A = None       # upstream peer (-1 = unpaired)
+        self.B = None       # owner
+        self.C = None       # downstream peer (-1 = unpaired)
+        self.dn = None      # the flow's data node
+        self.ords = None    # append-order stamp
+        self.curR = None    # d(A,B) + d(B,C) where validR
+        self.w = None       # d(B,C) where validC
+        self.validR = None  # live & fully paired -> redirect candidate
+        self.validC = None  # live & non-sink downstream -> change candidate
 
 
 @dataclass(eq=False)
@@ -179,6 +231,7 @@ class GWTFProtocol:
                  peer_view: Optional[int] = None,
                  refine: bool = True,
                  strict_rng: bool = False,
+                 strict_rebuild: bool = False,
                  rng: Optional[np.random.Generator] = None):
         self.net = net
         self.cost_matrix = cost_matrix
@@ -187,6 +240,7 @@ class GWTFProtocol:
         self.objective = objective
         self.refine = refine
         self.strict_rng = strict_rng
+        self.strict_rebuild = strict_rebuild
         self.rng = rng or np.random.default_rng(0)
         # the batched annealing prefix returns unused uniform draws via
         # bit_generator.advance(); generators without it (e.g. MT19937,
@@ -240,6 +294,11 @@ class GWTFProtocol:
         self._stage_slots_ver: Dict[int, int] = defaultdict(int)
         self._cand_cache_r: Dict[int, tuple] = {}
         self._cand_cache_c: Dict[int, tuple] = {}
+        # dirty-slot candidate tables (see module docstring): the
+        # slot→position map plus one _StageTable of columns per stage,
+        # patched in place at the dirty positions on query.
+        self._slot_pos = np.full(cap0, -1, np.intp)
+        self._tbl: Dict[int, _StageTable] = {}
         # sorted per-stage membership lists: _stage_alive[s] == the sorted
         # alive relay ids of stage s (== any member's known_same + itself);
         # _stage_with_segs[s] == the subset that currently carries >=1
@@ -293,6 +352,9 @@ class GWTFProtocol:
             self._memo_redirect.clear()
             self._cand_cache_r.clear()
             self._cand_cache_c.clear()
+            for tbl in self._tbl.values():
+                tbl.rebuild = True
+                tbl.dirty.clear()
 
     def d(self, i: int, j: int) -> float:
         return self._cml[i][j]
@@ -363,6 +425,9 @@ class GWTFProtocol:
                     else np.zeros(new, np.int64)
                 arr[:self._seg_top] = old[:self._seg_top]
                 setattr(self, name, arr)
+            pos = np.full(new, -1, np.intp)
+            pos[:self._seg_top] = self._slot_pos[:self._seg_top]
+            self._slot_pos = pos
             self._seg_objs.extend([None] * (new - len(self._seg_objs)))
         slot = self._seg_top
         self._seg_top += 1
@@ -389,15 +454,18 @@ class GWTFProtocol:
         buf[n] = slot
         self._stage_slot_n[stage] = n + 1
         self._stage_slots_ver[stage] += 1
+        self._slot_pos[slot] = n
+        self._mark_slot_dirty(stage, slot)
 
     def _slot_drop(self, p: ProtoNode, seg: Segment):
         slot = getattr(seg, "_slot", -1)
         if slot < 0:
             return
+        stage = p.stage
+        self._mark_slot_dirty(stage, slot)
         self._seg_owner[slot] = -1           # tombstone
         self._seg_objs[slot] = None
         seg._slot = -1
-        stage = p.stage
         dead = self._stage_dead[stage] + 1
         n = self._stage_slot_n[stage]
         if dead > 16 and 2 * dead > n:
@@ -410,6 +478,14 @@ class GWTFProtocol:
             self._stage_slot_n[stage] = k
             self._stage_dead[stage] = 0
             self._stage_slots_ver[stage] += 1
+            # positions shuffled: remap the slot→position index and fall
+            # back to a full table rebuild (dirty marks are meaningless
+            # across a compaction, so they are discarded with it)
+            self._slot_pos[live] = np.arange(k, dtype=np.intp)
+            tbl = self._tbl.get(stage)
+            if tbl is not None:
+                tbl.rebuild = True
+                tbl.dirty.clear()
         else:
             self._stage_dead[stage] = dead
 
@@ -418,6 +494,72 @@ class GWTFProtocol:
         if buf is None:
             return _EMPTY_SLOTS
         return buf[:self._stage_slot_n[stage]]
+
+    # -- dirty-slot candidate tables (see module docstring) -------------
+    def _mark_slot_dirty(self, stage: int, slot: int):
+        tbl = self._tbl.get(stage)
+        if tbl is not None and not tbl.rebuild:
+            tbl.dirty.add(int(self._slot_pos[slot]))
+
+    def _tbl_fill(self, tbl: _StageTable, P: np.ndarray, slots: np.ndarray):
+        """Refill the table columns at positions ``P`` ← slots ``slots``."""
+        owner = self._seg_owner[slots]
+        up = self._seg_up[slots]
+        down = self._seg_down[slots]
+        tbl.A[P] = up
+        tbl.B[P] = owner
+        tbl.C[P] = down
+        tbl.dn[P] = self._seg_dnode[slots]
+        tbl.ords[P] = self._seg_ord[slots]
+        live = owner >= 0
+        down_ok = down >= 0
+        vr = live & (up >= 0) & down_ok
+        vc = live & down_ok & ~self._is_data_arr[np.where(down_ok, down, 0)]
+        tbl.validR[P] = vr
+        tbl.validC[P] = vc
+        cm = self._cm_np
+        if vr.any():
+            k = np.flatnonzero(vr)
+            a, b, c = up[k], owner[k], down[k]
+            tbl.curR[P[k]] = cm[a, b] + cm[b, c]
+        if vc.any():
+            k = np.flatnonzero(vc)
+            tbl.w[P[k]] = cm[owner[k], down[k]]
+
+    def _patch_stage(self, stage: int) -> _StageTable:
+        """Bring the stage's candidate table current: O(#dirty) in the
+        steady state, a full refill after compaction / growth / cost
+        refresh."""
+        tbl = self._tbl.get(stage)
+        if tbl is None:
+            tbl = self._tbl[stage] = _StageTable()
+        buf = self._stage_slot_buf.get(stage)
+        n = 0 if buf is None else self._stage_slot_n[stage]
+        cap = 0 if buf is None else len(buf)
+        if tbl.A is None or len(tbl.A) < cap:
+            tbl.A = np.empty(cap, np.int64)
+            tbl.B = np.empty(cap, np.int64)
+            tbl.C = np.empty(cap, np.int64)
+            tbl.dn = np.empty(cap, np.int64)
+            tbl.ords = np.empty(cap, np.int64)
+            tbl.curR = np.empty(cap)
+            tbl.w = np.empty(cap)
+            tbl.validR = np.zeros(cap, bool)
+            tbl.validC = np.zeros(cap, bool)
+            tbl.rebuild = True
+        tbl.n = n
+        if tbl.rebuild:
+            if n:
+                self._tbl_fill(tbl, np.arange(n, dtype=np.intp), buf[:n])
+            tbl.dirty.clear()
+            tbl.rebuild = False
+            tbl.ver += 1
+        elif tbl.dirty:
+            P = np.fromiter(tbl.dirty, np.intp, len(tbl.dirty))
+            tbl.dirty.clear()
+            self._tbl_fill(tbl, P, buf[P])
+            tbl.ver += 1
+        return tbl
 
     def _alive_arr(self, stage: int) -> np.ndarray:
         ver = self._alive_ver[stage]
@@ -520,6 +662,7 @@ class GWTFProtocol:
         slot = getattr(seg, "_slot", -1)
         if slot >= 0:
             self._seg_up[slot] = -1 if up is None else up
+            self._mark_slot_dirty(p.stage, slot)
         self._touch(p)
 
     def _set_downstream(self, p: ProtoNode, seg: Segment, down: Optional[int]):
@@ -534,6 +677,7 @@ class GWTFProtocol:
         slot = getattr(seg, "_slot", -1)
         if slot >= 0:
             self._seg_down[slot] = -1 if down is None else down
+            self._mark_slot_dirty(p.stage, slot)
         self._touch(p)
         self._touch_down(p, seg.data_node)
 
@@ -679,10 +823,21 @@ class GWTFProtocol:
         return rank, n
 
     def _redirect_cands(self, stage: int):
-        """Epoch-cached Request Redirect candidate table of a stage,
-        gathered from the slot store: (slot, A=up, B=owner, C=down,
-        cur=d(A,B)+d(B,C), order stamp).  Any segment mutation in the
-        stage bumps its epoch and invalidates."""
+        """Request Redirect candidate table of a stage, full-length over
+        the slot registry: (slot, A=up, B=owner, C=down,
+        cur=d(A,B)+d(B,C), order stamp, valid mask).  Default mode reads
+        the dirty-slot table (O(#dirty) maintenance); ``strict_rebuild``
+        regathers everything from the slot store per mutated epoch — the
+        in-engine equality oracle.  Rows where ``valid`` is False carry
+        unspecified values."""
+        if not self.strict_rebuild:
+            tbl = self._patch_stage(stage)
+            n = tbl.n
+            if not n:
+                return (_EMPTY_SLOTS, _EMPTY_I, _EMPTY_I, _EMPTY_I,
+                        _EMPTY_F, _EMPTY_I, _EMPTY_B)
+            return (self._stage_slot_buf[stage][:n], tbl.A[:n], tbl.B[:n],
+                    tbl.C[:n], tbl.curR[:n], tbl.ords[:n], tbl.validR[:n])
         key = (self._epoch[stage], self._stage_slots_ver[stage])
         cached = self._cand_cache_r.get(stage)
         if cached is not None and cached[0] == key:
@@ -691,22 +846,34 @@ class GWTFProtocol:
         owner = self._seg_owner[slots]
         up = self._seg_up[slots]
         down = self._seg_down[slots]
-        vr = (owner >= 0) & (up >= 0) & (down >= 0)
-        sr = slots[vr]
-        Ar = up[vr]
-        Br = owner[vr]
-        Cr = down[vr]
-        cm = self._cm_np
-        cur_r = cm[Ar, Br] + cm[Br, Cr] if sr.size else _EMPTY_F
-        data = (sr, Ar, Br, Cr, cur_r, self._seg_ord[sr])
+        valid = (owner >= 0) & (up >= 0) & (down >= 0)
+        if slots.size:
+            cm = self._cm_np
+            a = np.where(up >= 0, up, 0)
+            b = np.where(owner >= 0, owner, 0)
+            c = np.where(down >= 0, down, 0)
+            cur = cm[a, b] + cm[b, c]
+        else:
+            cur = _EMPTY_F
+        data = (slots, up, owner, down, cur, self._seg_ord[slots], valid)
         self._cand_cache_r[stage] = (key, data)
         return data
 
     def _change_cands(self, stage: int):
-        """Epoch-cached Request Change candidate table of a stage:
-        (slot, J=owner, D=down [non-sink], data node, w=d(J,D), order
-        stamp).  Keyed on the downstream/membership epoch — upstream-
-        only pairings leave it valid."""
+        """Request Change candidate table of a stage, full-length over
+        the slot registry: (slot, J=owner, D=down, data node, w=d(J,D),
+        order stamp, valid mask [live, downstream paired, non-sink]).
+        Same dual-mode contract as ``_redirect_cands``; the strict path
+        stays keyed on the downstream/membership epoch — upstream-only
+        pairings leave it valid."""
+        if not self.strict_rebuild:
+            tbl = self._patch_stage(stage)
+            n = tbl.n
+            if not n:
+                return (_EMPTY_SLOTS, _EMPTY_I, _EMPTY_I, _EMPTY_I,
+                        _EMPTY_F, _EMPTY_I, _EMPTY_B)
+            return (self._stage_slot_buf[stage][:n], tbl.B[:n], tbl.C[:n],
+                    tbl.dn[:n], tbl.w[:n], tbl.ords[:n], tbl.validC[:n])
         key = (self._epoch_dn[stage], self._stage_slots_ver[stage])
         cached = self._cand_cache_c.get(stage)
         if cached is not None and cached[0] == key:
@@ -714,16 +881,13 @@ class GWTFProtocol:
         slots = self._stage_slot_arr(stage)
         owner = self._seg_owner[slots]
         down = self._seg_down[slots]
-        vc = (owner >= 0) & (down >= 0)
-        dc = down[vc]
-        keep = ~self._is_data_arr[dc]
-        sc = slots[vc][keep]
-        Jc = owner[vc][keep]
-        Dc = dc[keep]
-        dnc = self._seg_dnode[sc]
+        down_ok = down >= 0
+        ds = np.where(down_ok, down, 0)
+        valid = (owner >= 0) & down_ok & ~self._is_data_arr[ds]
         cm = self._cm_np
-        wc = cm[Jc, Dc] if sc.size else _EMPTY_F
-        data = (sc, Jc, Dc, dnc, wc, self._seg_ord[sc])
+        wc = cm[np.where(owner >= 0, owner, 0), ds] if slots.size else _EMPTY_F
+        data = (slots, owner, down, self._seg_dnode[slots], wc,
+                self._seg_ord[slots], valid)
         self._cand_cache_c[stage] = (key, data)
         return data
 
@@ -843,11 +1007,11 @@ class GWTFProtocol:
     def _change_scan_batched(self, i: int, pi: ProtoNode, si: Segment,
                              u_rot: float) -> bool:
         stage = pi.stage
-        sc, Jc, Dc, dnc, wc, ordc = self._change_cands(stage)
+        sc, Jc, Dc, dnc, wc, ordc, vc = self._change_cands(stage)
         if not sc.size:
             return False
         si_dn = si.downstream
-        mask = (Jc != i) & (dnc == si.data_node) & (Dc != si_dn)
+        mask = vc & (Jc != i) & (dnc == si.data_node) & (Dc != si_dn)
         if not mask.any():
             return False
         idx = np.flatnonzero(mask)
@@ -974,23 +1138,20 @@ class GWTFProtocol:
     def _redirect_scan_batched(self, m: int, pm: ProtoNode,
                                u_rot: float) -> bool:
         stage = pm.stage
-        sr, Ar, Br, Cr, cur_r, ordr = self._redirect_cands(stage)
+        sr, Ar, Br, Cr, cur_r, ordr, vr = self._redirect_cands(stage)
         if not sr.size:
             return False
         cm = self._cm_np
-        mask = Br != m
-        if mask.all():
-            sl, A, B, C, cur, ords = sr, Ar, Br, Cr, cur_r, ordr
-        else:
-            if not mask.any():
-                return False
-            idx = np.flatnonzero(mask)
-            sl = sr[idx]
-            A = Ar[idx]
-            B = Br[idx]
-            C = Cr[idx]
-            cur = cur_r[idx]
-            ords = ordr[idx]
+        mask = vr & (Br != m)
+        if not mask.any():
+            return False
+        idx = np.flatnonzero(mask)
+        sl = sr[idx]
+        A = Ar[idx]
+        B = Br[idx]
+        C = Cr[idx]
+        cur = cur_r[idx]
+        ords = ordr[idx]
         new = cm[A, m] + cm[m, C]
         pick = self._batched_pick(cur, new, B, ords,
                                   self._wseg_arr(stage), m, u_rot)

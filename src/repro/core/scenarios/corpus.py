@@ -111,14 +111,59 @@ def _corpus() -> List[ScenarioSpec]:
     return specs
 
 
-def load_corpus(include_shrunk: bool = True) -> List[ScenarioSpec]:
-    """All committed scenarios: the named set plus any fuzz-minimized
-    ``corpus/*.json`` regression specs."""
-    specs = _corpus()
+def _scale_corpus() -> List[ScenarioSpec]:
+    """The ``--scale`` tier: bench_scale-style topologies at 500-2000
+    relays under churn.  Swept by the scenario-corpus CI job with the
+    restricted `harness.scale_checks` set (the real-compute and
+    reference-engine differentials stay bounded; nothing here runs
+    JAX), never part of the golden corpus."""
+    specs = [
+        # engine-vs-reference bit-equality through the harness'
+        # crash -> repair -> rejoin episode at >= 500 relays
+        ScenarioSpec(name="scale-flow-500", seed=41, tier="scale",
+                     topology="synthetic", num_stages=10,
+                     relays_per_stage=50, num_data_nodes=2,
+                     source_capacity=25, capacity_range=(1, 4),
+                     cost_range=(1, 20), iterations=2, objective="sum"),
+        # 1000-relay geo-abstract swarm under Bernoulli churn: event
+        # engine + planner at scale (sim-invariants, hierarchy gap)
+        ScenarioSpec(name="scale-geo-1000-churn10", seed=42, tier="scale",
+                     topology="geo-abstract", num_stages=10,
+                     relays_per_stage=100, num_data_nodes=2,
+                     source_capacity=50, capacity_range=(1, 4),
+                     cost_range=(4, 21), num_locations=10,
+                     iterations=2, objective="sum",
+                     churn=[{"kind": "bernoulli", "p": 0.10}]),
+        # regional blackout at scale: location-keyed churn on the
+        # geo-abstract topology + hierarchical-vs-oracle gap bound
+        ScenarioSpec(name="scale-geo-2000-blackout", seed=43, tier="scale",
+                     topology="geo-abstract", num_stages=10,
+                     relays_per_stage=200, num_data_nodes=2,
+                     source_capacity=100, capacity_range=(1, 4),
+                     cost_range=(4, 21), num_locations=10,
+                     iterations=2, objective="sum",
+                     churn=[{"kind": "regional_blackout", "location": 2,
+                             "at_iteration": 0, "duration": 1}]),
+    ]
+    for s in specs:
+        s.validate()
+    return specs
+
+
+def load_corpus(include_shrunk: bool = True,
+                tier: str = "standard") -> List[ScenarioSpec]:
+    """Committed scenarios of one tier (or ``"all"``): the named set
+    plus — for the standard tier — any fuzz-minimized ``corpus/*.json``
+    regression specs."""
+    if tier not in ("standard", "scale", "all"):
+        raise ValueError(f"unknown corpus tier {tier!r}")
+    specs: List[ScenarioSpec] = _corpus() + _scale_corpus()
     if include_shrunk and os.path.isdir(CORPUS_DIR):
         for path in sorted(glob.glob(os.path.join(CORPUS_DIR, "*.json"))):
             with open(path) as fh:
                 specs.append(ScenarioSpec.from_json(fh.read()))
+    if tier != "all":
+        specs = [s for s in specs if s.tier == tier]
     names = [s.name for s in specs]
     if len(set(names)) != len(names):
         dupes = sorted({n for n in names if names.count(n) > 1})
@@ -127,11 +172,11 @@ def load_corpus(include_shrunk: bool = True) -> List[ScenarioSpec]:
 
 
 def get_scenario(name: str) -> ScenarioSpec:
-    for spec in load_corpus():
+    for spec in load_corpus(tier="all"):
         if spec.name == name:
             return spec
     raise KeyError(f"unknown scenario {name!r}; corpus has "
-                   f"{[s.name for s in load_corpus()]}")
+                   f"{[s.name for s in load_corpus(tier='all')]}")
 
 
 # ---------------------------------------------------------------------------
@@ -176,16 +221,20 @@ def main(argv: Optional[List[str]] = None) -> None:
                          "golden.json")
     ap.add_argument("--list", action="store_true",
                     help="print the corpus table")
+    ap.add_argument("--scale", action="store_true",
+                    help="also list the scale tier (1000+ relay specs "
+                         "swept by harness.scale_checks)")
     args = ap.parse_args(argv)
     if args.regen_golden:
         golden = regen_golden()
         print(f"wrote {GOLDEN_PATH} ({len(golden)} scenarios)")
-    if args.list or not args.regen_golden:
-        print(f"{'name':28s} {'topology':9s} {'nodes':>5s} "
+    if args.list or args.scale or not args.regen_golden:
+        print(f"{'name':28s} {'tier':8s} {'topology':12s} {'nodes':>5s} "
               f"{'stages':>6s} churn")
-        for spec in load_corpus():
+        tier = "all" if args.scale else "standard"
+        for spec in load_corpus(tier=tier):
             kinds = ",".join(c["kind"] for c in spec.churn) or "-"
-            print(f"{spec.name:28s} {spec.topology:9s} "
+            print(f"{spec.name:28s} {spec.tier:8s} {spec.topology:12s} "
                   f"{spec.base_nodes + spec.spare_nodes:5d} "
                   f"{spec.num_stages:6d} {kinds}")
 

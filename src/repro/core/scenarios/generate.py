@@ -70,9 +70,13 @@ def build_network(spec: ScenarioSpec
     Returns ``(net, cost_matrix)`` — ``cost_matrix`` is the directly
     drawn integer d_ij for the synthetic topology (passed through to
     the flow engines, as in the paper's Table IV/V experiments) and
-    ``None`` for geo (Eq. 1 costs from the network's own caches).
+    for geo-abstract (integer per-location-pair base + node jitter,
+    ``Node.location`` stamped — the bench_scale internet-scale shape),
+    and ``None`` for geo (Eq. 1 costs from the network's own caches).
     """
     spec.validate()
+    if spec.topology == "geo-abstract":
+        return _geo_abstract_network(spec)
     if spec.topology == "synthetic":
         lo, hi = spec.cost_range
         clo, chi = spec.capacity_range
@@ -100,6 +104,45 @@ def build_network(spec: ScenarioSpec
     _apply_region_heterogeneity(spec, net)
     _add_spare_nodes(spec, net)
     return net, None
+
+
+def _geo_abstract_network(spec: ScenarioSpec
+                          ) -> Tuple[FlowNetwork, np.ndarray]:
+    """The bench_scale internet-scale topology as a spec: integer
+    per-location-pair base cost ~U{cost_range} (intra-location
+    ~U{1..4}) plus symmetric per-node-pair jitter ~U{0..2}, relays
+    round-robin over stages, ``Node.location`` stamped so the
+    hierarchical planner and location-keyed churn clauses apply.
+
+    Capacities come from the shared `relay_capacities` draw
+    (``_SALT_CAPS``) like geo; link structure from ``_SALT_NET``.
+    """
+    caps = relay_capacities(spec)
+    rng = _rng(spec, _SALT_NET)
+    N = spec.base_nodes
+    L = spec.num_locations
+    nodes: Dict[int, Node] = {}
+    loc = np.empty(N, np.int64)
+    for d in range(spec.num_data_nodes):
+        nodes[d] = Node(d, -1, spec.source_capacity, 0.0, is_data=True)
+        loc[d] = int(rng.integers(0, L))
+    for i in range(spec.num_relays):
+        nid = spec.num_data_nodes + i
+        nodes[nid] = Node(nid, i % spec.num_stages, caps[i], 0.0,
+                          location=int(rng.integers(0, L)))
+        loc[nid] = nodes[nid].location
+    lo, hi = spec.cost_range
+    base = rng.integers(lo, hi, (L, L)).astype(float)
+    base = np.maximum(base, base.T)
+    np.fill_diagonal(base, 0.0)
+    base += np.diag(rng.integers(1, 5, L).astype(float))
+    jitter = rng.integers(0, 3, (N, N)).astype(float)
+    cm = base[np.ix_(loc, loc)] + np.maximum(jitter, jitter.T)
+    np.fill_diagonal(cm, 0.0)
+    net = FlowNetwork(nodes=nodes, num_stages=spec.num_stages,
+                      latency=cm, bandwidth=np.full((N, N), np.inf),
+                      activation_size=0.0)
+    return net, cm
 
 
 def _apply_region_heterogeneity(spec: ScenarioSpec, net: FlowNetwork) -> None:

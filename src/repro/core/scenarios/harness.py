@@ -21,10 +21,16 @@ harness checks that they *agree*:
   and the runtime's trajectory is bit-identical to
   `CentralizedTrainer`), `check_permutation_invariance` (relabeling
   node ids preserves the optimum);
+* `check_hierarchy_gap` — the hierarchical geo-planner
+  (`flow.hierarchy.solve_hierarchical`) emits feasible chains within
+  the committed optimality-gap bound of the flat dial MCMF oracle;
 * `fuzz` — seeded randomized spec generation under a wall-clock
   budget; a failing spec is shrunk (`minimize`) to a minimal
   reproducer and written into the committed corpus directory so it
-  becomes a named regression scenario on the next run.
+  becomes a named regression scenario on the next run.  Two sampling
+  regimes: `random_spec` (tiny shapes, every check) and
+  `random_scale_spec` (1000+ relays, the restricted `scale_checks`
+  regime — no reference engine, no real compute).
 
 Failures raise `ScenarioDiscrepancy` carrying the spec (as JSON) so a
 reproducer is always one ``ScenarioSpec.from_json`` away.
@@ -405,6 +411,62 @@ def check_permutation_invariance(spec: ScenarioSpec) -> Dict[str, Any]:
     return {"flow": base.flow, "cost": base.cost}
 
 
+#: committed hierarchical-vs-oracle optimality-gap bound.  The same
+#: bound gates `benchmarks/bench_scale.py --smoke` and is recorded in
+#: BENCH_scale.json meta (``hier_gap_bound``); measured gaps on the
+#: bench topology sit at 1.03-1.10.
+HIER_GAP_BOUND = 1.15
+
+
+def check_hierarchy_gap(spec: ScenarioSpec,
+                        gap_bound: float = HIER_GAP_BOUND) -> Dict[str, Any]:
+    """`solve_hierarchical` produces a *feasible* plan (stage-ordered
+    closed chains, relay and source capacities respected) whose total
+    cost is within the committed gap bound of the flat dial MCMF
+    oracle routing the same flow volume.  Geo-abstract topologies only
+    — the gap bound is calibrated for per-location-pair base costs
+    plus bounded node jitter, not arbitrary cost structure."""
+    from repro.core.flow.hierarchy import solve_hierarchical
+
+    net, cm = generate.build_network(spec)
+    h = solve_hierarchical(net, cost_matrix=cm)
+    S = net.num_stages
+    used: Dict[int, int] = {}
+    for path in h.paths:
+        _require(len(path) == S + 2, spec, "hierarchy-gap",
+                 f"chain has {len(path)} hops, expected {S + 2}")
+        _require(path[0] == path[-1] and net.nodes[path[0]].is_data,
+                 spec, "hierarchy-gap",
+                 f"chain does not close at a data node: {path[0]} ... "
+                 f"{path[-1]}")
+        for hop in path[:-1]:      # origin once per chain + each relay
+            used[hop] = used.get(hop, 0) + 1
+        for s, nid in enumerate(path[1:-1]):
+            node = net.nodes[nid]
+            _require(not node.is_data and node.alive and node.stage == s,
+                     spec, "hierarchy-gap",
+                     f"hop {nid} at position {s} is not an alive "
+                     f"stage-{s} relay")
+    for nid, cnt in used.items():
+        _require(cnt <= net.nodes[nid].capacity, spec, "hierarchy-gap",
+                 f"node {nid} carries {cnt} chains over capacity "
+                 f"{net.nodes[nid].capacity}")
+    net2, cm2 = generate.build_network(spec)
+    flat = generate.solve_optimal(spec, "dial", net=net2, cost_matrix=cm2,
+                                  max_flow=h.flow)
+    _require(flat.flow == h.flow, spec, "hierarchy-gap",
+             f"flat oracle routed {flat.flow} units vs hierarchical "
+             f"{h.flow}")
+    gap = None
+    if flat.cost > 0:
+        gap = h.cost / flat.cost
+        _require(gap <= gap_bound, spec, "hierarchy-gap",
+                 f"optimality gap {gap:.4f} exceeds committed bound "
+                 f"{gap_bound} (hier {h.cost!r} vs oracle {flat.cost!r})")
+    return {"flow": h.flow, "hier_cost": h.cost, "oracle_cost": flat.cost,
+            "gap": gap, "regions": h.num_regions}
+
+
 def check_sim_invariants(spec: ScenarioSpec,
                          iterations: Optional[int] = None) -> Dict[str, Any]:
     """Cheap engine-level invariants that hold under *any* churn
@@ -453,6 +515,8 @@ CHECKS: Dict[str, Tuple[Callable[[ScenarioSpec], Dict], Callable]] = {
     "sim-invariants": (check_sim_invariants, lambda s: True),
     "sim-runtime": (check_sim_runtime_consistency,
                     lambda s: s.scheduler == "gwtf"),
+    "hierarchy-gap": (check_hierarchy_gap,
+                      lambda s: s.topology == "geo-abstract"),
 }
 
 #: checks cheap enough for the fuzz loop (no real JAX compute).
@@ -461,6 +525,31 @@ CHECKS: Dict[str, Tuple[Callable[[ScenarioSpec], Dict], Callable]] = {
 FUZZ_CHECKS = ("flow-equivalence", "optimal-consistency",
                "capacity-monotonicity", "permutation-invariance",
                "sim-invariants")
+
+#: checks for the randomized scale-tier fuzz loop (1000+ relays):
+#: everything quadratic-in-nodes or running the frozen reference
+#: engine is out; the event engine + hierarchical planner are in.
+SCALE_FUZZ_CHECKS = ("sim-invariants", "hierarchy-gap")
+
+
+def scale_checks(spec: ScenarioSpec) -> Tuple[str, ...]:
+    """The check set a ``tier="scale"`` corpus spec is swept with.
+
+    The engine-vs-reference bit-equality differential (including its
+    crash→repair→rejoin episode) runs only up to ~600 nodes — the
+    frozen reference engine is O(N²) per round and exists to be an
+    oracle, not to scale.  `sim-invariants` (full event engine +
+    planner under the spec's churn program, determinism via seeded
+    rerun) runs everywhere; `hierarchy-gap` wherever the hierarchical
+    planner applies.  The real-compute `sim-runtime` differential is
+    never part of the scale tier."""
+    names: List[str] = []
+    if spec.base_nodes <= 600:
+        names.append("flow-equivalence")
+    names.append("sim-invariants")
+    if spec.topology == "geo-abstract":
+        names.append("hierarchy-gap")
+    return tuple(names)
 
 
 def run_checks(spec: ScenarioSpec,
@@ -523,6 +612,45 @@ def random_spec(rng: np.random.Generator, index: int) -> ScenarioSpec:
         spec = spec.replace(spare_nodes=spare, churn=spec.churn + [
             {"kind": "flash_crowd", "at_iteration": 1, "nodes": spare}])
     return spec
+
+
+def random_scale_spec(rng: np.random.Generator, index: int) -> ScenarioSpec:
+    """One random *internet-scale* scenario (1000+ relays, mostly
+    geo-abstract) for the scale-tier fuzz loop.  Cost ranges stay in
+    the bench_scale regime (per-location-pair base + bounded node
+    jitter) — that is the structure the hierarchical planner's gap
+    bound is calibrated for."""
+    topology = "geo-abstract" if rng.uniform() < 0.75 else "synthetic"
+    num_stages = int(rng.choice([5, 8, 10]))
+    relays_per_stage = int(rng.integers(1000, 1801)) // num_stages
+    num_data_nodes = int(rng.integers(1, 3))
+    relays = num_stages * relays_per_stage
+    spec = ScenarioSpec(
+        name=f"scale-fuzz-{index}",
+        seed=int(rng.integers(0, 2 ** 16)),
+        tier="scale",
+        topology=topology,
+        num_stages=num_stages,
+        relays_per_stage=relays_per_stage,
+        num_data_nodes=num_data_nodes,
+        data_capacity=4,
+        capacity_range=(1, int(rng.integers(3, 5))),
+        cost_range=(int(rng.integers(3, 6)), int(rng.integers(18, 25))),
+        source_capacity=max(4, relays // (20 * num_data_nodes)),
+        num_locations=int(rng.integers(8, 13)),
+        iterations=2,
+        objective="sum",
+    )
+    clauses: List[Dict[str, Any]] = []
+    if rng.uniform() < 0.6:
+        clauses.append({"kind": "bernoulli",
+                        "p": float(rng.uniform(0.0, 0.2))})
+    if topology == "geo-abstract" and rng.uniform() < 0.4:
+        clauses.append({"kind": "regional_blackout",
+                        "location": int(rng.integers(0, spec.num_locations)),
+                        "at_iteration": 0, "duration": 1,
+                        "when": float(rng.uniform(0.1, 0.9))})
+    return spec.replace(churn=clauses)
 
 
 def _fails(spec: ScenarioSpec, checks: Sequence[str]
@@ -607,13 +735,22 @@ class FuzzReport:
 def fuzz(seed: int = 0, budget_seconds: float = 10.0,
          corpus_dir: Optional[str] = None,
          checks: Sequence[str] = FUZZ_CHECKS,
-         max_cases: Optional[int] = None) -> FuzzReport:
+         max_cases: Optional[int] = None,
+         spec_factory: Callable[[np.random.Generator, int],
+                                ScenarioSpec] = random_spec,
+         shrink: bool = True) -> FuzzReport:
     """Seeded randomized differential testing under a wall-clock budget.
 
     Each failing case is shrunk with `minimize` and (when
     ``corpus_dir`` is given — defaulting it to the committed corpus
     directory is the caller's choice) written as
     ``shrunk-<check>-<seed>.json`` so it permanently joins the corpus.
+
+    ``spec_factory`` picks the sampling regime: `random_spec` (tiny
+    shapes, the default) or `random_scale_spec` (1000+ relays swept
+    with `SCALE_FUZZ_CHECKS`).  Pass ``shrink=False`` at scale —
+    `minimize` steps one relay at a time, which is useless against
+    thousand-relay specs; the unshrunk reproducer is still committed.
     """
     rng = np.random.default_rng(seed)
     report = FuzzReport(seed=seed, budget_seconds=budget_seconds)
@@ -621,12 +758,12 @@ def fuzz(seed: int = 0, budget_seconds: float = 10.0,
     while time.monotonic() - t0 < budget_seconds:
         if max_cases is not None and report.cases >= max_cases:
             break
-        spec = random_spec(rng, report.cases)
+        spec = spec_factory(rng, report.cases)
         report.cases += 1
         err = _fails(spec, checks)
         if err is None:
             continue
-        small = minimize(spec, checks)
+        small = minimize(spec, checks) if shrink else spec
         small_err = _fails(small, checks) or err
         failure = FuzzFailure(spec=spec, minimized=small,
                               check=small_err.check,

@@ -4,10 +4,13 @@ A `ScenarioSpec` names everything the three execution layers need to
 materialize *the same* training scenario deterministically:
 
 * topology — geo-distributed (paper Sec. VI: 10 locations, 50-500 Mb/s
-  links, heterogeneous compute) or abstract synthetic (paper Tables
-  IV/V: integer d_ij drawn directly), node counts, capacity ranges,
-  per-region compute/bandwidth heterogeneity, and a pool of *spare*
-  nodes (created dead) for flash-crowd joins;
+  links, heterogeneous compute), abstract synthetic (paper Tables
+  IV/V: integer d_ij drawn directly), or geo-abstract (bench_scale's
+  internet-scale shape: integer per-location-pair base costs + node
+  jitter with ``Node.location`` stamped, so the hierarchical planner
+  and location-keyed churn both apply at 1000+ relays), node counts,
+  capacity ranges, per-region compute/bandwidth heterogeneity, and a
+  pool of *spare* nodes (created dead) for flash-crowd joins;
 * churn program — an ordered list of clauses composed into one
   `ChurnModel`: Bernoulli coin-flips, deterministic trace replay,
   scripted regional blackouts, correlated regional outages,
@@ -60,9 +63,14 @@ CHURN_CLAUSES: Dict[str, Tuple[Tuple[str, ...], Dict[str, Any]]] = {
 DETERMINISTIC_CLAUSES = frozenset(
     {"trace", "regional_blackout", "flash_crowd", "link_degradation"})
 
-#: clause kinds that only make sense on the geo topology
-GEO_ONLY_CLAUSES = frozenset(
-    {"regional_blackout", "regional_outage", "link_degradation"})
+#: clause kinds that need real link bandwidth (geo topology only)
+GEO_ONLY_CLAUSES = frozenset({"link_degradation"})
+
+#: clause kinds keyed on Node.location (any topology that stamps it)
+LOCATION_CLAUSES = frozenset({"regional_blackout", "regional_outage"})
+
+#: topologies whose nodes carry a real Node.location
+LOCATED_TOPOLOGIES = frozenset({"geo", "geo-abstract"})
 
 
 @dataclass
@@ -72,9 +80,13 @@ class ScenarioSpec:
 
     name: str
     seed: int = 0
+    #: "standard" (default corpus) or "scale" — bench_scale-style
+    #: topologies at 1000+ relays; swept with the restricted check set
+    #: (harness.scale_checks), never the real-compute differentials
+    tier: str = "standard"
 
     # ---- topology -----------------------------------------------------
-    topology: str = "geo"                 # "geo" | "synthetic"
+    topology: str = "geo"        # "geo" | "synthetic" | "geo-abstract"
     num_stages: int = 4
     relays_per_stage: int = 4
     num_data_nodes: int = 2
@@ -129,10 +141,13 @@ class ScenarioSpec:
         """Raise ``ValueError`` on any inconsistent field; returns self."""
         if not self.name or not isinstance(self.name, str):
             raise ValueError("scenario name must be a non-empty string")
-        if self.topology not in ("geo", "synthetic"):
+        if self.topology not in ("geo", "synthetic", "geo-abstract"):
             raise ValueError(
                 f"{self.name}: unknown topology {self.topology!r} "
-                f"(expected 'geo' | 'synthetic')")
+                f"(expected 'geo' | 'synthetic' | 'geo-abstract')")
+        if self.tier not in ("standard", "scale"):
+            raise ValueError(f"{self.name}: unknown tier {self.tier!r} "
+                             f"(expected 'standard' | 'scale')")
         if self.scheduler not in ("gwtf", "swarm"):
             raise ValueError(
                 f"{self.name}: unknown scheduler {self.scheduler!r} "
@@ -197,6 +212,10 @@ class ScenarioSpec:
             if kind in GEO_ONLY_CLAUSES and self.topology != "geo":
                 raise ValueError(f"{self.name}: churn[{i}] ({kind}) "
                                  f"requires the geo topology")
+            if kind in LOCATION_CLAUSES \
+                    and self.topology not in LOCATED_TOPOLOGIES:
+                raise ValueError(f"{self.name}: churn[{i}] ({kind}) "
+                                 f"requires a geo topology")
             if kind == "bernoulli" and not 0.0 <= clause["p"] <= 1.0:
                 raise ValueError(f"{self.name}: churn[{i}] p={clause['p']} "
                                  f"out of [0, 1]")

@@ -15,11 +15,26 @@ Design of the fast core
   (ARRIVE/DONE/CHECK) — no nested payload tuples, no string dispatch.
   ``seq`` is a global monotonic counter so simultaneous events pop in
   push order (deterministic FIFO tie-break).
-* **Array-backed calendar.**  The calendar is a binary heap over a
-  contiguous list driven by the C ``heapq`` primitives.  (A bucketed
+* **Two-level batched calendar.**  The calendar is split into a small
+  ``near`` binary heap (every pending event with time ≤ a moving
+  boundary ``B``) and an unsorted ``far`` list (everything later).
+  Pushes compare once against ``B`` and either ``heappush`` into
+  ``near`` or plain-``append`` to ``far``; when ``near`` drains, one
+  bulk ``far.sort()`` (Timsort in C over the ``(time, seq, ...)``
+  records) promotes the next batch — at least 256 events, half of
+  ``far`` when larger, always extended across time ties so ``far``
+  holds strictly-later events only.  A sorted ascending run is already
+  a valid min-heap, so promotion is a slice, and every ``heappush`` /
+  ``heappop`` works a heap of batch size instead of total calendar
+  residency — that breaks the ~µs/event floor a single monolithic heap
+  hits past ~10k concurrent microbatches (log-factor tuple compares
+  per operation), while bulk Timsort amortizes ordering at
+  O(log batch) compares per event.  Pop order is *provably identical*
+  to the single heap: ``far`` only ever holds events strictly later
+  than everything in ``near``, and ``(time, seq)`` is a unique total
+  order (so sorting never compares the payload fields).  (A bucketed
   calendar queue was measured slower here: its per-event bucket scan
-  runs in bytecode, while ``heappush``/``heappop`` run in C; the
-  array-of-records layout is what makes either fast.)
+  runs in bytecode, while the sort/heap primitives run in C.)
 * **Lazy timeout records.**  The pre-refactor loop pushed one CHECK
   event per send; in a healthy iteration every one of them pops stale.
   A timeout can only ever *fire* if the microbatch actually stalled,
@@ -61,6 +76,14 @@ deliberate, documented exceptions:
 * ``max_events`` exhaustion is surfaced (``IterationMetrics.truncated``
   + a ``RuntimeWarning``) instead of silently reporting a short, clean
   iteration.
+
+Planning-overrun guard: when ``policy.plan()`` wall time exceeds the
+event-loop wall time by ``plan_overrun_factor`` (and is long enough in
+absolute terms to matter — ``plan_overrun_min_seconds``), the engine
+warns, flags the iteration (``IterationMetrics.plan_overrun``), and
+asks the policy to cap its planning effort via an optional
+``throttle_planning()`` hook — a planner regression now surfaces in CI
+profiles instead of silently turning the simulator superlinear.
 """
 from __future__ import annotations
 
@@ -81,6 +104,10 @@ from repro.core.sim.policies import FaultView, RoutingPolicy
 
 # Typed event kinds (ints: cheap compares, no string dispatch)
 ARRIVE, DONE, CHECK = 0, 1, 2
+
+# two-level calendar: minimum promotion batch (events) pulled from the
+# far list each time the near heap drains
+_PROMOTE_MIN = 256
 
 
 @dataclass(slots=True)
@@ -124,7 +151,9 @@ class SimulationEngine:
                  profile: Optional[ModelProfile] = None,
                  timeout: float = 30.0, max_retries: int = 2,
                  rng: Optional[np.random.Generator] = None,
-                 max_events: int = 500_000):
+                 max_events: int = 500_000,
+                 plan_overrun_factor: float = 100.0,
+                 plan_overrun_min_seconds: float = 0.5):
         self.net = net
         self.policy = policy
         self.churn_model = churn_model or BernoulliChurn(0.0)
@@ -133,6 +162,8 @@ class SimulationEngine:
         self.max_retries = max_retries
         self.rng = rng or np.random.default_rng(0)
         self.max_events = max_events
+        self.plan_overrun_factor = plan_overrun_factor
+        self.plan_overrun_min_seconds = plan_overrun_min_seconds
         self._mb_ids = itertools.count()
         self._iteration = 0
         self._tables_key = None          # (cost_version, size, N)
@@ -188,6 +219,8 @@ class SimulationEngine:
                for path in self.policy.plan()]
         m.plan_seconds = time.perf_counter() - plan_t0
         m.launched = len(mbs)
+        m.cost_ratio_vs_optimal = getattr(self.policy,
+                                          "last_cost_ratio", None)
 
         # ---- batched cost tables (resolved against the Eq. 1 caches) --
         N = (max(net.nodes) + 1) if net.nodes else 0
@@ -238,20 +271,29 @@ class SimulationEngine:
 
         view.stage_nodes = stage_nodes
 
-        # ---- event calendar -------------------------------------------
-        calendar: List[tuple] = []
+        # ---- event calendar (two-level: near heap + far list) ---------
+        near: List[tuple] = []        # heap: every pending event t <= boundary
+        far: List[tuple] = []         # unsorted: every pending event t > boundary
+        boundary = float("-inf")      # initial launches bulk-sort on first pop
         heappush, heappop = heapq.heappush, heapq.heappop
+        far_append = far.append
         seq = itertools.count()
         timeout = self.timeout
         comm_total = 0.0
         qdepth = 0
+
+        def push(ev: tuple):
+            if ev[0] <= boundary:
+                heappush(near, ev)
+            else:
+                far_append(ev)
 
         def send(mb: _MB, frm: int, to: int, t: float):
             nonlocal comm_total
             mb.leg += 1
             c = comm[frm][to]
             comm_total += c
-            heappush(calendar, (t + c, next(seq), ARRIVE, mb, to, mb.leg, frm))
+            push((t + c, next(seq), ARRIVE, mb, to, mb.leg, frm))
             # sender expects a COMPLETE within comm+compute+timeout; a slow
             # (overloaded) peer is indistinguishable from a dead one.  The
             # CHECK record itself is materialized lazily, at the stall.
@@ -275,10 +317,9 @@ class SimulationEngine:
                 qmb.wait_node = -1
                 busy[nid] += 1
                 qmb.slots.add(nid)
-                heappush(calendar,
-                         (t + (bwd_t[nid] if qmb.direction == "bwd"
-                               else fwd_t[nid]),
-                          next(seq), DONE, qmb, nid, qleg, -1))
+                push((t + (bwd_t[nid] if qmb.direction == "bwd"
+                           else fwd_t[nid]),
+                      next(seq), DONE, qmb, nid, qleg, -1))
                 break
 
         def fail(mb: _MB, t: float):
@@ -342,9 +383,28 @@ class SimulationEngine:
         max_events = self.max_events
         qdepth_peak = 0
         enqueues = 0
-        while calendar and pops < max_events:
+        while pops < max_events:
+            if near:
+                ev = heappop(near)
+            elif far:
+                # promotion: one bulk Timsort, then slice off the next
+                # batch.  (time, seq) is unique, so the sort never
+                # compares payload fields; the ascending run is already
+                # a valid min-heap.  Extending across time ties keeps
+                # the invariant that far holds strictly-later events.
+                far.sort()
+                nf = len(far)
+                k = nf if nf <= _PROMOTE_MIN else max(_PROMOTE_MIN, nf >> 1)
+                while k < nf and far[k][0] == far[k - 1][0]:
+                    k += 1
+                near.extend(far[:k])
+                del far[:k]
+                boundary = near[-1][0]
+                ev = heappop(near)
+            else:
+                break
             pops += 1
-            t, _, kind, mb, nid, leg, frm = heappop(calendar)
+            t, _, kind, mb, nid, leg, frm = ev
             if mb.done or mb.failed:
                 continue
             if kind == ARRIVE:
@@ -353,8 +413,7 @@ class SimulationEngine:
                 if not (alive[nid] and t < crash[nid]):
                     # dead receiver: the mb stalls until the sender's
                     # timeout — materialize the CHECK record now
-                    heappush(calendar, (mb.deadline, next(seq), CHECK,
-                                        mb, nid, leg, frm))
+                    push((mb.deadline, next(seq), CHECK, mb, nid, leg, frm))
                     continue
                 if nid == mb.data_node:
                     if mb.direction == "fwd":
@@ -372,23 +431,22 @@ class SimulationEngine:
                     if nid not in mb.slots and busy[nid] < caps[nid]:
                         busy[nid] += 1
                         mb.slots.add(nid)
-                    heappush(calendar, (t + bwd_t[nid], next(seq),
-                                        DONE, mb, nid, leg, -1))
+                    push((t + bwd_t[nid], next(seq),
+                          DONE, mb, nid, leg, -1))
                 elif nid in mb.slots:
-                    heappush(calendar, (t + fwd_t[nid], next(seq),
-                                        DONE, mb, nid, leg, -1))
+                    push((t + fwd_t[nid], next(seq),
+                          DONE, mb, nid, leg, -1))
                 elif busy[nid] < caps[nid]:
                     busy[nid] += 1
                     mb.slots.add(nid)
-                    heappush(calendar, (t + fwd_t[nid], next(seq),
-                                        DONE, mb, nid, leg, -1))
+                    push((t + fwd_t[nid], next(seq),
+                          DONE, mb, nid, leg, -1))
                 else:
                     # wait for a free slot; may outlive the sender's
                     # patience — materialize the CHECK record
                     queues[nid].append((mb, leg))
                     mb.wait_node = nid
-                    heappush(calendar, (mb.deadline, next(seq), CHECK,
-                                        mb, nid, leg, frm))
+                    push((mb.deadline, next(seq), CHECK, mb, nid, leg, frm))
                     enqueues += 1
                     qdepth += 1
                     if qdepth > qdepth_peak:
@@ -412,8 +470,8 @@ class SimulationEngine:
                     # timeout recovers — materialize the CHECK record
                     m.wasted_gpu += (bwd_t[nid] if mb.direction == "bwd"
                                      else fwd_t[nid])
-                    heappush(calendar, (mb.deadline, next(seq), CHECK,
-                                        mb, nid, leg, mb.sent_from))
+                    push((mb.deadline, next(seq), CHECK,
+                          mb, nid, leg, mb.sent_from))
                     continue
                 if mb.direction == "bwd":
                     mb.compute_history.append((nid, bwd_t[nid]))
@@ -446,11 +504,33 @@ class SimulationEngine:
         m.queue_depth_peak = qdepth_peak
         m.queue_enqueues = enqueues
 
-        if calendar and pops >= max_events:
+        # ---- planning-overrun guard (warn-and-cap) ---------------------
+        # the optimality oracle (GWTFPolicy track_optimality) is a
+        # diagnostic riding inside plan(); its wall time must not trip
+        # the throttle and change planning behavior under profiling
+        plan_core = m.plan_seconds - getattr(self.policy,
+                                             "last_oracle_seconds", 0.0)
+        factor = self.plan_overrun_factor
+        if (factor is not None
+                and plan_core > self.plan_overrun_min_seconds
+                and plan_core > factor * m.loop_seconds):
+            m.plan_overrun = True
+            throttle = getattr(self.policy, "throttle_planning", None)
+            capped = throttle() if throttle is not None else None
+            warnings.warn(
+                f"planning overran the event loop: plan_seconds="
+                f"{plan_core:.3f} > {factor:g} x loop_seconds="
+                f"{m.loop_seconds:.3f}"
+                + (f"; policy planning effort capped to {capped}"
+                   if capped is not None else
+                   "; policy has no throttle_planning() hook"),
+                RuntimeWarning, stacklevel=2)
+
+        if (near or far) and pops >= max_events:
             m.truncated = True
             warnings.warn(
                 f"simulation iteration truncated: max_events={max_events} "
-                f"exhausted with {len(calendar)} events pending "
+                f"exhausted with {len(near) + len(far)} events pending "
                 f"({completed}/{m.launched} microbatches complete); "
                 f"reported duration is a lower bound",
                 RuntimeWarning, stacklevel=2)

@@ -14,7 +14,13 @@ New capabilities are opt-in keyword arguments:
   Bernoulli model implied by ``churn=``;
 * ``policy=`` — a pre-built `RoutingPolicy`, overriding ``scheduler=``;
 * ``max_events=`` — the per-iteration event budget (exhaustion is now
-  reported via `IterationMetrics.truncated` + a ``RuntimeWarning``).
+  reported via `IterationMetrics.truncated` + a ``RuntimeWarning``);
+* ``plan_overrun_factor=`` / ``plan_overrun_min_seconds=`` — the
+  engine's planning-overrun guard: when ``policy.plan()`` wall time
+  exceeds the event-loop wall time by the factor (and the absolute
+  minimum), the iteration is flagged (`IterationMetrics.plan_overrun`),
+  a ``RuntimeWarning`` fires, and the policy's ``throttle_planning()``
+  hook (if any) caps further planning effort.
 
 Conflicting keyword combinations used to be resolved by silently
 ignoring one side (``churn=`` dropped when ``churn_model=`` was given,
@@ -45,7 +51,9 @@ class TrainingSimulator:
                  rng: Optional[np.random.Generator] = None,
                  churn_model: Optional[ChurnModel] = None,
                  policy: Optional[RoutingPolicy] = None,
-                 max_events: int = 500_000):
+                 max_events: int = 500_000,
+                 plan_overrun_factor: float = 100.0,
+                 plan_overrun_min_seconds: float = 0.5):
         """scheduler: 'gwtf' (default) | 'swarm' | 'fixed' (preset paths
         — used for the DT-FM optimal-schedule baseline of Table VI)."""
         if churn and churn_model is not None:
@@ -86,7 +94,9 @@ class TrainingSimulator:
         self.engine = SimulationEngine(
             net, policy, churn_model=churn_model or BernoulliChurn(churn),
             profile=self.profile, timeout=timeout, max_retries=max_retries,
-            rng=self.rng, max_events=max_events)
+            rng=self.rng, max_events=max_events,
+            plan_overrun_factor=plan_overrun_factor,
+            plan_overrun_min_seconds=plan_overrun_min_seconds)
 
     def run_iteration(self) -> IterationMetrics:
         return self.engine.run_iteration()

@@ -21,7 +21,7 @@ per-repetition stds in paper units).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -67,6 +67,13 @@ class IterationMetrics:
     queue_depth_peak: int = 0     # max concurrent queued microbatches
     queue_enqueues: int = 0       # total capacity-wait enqueues
     truncated: bool = False       # max_events exhausted before drain
+    plan_overrun: bool = False    # plan_seconds blew past the engine's
+    #   plan_overrun_factor x loop_seconds guard (policy was asked to
+    #   throttle its planning effort)
+    cost_ratio_vs_optimal: Optional[float] = None
+    #   live optimality gap: (this iteration's planned-flow cost) /
+    #   (dial MinCostFlow oracle cost on the same alive network); None
+    #   unless the policy tracks it (GWTFPolicy(track_optimality=True))
 
     @property
     def time_per_microbatch(self) -> float:

@@ -102,16 +102,36 @@ class GWTFPolicy:
     repair* (Sec. V-D) — a substitute recomputes only the dead stage's
     forward from the stored upstream activation before the backward
     resumes; no full-pipeline recompute.
+
+    ``track_optimality=True`` runs the dial `MinCostFlow` oracle next
+    to every plan and publishes ``last_cost_ratio`` — (cost of the
+    planned flows) / (the oracle's optimal cost for the *same number of
+    flows* on the same alive network) — which the engine copies into
+    ``IterationMetrics.cost_ratio_vs_optimal``.  Float (geo) cost
+    matrices are quantized to integers for the dial core
+    (``oracle_quantum``), so the reported ratio carries a bounded
+    quantization error of at most one quantum per edge.
+
+    ``throttle_planning()`` is the engine's planning-overrun cap: each
+    call halves ``repair_rounds`` (floor 2) so a planner whose wall
+    time dwarfs the event loop degrades gracefully instead of
+    superlinearly.
     """
     name = "gwtf"
 
     def __init__(self, net: FlowNetwork, *,
                  rng: Optional[np.random.Generator] = None,
                  warmup_rounds: int = 100, repair_rounds: int = 30,
-                 repair_quiet_rounds: int = 2):
+                 repair_quiet_rounds: int = 2,
+                 track_optimality: bool = False,
+                 oracle_quantum: float = 1e-3):
         self.net = net
         self.repair_rounds = repair_rounds
         self.repair_quiet_rounds = repair_quiet_rounds
+        self.track_optimality = track_optimality
+        self.oracle_quantum = oracle_quantum
+        self.last_cost_ratio: Optional[float] = None
+        self.last_oracle_seconds: float = 0.0
         self.protocol = GWTFProtocol(net, rng=rng)
         self.protocol.run(max_rounds=warmup_rounds)
 
@@ -121,7 +141,47 @@ class GWTFPolicy:
         self.protocol.reclaim_sink_slots()
         self.protocol.run(max_rounds=self.repair_rounds,
                           quiet_rounds=self.repair_quiet_rounds)
-        return self.protocol.complete_flows()
+        flows = self.protocol.complete_flows()
+        if self.track_optimality:
+            self._update_cost_ratio(flows)
+        return flows
+
+    def throttle_planning(self) -> int:
+        """Engine overrun cap: halve the per-iteration repair budget."""
+        self.repair_rounds = max(2, self.repair_rounds // 2)
+        return self.repair_rounds
+
+    def _update_cost_ratio(self, flows: List[Sequence[int]]):
+        """Dial-oracle optimality gap of this iteration's plan.
+
+        The oracle is restricted to the planned flow *volume* (so a
+        partially-repaired plan is compared against the optimal routing
+        of the same number of flows, not blamed for flows it could not
+        launch), and the cost matrix is quantized to ``oracle_quantum``
+        integer steps to keep the O(V + C) dial core applicable to
+        float geo costs.  Consumes no protocol RNG.
+        """
+        import time as _time
+        from repro.core.flow.mincost import solve_training_flow
+        self.last_cost_ratio = None
+        if not flows:
+            return
+        t0 = _time.perf_counter()
+        CM = self.net.cost_matrix()
+        q = self.oracle_quantum
+        CMq = np.round(CM / q)
+        planned = sum(sum(CMq[a][b] for a, b in zip(f, f[1:]))
+                      for f in flows)
+        try:
+            plan_opt = solve_training_flow(
+                self.net, cost_matrix=CMq, max_flow=float(len(flows)),
+                method="dial")
+        except ValueError:
+            self.last_oracle_seconds = _time.perf_counter() - t0
+            return                      # non-finite costs: oracle N/A
+        if plan_opt.cost > 0 and plan_opt.flow >= len(flows):
+            self.last_cost_ratio = float(planned) / plan_opt.cost
+        self.last_oracle_seconds = _time.perf_counter() - t0
 
     def _reroute(self, view: FaultView, mb, frm: int, target_stage: int,
                  t: float) -> Optional[int]:

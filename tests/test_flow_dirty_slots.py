@@ -1,0 +1,188 @@
+"""Dirty-slot candidate-table maintenance (`flow/decentralized.py`).
+
+The incremental planner patches its per-stage Request Redirect /
+Request Change candidate tables in place at the slot positions touched
+by each mutation; ``strict_rebuild=True`` keeps the pre-dirty-slot
+behavior (a full epoch-keyed regather per mutated stage) as the
+in-engine equality oracle.  These tests drive randomized mutation
+sequences — refinement rounds, crashes, sink reclaims, rejoins —
+through both modes in lock-step and assert:
+
+* the candidate tables are identical after every mutation (same slot
+  registry, same validity masks, same column values at every valid
+  position);
+* the protocol-level observables (flows, cost, temperature, RNG
+  stream) never diverge;
+* the whole engine stays bit-identical to the frozen
+  `ReferenceGWTFProtocol` through a crash→repair→rejoin episode at
+  500 relays (the scale regime the dirty-slot tables exist for).
+"""
+import numpy as np
+import pytest
+
+from repro.core.flow.decentralized import GWTFProtocol
+from repro.core.flow.graph import synthetic_network
+from repro.core.flow.reference import ReferenceGWTFProtocol
+
+
+def build_net(seed, stages=4, relays_per_stage=5, sources=2,
+              source_capacity=4):
+    rng = np.random.default_rng(seed)
+    return synthetic_network(
+        num_stages=stages, relays_per_stage=relays_per_stage,
+        capacities=lambda r: int(r.uniform(1, 4)),
+        link_costs=lambda r: float(int(r.uniform(1, 20))),
+        num_sources=sources, source_capacity=source_capacity, rng=rng)
+
+
+def make_pair(seed, **kw):
+    """The same scenario twice: dirty-slot mode vs strict_rebuild."""
+    net_a, cm_a = build_net(seed, **kw)
+    net_b, cm_b = build_net(seed, **kw)
+    dirty = GWTFProtocol(net_a, cost_matrix=cm_a,
+                         rng=np.random.default_rng(seed + 7))
+    strict = GWTFProtocol(net_b, cost_matrix=cm_b, strict_rebuild=True,
+                          rng=np.random.default_rng(seed + 7))
+    return dirty, strict
+
+
+def assert_tables_equal(dirty, strict, tag=""):
+    """Both table queries agree per stage: identical slot registries
+    and validity masks, identical column values wherever valid (rows
+    with ``valid == False`` carry unspecified values by contract)."""
+    for stage in range(dirty.net.num_stages):
+        for query in ("_redirect_cands", "_change_cands"):
+            ta = getattr(dirty, query)(stage)
+            tb = getattr(strict, query)(stage)
+            where = f"{tag} stage {stage} {query}"
+            np.testing.assert_array_equal(ta[0], tb[0],
+                                          err_msg=f"{where}: slots")
+            np.testing.assert_array_equal(ta[6], tb[6],
+                                          err_msg=f"{where}: valid mask")
+            v = np.asarray(tb[6], bool)
+            for col in range(1, 6):
+                np.testing.assert_array_equal(
+                    np.asarray(ta[col])[v], np.asarray(tb[col])[v],
+                    err_msg=f"{where}: column {col}")
+
+
+def assert_protocols_equal(dirty, strict, tag=""):
+    assert dirty.complete_flows() == strict.complete_flows(), \
+        f"{tag}: flows diverged"
+    assert dirty.total_cost() == strict.total_cost(), f"{tag}: cost"
+    assert dirty.T == strict.T, f"{tag}: temperature"
+    assert dirty.rng.bit_generator.state == \
+        strict.rng.bit_generator.state, f"{tag}: RNG stream"
+
+
+class TestDirtySlotTables:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_randomized_mutation_sequences(self, seed):
+        """~12 random operations (refinement bursts, relay crashes,
+        rejoins, sink reclaims) applied to both modes in lock-step:
+        tables and observables must stay identical throughout."""
+        dirty, strict = make_pair(seed)
+        ops = np.random.default_rng([seed, 99])   # op stream only —
+        # never the protocols' RNG, so both consume identical draws
+        dirty.run(max_rounds=40, quiet_rounds=5)
+        strict.run(max_rounds=40, quiet_rounds=5)
+        assert_tables_equal(dirty, strict, f"seed {seed} warmup")
+        dead = []
+        for step in range(12):
+            relays = [n.id for n in dirty.net.nodes.values()
+                      if not n.is_data]
+            alive = [nid for nid in relays if dirty.net.nodes[nid].alive]
+            op = ops.integers(0, 4)
+            if op == 0 and len(alive) > dirty.net.num_stages:
+                victim = int(ops.choice(alive))
+                for p in (dirty, strict):
+                    p.net.kill_node(victim)
+                    p.remove_node(victim)
+                dead.append(victim)
+            elif op == 1 and dead:
+                back = dead.pop(int(ops.integers(0, len(dead))))
+                for p in (dirty, strict):
+                    p.net.nodes[back].alive = True
+                    p.add_node(p.net.nodes[back])
+            elif op == 2:
+                for p in (dirty, strict):
+                    p.reclaim_sink_slots()
+            else:
+                rounds = int(ops.integers(3, 15))
+                for p in (dirty, strict):
+                    p.run(max_rounds=rounds, quiet_rounds=2)
+            tag = f"seed {seed} step {step} op {op}"
+            assert_tables_equal(dirty, strict, tag)
+            assert_protocols_equal(dirty, strict, tag)
+        # close out: repair to quiescence and re-check end state
+        for p in (dirty, strict):
+            p.reclaim_sink_slots()
+            p.run(max_rounds=60, quiet_rounds=5)
+        assert_tables_equal(dirty, strict, f"seed {seed} final")
+        assert_protocols_equal(dirty, strict, f"seed {seed} final")
+        assert len(dirty.complete_flows()) > 0
+
+    def test_cost_matrix_refresh_invalidates_tables(self):
+        """A cost-epoch move (wholesale ``net.latency`` rebind, as
+        bench_node_addition does) is one of the three full-rebuild
+        triggers: the dirty mode's cached edge costs must not go
+        stale."""
+        from repro.core.flow.graph import geo_distributed_network
+
+        def build(seed=11):
+            return geo_distributed_network(
+                num_stages=3, relay_capacities=[2] * 9,
+                num_data_nodes=1, data_capacity=3,
+                rng=np.random.default_rng(seed))
+
+        dirty = GWTFProtocol(build(), rng=np.random.default_rng(4))
+        strict = GWTFProtocol(build(), strict_rebuild=True,
+                              rng=np.random.default_rng(4))
+        for p in (dirty, strict):
+            p.run(max_rounds=40, quiet_rounds=5)
+        assert_tables_equal(dirty, strict, "pre-rebind")
+        for p in (dirty, strict):
+            p.net.latency = p.net.latency * 3.0 + 1.0   # cost epoch moves
+            p.reclaim_sink_slots()
+            p.run(max_rounds=30, quiet_rounds=3)
+        assert_tables_equal(dirty, strict, "post-rebind")
+        assert_protocols_equal(dirty, strict, "post-rebind")
+
+
+class TestScaleBitEquality:
+    def test_500_relay_crash_repair_rejoin_vs_reference(self):
+        """The full engine (dirty-slot tables on) stays bit-identical
+        to the frozen reference through crash → repair → rejoin at 500
+        relays — the regime the incremental tables were built for."""
+        seed = 5
+        net_o, cm_o = build_net(seed, stages=10, relays_per_stage=50,
+                                sources=2, source_capacity=25)
+        net_r, cm_r = build_net(seed, stages=10, relays_per_stage=50,
+                                sources=2, source_capacity=25)
+        opt = GWTFProtocol(net_o, cost_matrix=cm_o,
+                           rng=np.random.default_rng(seed + 3))
+        ref = ReferenceGWTFProtocol(net_r, cost_matrix=cm_r,
+                                    rng=np.random.default_rng(seed + 3))
+        opt.run(max_rounds=60, quiet_rounds=10)
+        ref.run(max_rounds=60, quiet_rounds=10)
+        flows = ref.complete_flows()
+        assert opt.complete_flows() == flows and len(flows) > 0
+        victims = sorted({flows[0][1], flows[-1][2], flows[-1][1]})
+        for p, n in ((opt, net_o), (ref, net_r)):
+            for v in victims:
+                n.kill_node(v)
+                p.remove_node(v)
+            p.reclaim_sink_slots()
+            p.run(max_rounds=30, quiet_rounds=5)
+        assert opt.complete_flows() == ref.complete_flows(), "post-crash"
+        assert opt.total_cost() == ref.total_cost()
+        assert opt.rng.bit_generator.state == ref.rng.bit_generator.state
+        for p, n in ((opt, net_o), (ref, net_r)):
+            for v in victims:
+                n.nodes[v].alive = True
+                p.add_node(n.nodes[v])
+            p.reclaim_sink_slots()
+            p.run(max_rounds=30, quiet_rounds=5)
+        assert opt.complete_flows() == ref.complete_flows(), "post-rejoin"
+        assert opt.total_cost() == ref.total_cost()
+        assert opt.rng.bit_generator.state == ref.rng.bit_generator.state

@@ -14,19 +14,24 @@ from repro.core.flow.mincost import MinCostFlow, solve_training_flow
 from repro.core.scenarios import generate
 from repro.core.scenarios.corpus import (GOLDEN_PINNED, get_scenario,
                                          load_corpus, load_golden)
-from repro.core.scenarios.harness import (FUZZ_CHECKS, ScenarioDiscrepancy,
+from repro.core.scenarios.harness import (FUZZ_CHECKS, SCALE_FUZZ_CHECKS,
+                                          ScenarioDiscrepancy,
                                           check_capacity_monotonicity,
                                           check_flow_equivalence,
                                           check_optimal_consistency,
                                           check_permutation_invariance,
                                           check_sim_runtime_consistency,
-                                          check_zero_churn, fuzz, minimize)
+                                          check_zero_churn, fuzz, minimize,
+                                          random_scale_spec, run_checks,
+                                          scale_checks)
 from repro.core.scenarios.spec import ScenarioSpec
 from repro.core.sim.metrics import summarize
 from tests._hypothesis_compat import given, settings, st
 
 CORPUS = load_corpus()
 CORPUS_IDS = [s.name for s in CORPUS]
+SCALE_CORPUS = load_corpus(tier="scale")
+SCALE_IDS = [s.name for s in SCALE_CORPUS]
 
 
 def small_spec(**kw):
@@ -78,6 +83,32 @@ class TestSpecSchema:
     def test_corpus_specs_validate_and_are_unique(self):
         assert len(CORPUS) >= 12
         assert len({s.name for s in CORPUS}) == len(CORPUS)
+
+    def test_unknown_tier_rejected(self):
+        with pytest.raises(ValueError, match="tier"):
+            small_spec(tier="mega")
+        with pytest.raises(ValueError, match="tier"):
+            load_corpus(tier="mega")
+
+    def test_scale_tier_is_separate(self):
+        """Scale specs never leak into the standard corpus (which the
+        golden file covers) and vice versa."""
+        assert len(SCALE_CORPUS) >= 3
+        assert all(s.tier == "scale" for s in SCALE_CORPUS)
+        assert all(s.tier == "standard" for s in CORPUS)
+        assert not set(SCALE_IDS) & set(CORPUS_IDS)
+        both = load_corpus(tier="all")
+        assert {s.name for s in both} == set(SCALE_IDS) | set(CORPUS_IDS)
+
+    def test_location_clause_allowed_on_geo_abstract(self):
+        small_spec(topology="geo-abstract",
+                   churn=[{"kind": "regional_blackout", "location": 0,
+                           "at_iteration": 0}])
+        # but bandwidth-touching clauses still need the real geo links
+        with pytest.raises(ValueError, match="geo topology"):
+            small_spec(topology="geo-abstract",
+                       churn=[{"kind": "link_degradation",
+                               "at_iteration": 0, "factor": 2.0}])
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +192,19 @@ class TestHarnessFast:
         monkeypatch.setattr(generate, "build_flow", tampered)
         with pytest.raises(ScenarioDiscrepancy, match="batched"):
             check_flow_equivalence(spec)
+
+    def test_scale_check_selection(self):
+        """The scale tier swaps the O(N^2) reference differential out
+        above ~600 nodes and swaps the hierarchy gap check in on
+        located topologies; real-compute checks never appear."""
+        assert scale_checks(get_scenario("scale-flow-500")) == \
+            ("flow-equivalence", "sim-invariants")
+        assert scale_checks(get_scenario("scale-geo-1000-churn10")) == \
+            ("sim-invariants", "hierarchy-gap")
+        assert scale_checks(get_scenario("scale-geo-2000-blackout")) == \
+            ("sim-invariants", "hierarchy-gap")
+        for spec in SCALE_CORPUS:
+            assert "sim-runtime" not in scale_checks(spec)
 
     def test_capacity_monotonicity_is_falsifiable(self):
         """Sanity: the invariant check actually compares costs (a fake
@@ -424,6 +468,37 @@ class TestRuntimeDifferentials:
         # reduced shape: real compute per iteration is the expensive part
         spec = spec.replace(iterations=min(spec.iterations, 4))
         check_sim_runtime_consistency(spec)
+
+
+@pytest.mark.scenarios
+class TestScaleTier:
+    """The ``--scale`` corpus tier: internet-scale specs swept with the
+    restricted `scale_checks` regime.  scale-flow-500 is the committed
+    ≥500-relay engine-vs-reference bit-equality scenario (including the
+    harness' crash→repair→rejoin episode); the geo-abstract specs run
+    the event engine under churn plus the hierarchical planner's
+    feasibility + optimality-gap check."""
+
+    @pytest.mark.parametrize("spec", SCALE_CORPUS, ids=SCALE_IDS)
+    def test_scale_sweep(self, spec):
+        out = run_checks(spec, scale_checks(spec))
+        assert "sim-invariants" in out
+        gap = out.get("hierarchy-gap")
+        if gap is not None:
+            assert gap["flow"] > 0 and not gap.get("skipped")
+
+    def test_seeded_scale_fuzz(self, tmp_path):
+        """Randomized 1000+-relay specs under the scale check set
+        (default 15 s locally; the scenario-corpus CI job raises the
+        budget via SCENARIO_SCALE_FUZZ_SECONDS).  No shrinking — the
+        unshrunk reproducer is still committed to tmp_path on failure."""
+        budget = float(os.environ.get("SCENARIO_SCALE_FUZZ_SECONDS", "15"))
+        rep = fuzz(seed=20260809, budget_seconds=budget,
+                   corpus_dir=str(tmp_path), checks=SCALE_FUZZ_CHECKS,
+                   spec_factory=random_scale_spec, shrink=False)
+        assert rep.cases > 0
+        assert rep.ok, "\n\n".join(
+            f"[{f.check}] {f.detail}" for f in rep.failures)
 
 
 @pytest.mark.scenarios

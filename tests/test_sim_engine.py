@@ -425,6 +425,92 @@ class TestEventAccounting:
             assert np.isfinite(mean) and np.isfinite(std)
 
 
+class _SlowPolicy:
+    """Delegating policy whose plan() sleeps — a deterministic planning
+    overrun against a millisecond event loop."""
+
+    def __init__(self, inner, delay=0.08, oracle_seconds=0.0):
+        self.inner = inner
+        self.name = inner.name
+        self.delay = delay
+        self.last_oracle_seconds = oracle_seconds
+        self.throttle_calls = 0
+
+    def plan(self):
+        import time
+        time.sleep(self.delay)
+        return self.inner.plan()
+
+    def recover(self, view, mb, frm, dead, t):
+        return self.inner.recover(view, mb, frm, dead, t)
+
+    def on_rejoin(self, node):
+        self.inner.on_rejoin(node)
+
+    def on_crash(self, nid):
+        self.inner.on_crash(nid)
+
+    def throttle_planning(self):
+        self.throttle_calls += 1
+        return self.inner.throttle_planning()
+
+
+class TestPlanOverrunGuard:
+    def _sim(self, policy_delay=0.08, oracle_seconds=0.0):
+        net = tiny_net(stages=2, relays_per_stage=2, data_capacity=2)
+        rng = np.random.default_rng(5)
+        slow = _SlowPolicy(make_policy("gwtf", net, rng=rng),
+                           delay=policy_delay,
+                           oracle_seconds=oracle_seconds)
+        return slow, TrainingSimulator(net, policy=slow, rng=rng,
+                                       plan_overrun_factor=2.0,
+                                       plan_overrun_min_seconds=0.02)
+
+    def test_overrun_warns_flags_and_throttles(self):
+        slow, sim = self._sim()
+        inner_rounds = slow.inner.repair_rounds
+        with pytest.warns(RuntimeWarning, match="planning overran"):
+            m = sim.run_iteration()
+        assert m.plan_overrun
+        assert slow.throttle_calls == 1
+        assert slow.inner.repair_rounds == max(2, inner_rounds // 2)
+        assert m.completed == m.launched > 0     # warn-and-cap, not fail
+
+    def test_oracle_time_excluded_from_guard(self):
+        """The optimality oracle rides inside plan() as a diagnostic;
+        its wall time must not trip the throttle."""
+        slow, sim = self._sim(oracle_seconds=10.0)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            m = sim.run_iteration()
+        assert not m.plan_overrun
+        assert slow.throttle_calls == 0
+
+    def test_track_optimality_surfaces_ratio_stream_neutrally(self):
+        """GWTFPolicy(track_optimality=True) publishes the dial-oracle
+        cost ratio into IterationMetrics without touching the RNG
+        stream or any behavioral metric."""
+        from repro.core.sim.policies import GWTFPolicy
+
+        def run(track):
+            net = tiny_net(seed=2, stages=2, relays_per_stage=2,
+                           data_capacity=2)
+            rng = np.random.default_rng(3)
+            sim = TrainingSimulator(
+                net, policy=GWTFPolicy(net, rng=rng,
+                                       track_optimality=track),
+                churn=0.1, rng=rng)
+            return sim.run(3)
+        tracked, plain = run(True), run(False)
+        for a, b in zip(tracked, plain):
+            assert (a.completed, a.comm_time, a.wasted_gpu, a.duration) \
+                == (b.completed, b.comm_time, b.wasted_gpu, b.duration)
+            assert b.cost_ratio_vs_optimal is None
+            if a.launched:
+                assert a.cost_ratio_vs_optimal is not None
+                assert a.cost_ratio_vs_optimal >= 1.0 - 1e-9
+
+
 class TestEngineEquivalence:
     @pytest.mark.parametrize("churn", [0.0, 0.15])
     def test_gwtf_metric_and_rng_identical(self, churn):
