@@ -35,16 +35,23 @@ def main(argv=None) -> int:
     ap.add_argument("--runtime", action="store_true",
                     help="also run one real-compute row through the "
                          "staged runtime")
+    ap.add_argument("--activation-codec", choices=["fp", "int8"],
+                    default="fp",
+                    help="activation/residual store codec for the "
+                         "--runtime row")
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--iterations", type=int, default=12)
     args = ap.parse_args(argv)
     for line in run(reps=args.reps, iterations=args.iterations):
         print(line)
     if args.runtime:
-        r = runtime_row("gwtf-gpt-300m")
+        r = runtime_row("gwtf-gpt-300m",
+                        activation_codec=args.activation_codec)
         print(csv_row("tableIII_runtime_mb_per_sec", r["mb_per_sec"],
                       f"rerouted={r['rerouted']} "
-                      f"recomputes={r['stage_recomputes']}"))
+                      f"recomputes={r['stage_recomputes']} "
+                      f"store={r['store_peak_bytes'] / 1e6:.1f}MB"
+                      f"({r['activation_codec']})"))
     return 0
 
 

@@ -88,11 +88,14 @@ def csv_row(name: str, value: float, derived: str = "") -> str:
 
 
 def runtime_row(model_arch: str, *, churn: float = 0.1, iterations: int = 4,
-                seed: int = 0, verbose: bool = True) -> Dict:
+                seed: int = 0, verbose: bool = True,
+                activation_codec: str = "fp") -> Dict:
     """One real-compute row through the staged runtime: the crash-table
     scenario (reduced to CPU scale) executed with actual JAX compute
-    instead of the event simulator — losses, reroute/recompute counters
-    and microbatches/sec from `repro.core.runtime`."""
+    instead of the event simulator — losses, reroute/recompute counters,
+    microbatches/sec, and the resident activation+residual store
+    high-water mark from `repro.core.runtime` (fused dispatch;
+    ``activation_codec="int8"`` measures the quantized store)."""
     import dataclasses
     import time
 
@@ -110,27 +113,32 @@ def runtime_row(model_arch: str, *, churn: float = 0.1, iterations: int = 4,
     dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, batch_size=8,
                     microbatch_size=1, seed=seed)
     shard = DataNodeShard(dc, 0, 1)
-    tr = RuntimeTrainer(cfg, net, churn=churn, lr=1e-3, seed=seed)
+    tr = RuntimeTrainer(cfg, net, churn=churn, lr=1e-3, seed=seed,
+                        activation_codec=activation_codec)
     dn = net.data_nodes()[0].id
     tr.iteration({dn: shard.microbatches()})        # compile
     t0 = time.perf_counter()
-    completed = rerouted = recomputes = dropped = 0
+    completed = rerouted = recomputes = dropped = store_peak = 0
     for _ in range(iterations):
         r = tr.iteration({dn: shard.microbatches()})
         completed += r.completed
         rerouted += r.rerouted
         recomputes += r.fwd_recomputes + r.bwd_replays
         dropped += r.dropped
+        store_peak = max(store_peak, r.store_peak_bytes)
     dt = time.perf_counter() - t0
     row = dict(model=cfg.name, churn=churn, iterations=iterations,
                completed=completed, dropped=dropped, rerouted=rerouted,
                stage_recomputes=recomputes,
                mb_per_sec=round(completed / dt, 2),
+               store_peak_bytes=store_peak,
+               activation_codec=activation_codec,
                final_loss=round(tr.losses[-1], 4))
     if verbose:
         print(f"runtime row [{cfg.name}] churn={churn:.0%}: "
               f"{row['mb_per_sec']:.1f} mb/s, "
               f"{completed} completed / {dropped} dropped, "
               f"{rerouted} rerouted ({recomputes} stage recomputes), "
+              f"store {store_peak / 1e6:.1f}MB ({activation_codec}), "
               f"final loss {row['final_loss']:.4f}")
     return row

@@ -9,7 +9,11 @@ every ``--checkpoint-every`` iterations when ``--checkpoint-dir`` is
 set; ``--resume`` restores from them and continues the run — the same
 snapshots that bootstrap rejoining nodes (paper Sec. V-E).  Each report
 line includes the reroute/recompute counters of the stage-local
-recovery path.
+recovery path and the resident activation-store bytes (boundary
+activations + VJP residuals kept by the fused dispatch);
+``--activation-codec int8`` quantises the store (per-tensor symmetric
+int8 + fp32 scale) for ~4x less resident memory at a bounded fidelity
+cost, and ``--remat`` switches to the rematerialising oracle backward.
 """
 import argparse
 import os
@@ -62,6 +66,15 @@ def main():
                     help="snapshot period in iterations")
     ap.add_argument("--resume", action="store_true",
                     help="restore from --checkpoint-dir before training")
+    ap.add_argument("--activation-codec", choices=["fp", "int8"],
+                    default="fp",
+                    help="activation/residual store codec: fp (exact, "
+                         "default) or int8 (per-tensor symmetric, ~4x "
+                         "smaller resident store)")
+    ap.add_argument("--remat", action="store_true",
+                    help="rematerialising backward (the in-engine "
+                         "equality oracle) instead of the fused "
+                         "residual-carrying dispatch")
     args = ap.parse_args()
 
     cfg = get_config("gwtf-llama-300m").reduced(
@@ -73,8 +86,12 @@ def main():
     dec = DecentralizedTrainer(cfg, net, churn=args.churn, lr=1e-3,
                                seed=args.seed,
                                checkpoint_dir=args.checkpoint_dir,
-                               checkpoint_every=args.checkpoint_every)
-    cen = CentralizedTrainer(cfg, S, lr=1e-3, seed=args.seed)
+                               checkpoint_every=args.checkpoint_every,
+                               activation_codec=args.activation_codec,
+                               remat=args.remat)
+    cen = CentralizedTrainer(cfg, S, lr=1e-3, seed=args.seed,
+                             activation_codec=args.activation_codec,
+                             remat=args.remat)
     if args.resume:
         if not args.checkpoint_dir:
             ap.error("--resume requires --checkpoint-dir")
@@ -102,7 +119,9 @@ def main():
                   f"[{r.completed}/{r.launched} mb, "
                   f"rerouted={r.rerouted} (requeued={r.requeued}), "
                   f"recomputes fwd={r.fwd_recomputes} "
-                  f"bwd={r.bwd_replays}, dropped={r.dropped}]   "
+                  f"bwd={r.bwd_replays}, dropped={r.dropped}, "
+                  f"store={r.store_peak_bytes / 1e6:.1f}MB "
+                  f"{args.activation_codec}]   "
                   f"centralized loss={cl:.4f}")
     g = np.mean(dec.losses[-10:])
     c = np.mean(cen.losses[-10:])

@@ -7,13 +7,18 @@ training; the implementation lives in the layered
 :mod:`repro.core.sim`):
 
 * :class:`DecentralizedTrainer` — GWTF training over a
-  :class:`~repro.core.flow.graph.FlowNetwork` with *per-stage* jitted
-  ``jax.vjp`` execution: microbatches are stacked so B microbatches
-  cost one dispatch per stage, boundary activations are stored
-  per (microbatch, stage), and mid-iteration crashes are repaired
-  stage-locally — a forward crash recomputes only the crashed stage
-  from the stored input, a backward crash replays that stage's VJP on
-  a substitute replica (paper Sec. V-D).  Churn is sampled by the
+  :class:`~repro.core.flow.graph.FlowNetwork` with *per-stage* fused
+  jitted execution: each stage forward is one residual-carrying
+  dispatch (``jax.vjp`` closure capture), the backward consumes the
+  stored residuals so it never recomputes the forward
+  (``remat=True`` restores the rematerialising oracle), microbatches
+  are stacked in depth-first dispatch chunks, boundary activations
+  and residuals are stored per (chunk, stage) — optionally int8
+  quantised via ``activation_codec="int8"`` — and mid-iteration
+  crashes are repaired stage-locally: a forward crash recomputes only
+  the crashed stage from the stored input, a backward crash replays
+  that stage's VJP from the stored residuals on a substitute replica
+  (paper Sec. V-D) with zero forward recompute.  Churn is sampled by the
   simulator's :class:`~repro.core.sim.faults.ChurnModel` layer and
   repair decisions come from its
   :class:`~repro.core.sim.policies.RoutingPolicy` layer, so the flow

@@ -1,49 +1,167 @@
-"""Per-(microbatch, stage) activation store — the recovery substrate.
+"""Per-(microbatch, stage) activation + residual store — the recovery
+and fused-backward substrate.
 
 The paper's stage-local repair (Sec. V-D) hinges on one invariant: the
 input activation of every stage is retained until that stage's backward
 completes.  A forward crash then reroutes and recomputes *only* the
 crashed stage from the stored input; a backward crash replays that
-stage's VJP on a substitute replica from the same stored input.
+stage's VJP on a substitute replica.
 
-`ActivationStore` keys boundary activations by pipeline stage.  The
-batched runtime stores one stacked array per stage (the rows of all
-in-flight microbatches, one ``put``); the per-microbatch view needed by
-recovery (`get`) slices rows out of the stack, and the backward sweep
-reads the stack back (`stacked`), gathering rows when some microbatches
-failed mid-backward.  Stage ``s``'s entry is the *input* of stage
-``s``; stage 0's entry is the embedding output.
+Since the fused dispatch rework, the store holds two things per stage:
+
+* **boundary activations** (stage ``s``'s entry is the *input* of
+  stage ``s``; stage 0's entry is the embedding output) — what a
+  substitute replica 'downloads' to recompute a crashed forward, and
+  what the remat oracle path reads back for its backward;
+* **VJP residuals** (the ``jax.tree_util.Partial`` captured by
+  ``StageCompute.forward_fused``) — what the default backward and the
+  residual-based crash replay consume, so backward never re-runs the
+  forward.
+
+Keeping residuals costs memory; the opt-in :class:`Int8Codec`
+(per-tensor symmetric int8 + fp32 scale, the FusionLLM-style
+compression lever) shrinks both boundary activations and residuals
+~4x at a bounded fidelity cost (``|x - dq(q(x))| <= scale/2``
+elementwise).  ``peak_bytes`` tracks the high-water resident size so
+benchmarks can surface the memory/recompute/fidelity trade.
+
+The batched runtime stores one stacked array per (stage, chunk) (the
+rows of all microbatches of a dispatch chunk, one ``put``); the
+per-microbatch view needed by recovery (`get`) slices rows out of the
+stack, and the backward sweep reads the stack back (`stacked`),
+gathering rows when some microbatches failed mid-backward.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 
-class ActivationStore:
-    """Boundary activations for the in-flight iteration."""
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
 
-    def __init__(self):
-        # stage -> list of (mb_ids tuple, stacked array) chunks
+def _leaf_nbytes(x) -> int:
+    nb = getattr(x, "nbytes", None)
+    return int(nb) if nb is not None else int(np.asarray(x).nbytes)
+
+
+class _Quantized:
+    """One int8-encoded tensor: values, per-tensor fp32 scale, original
+    dtype.  Rows can be sliced before dequantisation (the scale is
+    per-tensor, so any row subset dequantises with the same scale)."""
+    __slots__ = ("q", "scale", "dtype")
+
+    def __init__(self, q, scale, dtype):
+        self.q = q
+        self.scale = scale
+        self.dtype = dtype
+
+    @property
+    def nbytes(self) -> int:
+        return _leaf_nbytes(self.q) + _leaf_nbytes(self.scale)
+
+
+class NullCodec:
+    """Identity codec: full-precision store, zero-copy (the default —
+    bit-identity with `CentralizedTrainer` depends on it)."""
+    name = "fp"
+
+    def encode(self, x):
+        return x
+
+    def decode(self, enc):
+        return enc
+
+    @staticmethod
+    def nbytes(enc) -> int:
+        return _leaf_nbytes(enc)
+
+
+class Int8Codec:
+    """Per-tensor symmetric int8 quantisation with an fp32 scale.
+
+    ``scale = amax(|x|) / 127``; ``q = clip(round(x / scale), -127,
+    127)``; ``dq = q * scale``.  Round-to-nearest bounds the elementwise
+    error by ``scale / 2``.  Non-float leaves (token ids, integer
+    residuals) pass through unquantised.
+    """
+    name = "int8"
+
+    def encode(self, x):
+        if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            return x
+        x = jnp.asarray(x)
+        amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+        scale = jnp.where(amax > 0, amax / 127.0, jnp.float32(1.0))
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+        return _Quantized(q, scale, x.dtype)
+
+    def decode(self, enc):
+        if not isinstance(enc, _Quantized):
+            return enc
+        return (enc.q.astype(jnp.float32) * enc.scale).astype(enc.dtype)
+
+    @staticmethod
+    def nbytes(enc) -> int:
+        if isinstance(enc, _Quantized):
+            return enc.nbytes
+        return _leaf_nbytes(enc)
+
+
+CODECS = {"fp": NullCodec, "int8": Int8Codec}
+
+
+def make_codec(spec: Union[str, None, NullCodec, Int8Codec]):
+    if spec is None:
+        return NullCodec()
+    if isinstance(spec, str):
+        try:
+            return CODECS[spec]()
+        except KeyError:
+            raise ValueError(f"unknown activation codec {spec!r} "
+                             f"(choose from {sorted(CODECS)})") from None
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Store
+# ---------------------------------------------------------------------------
+
+class ActivationStore:
+    """Boundary activations + VJP residuals for the in-flight
+    iteration, optionally quantised by ``codec``."""
+
+    def __init__(self, codec: Union[str, None, NullCodec, Int8Codec] = None):
+        self.codec = make_codec(codec)
+        # stage -> list of (mb_ids tuple, encoded stacked array) chunks
         self._chunks: Dict[int, List[Tuple[tuple, Any]]] = {}
+        # stage -> list of (mb_ids tuple, [encoded leaves], treedef)
+        self._residuals: Dict[int, List[Tuple[tuple, list, Any]]] = {}
         self.puts = 0
         self.hits = 0
         self.misses = 0
+        self.peak_bytes = 0
 
     # ------------------------------------------------------------------
     def put(self, stage: int, mb_ids: Sequence[int], x) -> None:
         """Store the stacked input of ``stage`` for ``mb_ids`` (rows of
         ``x`` split evenly, in order)."""
-        self._chunks.setdefault(stage, []).append((tuple(mb_ids), x))
+        self._chunks.setdefault(stage, []).append(
+            (tuple(mb_ids), self.codec.encode(x)))
         self.puts += 1
+        self._note_peak()
 
     def get(self, stage: int, mb_id: int):
         """The stored input rows of ``stage`` for one microbatch — what
         a substitute replica 'downloads' to recompute or replay."""
-        for ids, x in self._chunks.get(stage, ()):
+        for ids, enc in self._chunks.get(stage, ()):
             if mb_id in ids:
+                x = self.codec.decode(enc)
                 per = x.shape[0] // len(ids)
                 k = ids.index(mb_id)
                 self.hits += 1
@@ -60,24 +178,89 @@ class ActivationStore:
         are gathered per microbatch.
         """
         want = tuple(mb_ids)
-        for ids, x in self._chunks.get(stage, ()):
+        for ids, enc in self._chunks.get(stage, ()):
             if ids == want:
                 self.hits += 1
-                return x
+                return self.codec.decode(enc)
         return jnp.concatenate([self.get(stage, i) for i in want], axis=0)
 
     # ------------------------------------------------------------------
+    # Residuals (fused backward / residual-based crash replay)
+    # ------------------------------------------------------------------
+    def put_residuals(self, stage: int, mb_ids: Sequence[int],
+                      residuals) -> None:
+        """Store the VJP residual pytree of ``stage`` for the chunk
+        ``mb_ids`` (leaf-wise encoded)."""
+        leaves, treedef = jax.tree_util.tree_flatten(residuals)
+        enc = [self.codec.encode(leaf) for leaf in leaves]
+        self._residuals.setdefault(stage, []).append(
+            (tuple(mb_ids), enc, treedef))
+        self.puts += 1
+        self._note_peak()
+
+    def residuals(self, stage: int, mb_ids: Sequence[int]):
+        """The decoded residual pytree for exactly the chunk
+        ``mb_ids`` (residual leaves mix batch-shaped and param-shaped
+        tensors, so unlike boundaries they are chunk-granular)."""
+        want = tuple(mb_ids)
+        for ids, enc, treedef in self._residuals.get(stage, ()):
+            if ids == want:
+                self.hits += 1
+                return jax.tree_util.tree_unflatten(
+                    treedef, [self.codec.decode(e) for e in enc])
+        self.misses += 1
+        raise KeyError(f"no stored residuals for (mbs={want}, "
+                       f"stage={stage})")
+
+    def has_residuals(self, stage: int, mb_ids: Sequence[int]) -> bool:
+        want = tuple(mb_ids)
+        return any(ids == want for ids, _, _ in
+                   self._residuals.get(stage, ()))
+
+    # ------------------------------------------------------------------
+    def drop(self, stage: int, mb_ids: Sequence[int]) -> None:
+        """Release one chunk's boundary + residuals once its backward
+        completed (depth-first chunking keeps residency to ~one chunk
+        per stage)."""
+        want = tuple(mb_ids)
+        chunks = self._chunks.get(stage)
+        if chunks is not None:
+            chunks[:] = [c for c in chunks if c[0] != want]
+            if not chunks:
+                del self._chunks[stage]
+        resid = self._residuals.get(stage)
+        if resid is not None:
+            resid[:] = [r for r in resid if r[0] != want]
+            if not resid:
+                del self._residuals[stage]
+
     def drop_stage(self, stage: int) -> None:
-        """Release a stage's activations once its backward completed."""
+        """Release a stage's activations + residuals entirely."""
         self._chunks.pop(stage, None)
+        self._residuals.pop(stage, None)
 
     def clear(self) -> None:
         self._chunks.clear()
+        self._residuals.clear()
+
+    def reset_peak(self) -> None:
+        self.peak_bytes = 0
 
     def nbytes(self) -> int:
-        return int(sum(np.asarray(x).nbytes
-                       for chunks in self._chunks.values()
-                       for _, x in chunks))
+        """Resident encoded bytes (boundaries + residuals)."""
+        total = sum(self.codec.nbytes(enc)
+                    for chunks in self._chunks.values()
+                    for _, enc in chunks)
+        total += sum(self.codec.nbytes(e)
+                     for chunks in self._residuals.values()
+                     for _, enc, _ in chunks for e in enc)
+        return int(total)
+
+    def _note_peak(self) -> None:
+        n = self.nbytes()
+        if n > self.peak_bytes:
+            self.peak_bytes = n
 
     def __len__(self) -> int:
-        return sum(len(c) for c in self._chunks.values())
+        return (sum(len(c) for c in self._chunks.values())
+                + sum(len(c) for c in self._residuals.values()))

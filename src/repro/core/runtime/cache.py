@@ -1,0 +1,63 @@
+"""Process-wide caches for the staged runtime's expensive setup.
+
+Two things dominate runtime-test and scenario-fuzz wall time on CPU:
+XLA compilation of the stage kernels and model-parameter init.  Both
+are pure functions of hashable inputs (the frozen ``ModelConfig``,
+stage count, seed), so they are memoised here and shared by every
+trainer, test, and harness leg in the process:
+
+* :func:`kernels` — the jitted stage primitives, keyed on
+  ``(ModelConfig, donate)`` (delegates to the ``lru_cache`` in
+  :mod:`repro.core.runtime.stages`);
+* :func:`initial_params` — per-stage parameter pytrees + the data-node
+  head, keyed on ``(ModelConfig, num_stages, seed)``.  JAX arrays are
+  immutable and trainers replace (never mutate) their parameter trees
+  on update, so sharing the initial trees cannot leak training state
+  across cache hits — ``tests/test_fused_runtime.py`` pins that.
+
+``StageCompute`` instances are intentionally NOT cached: their
+dispatch counters are per-trainer ground truth for the recovery tests.
+Construction is cheap once the kernels behind them are cached.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Tuple
+
+import jax
+
+from repro.models.config import ModelConfig
+from repro.core.runtime.stages import (init_head_params, init_stage_params,
+                                       stage_kernels)
+
+
+def kernels(cfg: ModelConfig, donate: bool):
+    """The shared jitted kernel set for ``cfg`` (compiled lazily per
+    input shape, once per process)."""
+    return stage_kernels(cfg, donate)
+
+
+@lru_cache(maxsize=None)
+def initial_params(cfg: ModelConfig, num_stages: int, seed: int = 0
+                   ) -> Tuple[tuple, dict]:
+    """Seeded initial parameters: ``(stage_param_trees, head_params)``.
+
+    Key derivation matches the historical trainer init exactly
+    (``PRNGKey(seed)`` folded per stage; head at ``fold_in(key, 999)``)
+    so cached and uncached trainers are bit-identical.
+    """
+    key = jax.random.PRNGKey(seed)
+    stage_p = tuple(init_stage_params(cfg, s, num_stages, key)
+                    for s in range(num_stages))
+    head_p = init_head_params(cfg, jax.random.fold_in(key, 999))
+    return stage_p, head_p
+
+
+def cache_info() -> dict:
+    return {"kernels": stage_kernels.cache_info()._asdict(),
+            "initial_params": initial_params.cache_info()._asdict()}
+
+
+def clear() -> None:
+    stage_kernels.cache_clear()
+    initial_params.cache_clear()

@@ -36,8 +36,11 @@ Repair semantics (paper Sec. V-D, now real)
   substitute, which recomputes *only* stage ``s`` from the stored
   input activation (``fwd_recomputes``);
 * backward crash at stage ``s``: the substitute replays that stage's
-  VJP from the same stored input (``bwd_replays``) — never a
-  full-pipeline recompute;
+  VJP (``bwd_replays``) — never a full-pipeline recompute.  Since the
+  fused dispatch rework the replay consumes the *stored (possibly
+  quantized) VJP residuals* of the chunk directly, so repair costs
+  zero forward recomputes; the remat oracle path falls back to
+  replaying from the stored input activation;
 * policy says ``("fail",)`` (no live same-stage candidate, retries
   exhausted, or a no-reroute policy like ``FixedPolicy``): instead of
   silently dropping the microbatch, the manager requeues it onto
@@ -242,6 +245,62 @@ class RecoveryManager:
             res.requeued += 1
             self._count_recompute(direction, res)
             relay = job.chain[s + 1]
+
+    # ------------------------------------------------------------------
+    # Lost-work dispatch (the numeric side of each recorded crash)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def replay_lost(stages, store, stage_params, res: Resolution,
+                    s: int, direction: str, *, ids: Sequence[int],
+                    cotangent=None, per: int = 0,
+                    remat: bool = False) -> None:
+        """Dispatch the dead replica's lost work for each crash recorded
+        at stage ``s`` within the chunk ``ids``.
+
+        * forward crash: one wasted stage forward from the stored
+          boundary activation (``store.get``);
+        * backward crash, fused mode: one wasted VJP replay **from the
+          stored (possibly quantized) residuals** of the chunk — zero
+          forward recomputes, the post-rework repair primitive;
+        * backward crash, remat mode (or residuals already dropped):
+          one wasted rematerialising VJP from the stored boundary
+          activation, as before.
+
+        Results are discarded — the substitute's (identical)
+        computation lives in the batch — but the wall time and the
+        dispatch counters are real, which is what the recovery
+        benchmarks and tests measure.  Cotangents handed to replay
+        dispatches are copied first: the real backward donates (and
+        reuses) the live buffer on donating backends.
+        """
+        import jax.numpy as jnp
+
+        ids = tuple(ids)
+        for ev in res.events:
+            if ev.stage != s or ev.direction != direction:
+                continue
+            if ev.job not in ids:
+                continue    # dropped, or belongs to another chunk
+            if direction == "fwd":
+                try:
+                    xin = store.get(s, ev.job)
+                except KeyError:
+                    continue
+                stages.forward(s, stage_params[s], xin)
+                continue
+            if cotangent is None:
+                continue
+            if not remat and store.has_residuals(s, ids):
+                stages.backward_from_residuals(
+                    s, store.residuals(s, ids), jnp.copy(cotangent))
+                continue
+            try:
+                xin = store.get(s, ev.job)
+            except KeyError:
+                continue
+            k = ids.index(ev.job)
+            stages.backward(s, stage_params[s], xin,
+                            jnp.copy(cotangent[k * per:(k + 1) * per]))
 
     @staticmethod
     def _count_recompute(direction: str, res: Resolution) -> None:

@@ -1,33 +1,51 @@
-"""Per-stage compute: forward and VJP backward as separate jitted calls.
+"""Per-stage compute: fused forward+residual dispatch, VJP backward.
 
 The pre-refactor executor jitted the *entire* model end-to-end per
 microbatch (``jax.value_and_grad`` over all stages at once), which has
 no pipeline-stage structure: a crash anywhere forced rerunning the
 whole graph, and B microbatches cost B full-model dispatches.
 
-`StageCompute` lowers each pipeline stage to two jitted primitives:
+`StageCompute` lowers each pipeline stage to jitted primitives:
 
-* ``forward(s, params, x)`` — the stage's transformer blocks;
-* ``backward(s, params, x, g)`` — the stage's VJP, *rematerialised
-  from the stored input activation*: ``jax.vjp`` recomputes the
-  stage forward under the hood and pulls the cotangent ``g`` back to
-  ``(dparams, dx)``.  This is exactly the paper's Sec. V-D repair
-  primitive: any replica holding the stage weights and the upstream
-  activation can (re)produce the stage's backward.
+* ``forward_fused(s, params, x)`` — ONE dispatch that runs the stage's
+  transformer blocks *and* captures the VJP residuals: ``jax.vjp``
+  inside jit returns ``(out, vjp_fn)`` where ``vjp_fn`` is a
+  ``jax.tree_util.Partial`` whose leaves are the residual arrays.  The
+  primal output is bit-identical to the plain forward.
+* ``backward_from_residuals(s, residuals, g)`` — pulls the cotangent
+  ``g`` back through the stored residuals to ``(dparams, dx)``
+  *without recomputing the forward*.  This is the default backward.
+* ``forward(s, params, x)`` / ``backward(s, params, x, g)`` — the
+  rematerialising pair kept as the in-engine equality oracle:
+  ``backward`` re-runs the *same* compiled residual-capturing forward
+  program and then the *same* compiled VJP program, so its result is
+  bit-identical to the fused path by construction (program
+  composition, not a separately compiled ``jax.vjp`` graph).  It is
+  also the paper's Sec. V-D repair primitive: any replica holding the
+  stage weights and the upstream activation can (re)produce the
+  stage's backward.
 
 Microbatches of the same stage are stacked along the batch axis, so B
 microbatches cost one dispatch per stage instead of B full-model
 dispatches.  Cotangents are donated to the backward dispatch on
-backends that support buffer donation (stored activations are *not*
-donated — recovery may replay them).
+backends that support buffer donation (stored activations and
+residuals are *not* donated — recovery may replay them).
 
 Dispatch counters (``fwd_calls``/``bwd_calls`` per stage) are the
 ground truth for the recovery tests: a backward crash must add exactly
-one stage-level dispatch, not a full-pipeline recompute.
+one stage-level dispatch, not a full-pipeline recompute.  A remat
+backward additionally bumps ``remat_recomputes`` for the hidden
+forward it re-runs; the fused path never does.
+
+One set of jitted kernels serves every ``(ModelConfig, donate)`` pair
+process-wide (``stage_kernels`` is ``lru_cache``d), so tests, the
+scenario harness's runtime leg, and fuzz share compiled programs
+instead of recompiling per trainer instance.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from functools import lru_cache
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -86,99 +104,175 @@ def loss_fn(head_params, hidden, labels, cfg: ModelConfig):
     return L.chunked_xent_loss(head_params["embed"], h, labels, cfg)
 
 
-def _donate_supported() -> bool:
-    return jax.default_backend() in ("gpu", "tpu")
+def _donate_supported(backend: Optional[str] = None) -> bool:
+    """Whether the (given or default) backend honours buffer donation.
+
+    CPU silently ignores donation, so the flag is only *useful* on
+    accelerators — but both code paths must stay correct everywhere;
+    ``StageCompute(donate=...)`` can force either branch for tests.
+    """
+    b = backend if backend is not None else jax.default_backend()
+    return b in ("gpu", "cuda", "rocm", "tpu")
+
+
+class StageKernels(NamedTuple):
+    """The jitted primitives for one ``(ModelConfig, donate)`` pair."""
+    fwd: Any          # (p, x) -> out
+    fwd_res: Any      # (p, x) -> (out, vjp Partial)   [residual capture]
+    bwd_res: Any      # (vjp, g) -> (dp, dx)           [consumes residuals]
+    embed: Any
+    embed_bwd: Any
+    head: Any
+
+
+@lru_cache(maxsize=None)
+def stage_kernels(cfg: ModelConfig, donate: bool) -> StageKernels:
+    """Build (once per process) the jitted kernels for ``cfg``.
+
+    jax retraces per parameter shape, so one kernel set serves every
+    stage and every stage count; the cache key is the hashable frozen
+    ``ModelConfig`` plus the donation flag.
+    """
+    fwd = jax.jit(lambda p, x: stage_forward(p, x, cfg))
+
+    def fwd_res_impl(p, x):
+        # jax.vjp inside jit: the returned closure is a
+        # jax.tree_util.Partial whose leaves are the residual arrays —
+        # it round-trips the jit boundary as a pytree and can be fed
+        # to bwd_res (possibly quantized in between).
+        out, vjp = jax.vjp(lambda pp, xx: stage_forward(pp, xx, cfg), p, x)
+        return out, vjp
+
+    fwd_res = jax.jit(fwd_res_impl)
+
+    def bwd_res_impl(vjp, g):
+        dp, dx = vjp(g)
+        return dp, dx
+
+    g_donate = (1,) if donate else ()
+    bwd_res = jax.jit(bwd_res_impl, donate_argnums=g_donate)
+    embed = jax.jit(embed_fn)
+
+    def embed_bwd_impl(head_p, tokens, g):
+        """Pull the stage-0 input cotangent back through the token
+        embedding: the data node's share of the head gradient."""
+        _, vjp = jax.vjp(lambda hp: embed_fn(hp, tokens), head_p)
+        (dhp,) = vjp(g)
+        return dhp
+
+    embed_bwd = jax.jit(embed_bwd_impl,
+                        donate_argnums=(2,) if donate else ())
+
+    def head_impl(head_p, hidden, labels):
+        """hidden: (B, mb, S, D); labels: (B, mb, S).
+
+        Per-microbatch losses (each the mean over its own tokens,
+        matching the centralized per-microbatch loss), with one VJP
+        giving the head gradient summed over the B microbatches and
+        the per-microbatch hidden cotangents.
+        """
+        def f(hp, h):
+            losses = jax.vmap(
+                lambda hh, ll: loss_fn(hp, hh, ll, cfg))(h, labels)
+            return jnp.sum(losses), losses
+
+        _, vjp, losses = jax.vjp(f, head_p, hidden, has_aux=True)
+        g_head, g_hidden = vjp(jnp.float32(1.0))
+        return losses, g_head, g_hidden
+
+    head = jax.jit(head_impl)
+    return StageKernels(fwd, fwd_res, bwd_res, embed, embed_bwd, head)
 
 
 class StageCompute:
-    """Jitted per-stage primitives + dispatch accounting.
+    """Per-stage primitives + dispatch accounting.
 
-    One jitted callable serves every stage (jax retraces per parameter
-    shape); counters are tracked per stage at the call sites so
-    recovery tests can pin exactly which stage recomputed.
+    Kernels are shared process-wide via :func:`stage_kernels`; counters
+    are per instance and tracked at the call sites so recovery tests
+    can pin exactly which stage recomputed and session-cached kernels
+    cannot leak dispatch state across trainers or tests.
     """
 
-    def __init__(self, cfg: ModelConfig, num_stages: int):
+    def __init__(self, cfg: ModelConfig, num_stages: int, *,
+                 donate: Optional[bool] = None):
         self.cfg = cfg
         self.num_stages = num_stages
+        self.donate = _donate_supported() if donate is None else donate
         self.fwd_calls: List[int] = [0] * num_stages
         self.bwd_calls: List[int] = [0] * num_stages
+        self.remat_recomputes: List[int] = [0] * num_stages
         self.embed_calls = 0
         self.embed_bwd_calls = 0
         self.head_calls = 0
-
-        self._fwd = jax.jit(lambda p, x: stage_forward(p, x, cfg))
-
-        def bwd_impl(p, x, g):
-            _, vjp = jax.vjp(lambda pp, xx: stage_forward(pp, xx, cfg), p, x)
-            dp, dx = vjp(g)
-            return dp, dx
-
-        donate = (2,) if _donate_supported() else ()
-        self._bwd = jax.jit(bwd_impl, donate_argnums=donate)
-        self._embed = jax.jit(embed_fn)
-
-        def embed_bwd_impl(head_p, tokens, g):
-            """Pull the stage-0 input cotangent back through the token
-            embedding: the data node's share of the head gradient."""
-            _, vjp = jax.vjp(lambda hp: embed_fn(hp, tokens), head_p)
-            (dhp,) = vjp(g)
-            return dhp
-
-        self._embed_bwd = jax.jit(embed_bwd_impl, donate_argnums=donate)
-
-        def head_impl(head_p, hidden, labels):
-            """hidden: (B, mb, S, D); labels: (B, mb, S).
-
-            Per-microbatch losses (each the mean over its own tokens,
-            matching the centralized per-microbatch loss), with one VJP
-            giving the head gradient summed over the B microbatches and
-            the per-microbatch hidden cotangents.
-            """
-            def f(hp, h):
-                losses = jax.vmap(
-                    lambda hh, ll: loss_fn(hp, hh, ll, cfg))(h, labels)
-                return jnp.sum(losses), losses
-
-            _, vjp, losses = jax.vjp(f, head_p, hidden, has_aux=True)
-            g_head, g_hidden = vjp(jnp.float32(1.0))
-            return losses, g_head, g_hidden
-
-        self._head = jax.jit(head_impl)
+        self._k = stage_kernels(cfg, self.donate)
 
     # ------------------------------------------------------------------
     def embed(self, head_params, tokens):
         self.embed_calls += 1
-        return self._embed(head_params, tokens)
+        return self._k.embed(head_params, tokens)
 
     def embed_backward(self, head_params, tokens, g):
         """Head-gradient contribution of the embedding lookup (the
         cotangent leaving stage 0's VJP)."""
         self.embed_bwd_calls += 1
-        return self._embed_bwd(head_params, tokens, g)
+        return self._k.embed_bwd(head_params, tokens, g)
 
     def forward(self, stage: int, params, x):
-        """One dispatch of stage ``stage`` over a stacked batch."""
+        """One plain dispatch of stage ``stage`` over a stacked batch
+        (no residual capture — the remat path and forward repairs)."""
         self.fwd_calls[stage] += 1
-        return self._fwd(params, x)
+        return self._k.fwd(params, x)
+
+    def forward_fused(self, stage: int, params, x) -> Tuple[Any, Any]:
+        """One fused dispatch: ``(output, residuals)``.  The output is
+        bit-identical to :meth:`forward`; the residuals (a
+        ``jax.tree_util.Partial``) feed :meth:`backward_from_residuals`
+        so the backward never re-runs the forward."""
+        self.fwd_calls[stage] += 1
+        return self._k.fwd_res(params, x)
+
+    def backward_from_residuals(self, stage: int, residuals, g
+                                ) -> Tuple[Any, Any]:
+        """Stage ``stage``'s VJP from stored residuals: zero forward
+        recompute.  ``g`` is donated when ``self.donate``."""
+        self.bwd_calls[stage] += 1
+        return self._k.bwd_res(residuals, g)
 
     def backward(self, stage: int, params, x, g) -> Tuple[Any, Any]:
-        """Replay stage ``stage``'s VJP from its stored input ``x``."""
+        """Rematerialising backward: replay stage ``stage``'s VJP from
+        its stored input ``x``.
+
+        Composed from the *same* compiled programs as the fused path
+        (residual-capturing forward, then residual-consuming VJP), so
+        fused and remat gradients are bit-identical — the in-engine
+        equality oracle.  Counts one logical backward dispatch plus
+        one ``remat_recomputes`` for the hidden forward.
+        """
         self.bwd_calls[stage] += 1
-        return self._bwd(params, x, g)
+        self.remat_recomputes[stage] += 1
+        _, vjp = self._k.fwd_res(params, x)
+        return self._k.bwd_res(vjp, g)
 
     def head_loss(self, head_params, hidden, labels):
         self.head_calls += 1
-        return self._head(head_params, hidden, labels)
+        return self._k.head(head_params, hidden, labels)
 
     # ------------------------------------------------------------------
     @property
     def stage_dispatches(self) -> int:
-        """Total stage-level dispatches (each backward remats one
-        forward, so this is the unit the recovery tests count in)."""
+        """Total logical stage-level dispatches (one per forward, one
+        per backward — the unit the recovery tests count in; remat's
+        hidden forward recompute is reported separately)."""
         return sum(self.fwd_calls) + sum(self.bwd_calls)
+
+    @property
+    def remat_recompute_count(self) -> int:
+        """Forward recomputes hidden inside remat backwards — 0 on the
+        fused path by construction."""
+        return sum(self.remat_recomputes)
 
     def snapshot(self) -> Dict[str, Any]:
         return dict(fwd=list(self.fwd_calls), bwd=list(self.bwd_calls),
+                    remat=list(self.remat_recomputes),
                     embed=self.embed_calls, embed_bwd=self.embed_bwd_calls,
                     head=self.head_calls)

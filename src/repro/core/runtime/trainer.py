@@ -13,24 +13,36 @@
    policy (stage-local substitute, requeue onto another chain, or
    drop);
 4. the numeric pass executes the completed microbatches through
-   `StageCompute`: stacked per-stage forwards (one dispatch per stage
-   for the whole batch), the per-data-node loss head, then stacked
-   per-stage VJPs read back from the `ActivationStore`; each recorded
-   crash additionally dispatches the dead replica's lost work, so
-   recovery cost is real wall time, not bookkeeping;
+   `StageCompute` in **depth-first dispatch chunks**: each chunk of up
+   to `dispatch_chunk` stacked microbatches runs embed → fused
+   per-stage forwards (capturing VJP residuals in the
+   `ActivationStore`) → loss head → per-stage backwards consuming the
+   stored residuals — so the backward never recomputes the forward and
+   a stage's residuals are freed as soon as its chunk's backward used
+   them (peak residency ~ one chunk per stage).  Each recorded crash
+   additionally dispatches the dead replica's lost work (via
+   `RecoveryManager.replay_lost`, from stored residuals where
+   available), so recovery cost is real wall time, not bookkeeping.
+   ``remat=True`` switches the backward to the rematerialising oracle
+   path (same compiled programs, composed — bit-identical gradients,
+   no residual storage); ``activation_codec="int8"`` quantises the
+   store at a bounded fidelity cost;
 5. per-stage gradients are averaged over completed microbatches and
    applied with a jitted AdamW update (identical on every replica, so
    replicas stay bit-identical), and stage snapshots are written to
    ``checkpoint.store`` every ``checkpoint_every`` iterations.
 
-`CentralizedTrainer` (the Fig. 6 baseline) lives here too; the
-``repro.core.executor`` facade re-exports both.
+`CentralizedTrainer` (the Fig. 6 baseline) lives here too and runs the
+*same* chunked pass (`_chunk_pass`) over the same cached kernels, so
+at churn 0 the decentralized trainer executes bit-for-bit the
+identical float program; the ``repro.core.executor`` facade re-exports
+both.
 """
 from __future__ import annotations
 
 import os
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,13 +50,81 @@ import numpy as np
 
 from repro.checkpoint import store as ckpt
 from repro.core.flow.graph import FlowNetwork, Node
+from repro.core.runtime import cache
 from repro.core.runtime.activations import ActivationStore
 from repro.core.runtime.recovery import Job, RecoveryManager, Resolution
-from repro.core.runtime.stages import (StageCompute, init_head_params,
-                                       init_stage_params)
+from repro.core.runtime.stages import StageCompute
 from repro.core.sim.faults import BernoulliChurn, ChurnContext, ChurnModel
 from repro.core.sim.policies import GWTFPolicy, RoutingPolicy
 from repro.optim.adamw import AdamW
+
+# Depth-first dispatch chunking: stack at most this many microbatches
+# per stage dispatch, shrinking toward 1 when a single microbatch's
+# boundary activation exceeds the byte target.  Tuned on the 1-core CI
+# host where small chunks keep residuals cache-hot between a stage's
+# forward and its backward; multi-core hosts may prefer larger chunks
+# via the ``dispatch_chunk`` kwarg.  Both trainers share this rule —
+# chunking changes gradient-accumulation association, so bit-identity
+# requires identical chunk boundaries.
+_CHUNK_TARGET_BYTES = 256 * 1024
+_CHUNK_MAX_MB = 4
+
+
+def auto_chunk(n_mb: int, per: int, seq: int, d_model: int,
+               itemsize: int = 4) -> int:
+    """Microbatches per dispatch chunk (deterministic, shared by both
+    trainers)."""
+    mb_bytes = max(1, per * seq * d_model * itemsize)
+    return max(1, min(_CHUNK_MAX_MB, n_mb,
+                      _CHUNK_TARGET_BYTES // mb_bytes))
+
+
+def _chunk_pass(stages: StageCompute, store: ActivationStore,
+                stage_params: List[Any], head_params, toks, labels,
+                ids: Tuple[int, ...], per: int, *, remat: bool,
+                grad_stage: List[Any],
+                replay: Optional[Callable] = None) -> Tuple[float, Any]:
+    """One depth-first chunk: embed → per-stage forward (fused residual
+    capture unless ``remat``) → loss head → per-stage backward from
+    stored residuals (or remat oracle) → embedding pull-back.
+
+    Shared verbatim by `RuntimeTrainer` and `CentralizedTrainer`: at
+    churn 0 (``replay=None``) both execute exactly this program, which
+    is what makes the bit-identity invariant hold by construction.
+    Accumulates per-stage gradients into ``grad_stage`` in place;
+    returns ``(loss_sum, g_head)`` with the embedding share included.
+    """
+    S = len(stage_params)
+    x = stages.embed(head_params, toks)
+    for s in range(S):
+        store.put(s, ids, x)
+        if remat:
+            x = stages.forward(s, stage_params[s], x)
+        else:
+            x, resid = stages.forward_fused(s, stage_params[s], x)
+            store.put_residuals(s, ids, resid)
+        if replay is not None:
+            replay(s, "fwd", ids)
+    B = len(ids)
+    seq, D = x.shape[1], x.shape[-1]
+    h = x.reshape(B, per, seq, D)
+    losses, g_head, g_hidden = stages.head_loss(head_params, h, labels)
+    g = g_hidden.reshape(B * per, seq, D)
+    for s in reversed(range(S)):
+        if replay is not None:
+            replay(s, "bwd", ids, g, per)
+        if remat:
+            xin = store.stacked(s, ids)
+            dp, dx = stages.backward(s, stage_params[s], xin, g)
+        else:
+            dp, dx = stages.backward_from_residuals(
+                s, store.residuals(s, ids), g)
+        grad_stage[s] = (dp if grad_stage[s] is None else
+                        jax.tree.map(jnp.add, grad_stage[s], dp))
+        g = dx
+        store.drop(s, ids)
+    g_emb = stages.embed_backward(head_params, toks, g)
+    return float(jnp.sum(losses)), jax.tree.map(jnp.add, g_head, g_emb)
 
 
 @dataclass
@@ -57,6 +137,8 @@ class IterationResult:
     requeued: int = 0             # subset of rerouted: moved to another chain
     fwd_recomputes: int = 0       # stage-local forward recomputes (Sec. V-D)
     bwd_replays: int = 0          # stage-local VJP replays (Sec. V-D)
+    store_peak_bytes: int = 0     # high-water resident activation+residual
+                                  # bytes (encoded) during the numeric pass
 
 
 class RuntimeTrainer:
@@ -71,7 +153,11 @@ class RuntimeTrainer:
                  max_retries: int = 2,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 0,
-                 record_microbatch_grads: bool = False):
+                 record_microbatch_grads: bool = False,
+                 remat: bool = False,
+                 activation_codec: str = "fp",
+                 dispatch_chunk: Optional[int] = None,
+                 donate: Optional[bool] = None):
         self.cfg = cfg
         self.net = net
         self.rng = rng or np.random.default_rng(seed)
@@ -81,21 +167,23 @@ class RuntimeTrainer:
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
         self.record_microbatch_grads = record_microbatch_grads
+        self.remat = remat
+        self.dispatch_chunk = dispatch_chunk
 
-        self.stages = StageCompute(cfg, net.num_stages)
-        self.store = ActivationStore()
+        self.stages = StageCompute(cfg, net.num_stages, donate=donate)
+        self.store = ActivationStore(codec=activation_codec)
         self.recovery = RecoveryManager(net, self.policy,
                                         max_retries=max_retries)
 
-        key = jax.random.PRNGKey(seed)
         S = net.num_stages
         # identical replicas per stage (paper: joining nodes download the
         # stage weights) -> ONE canonical copy per stage; replicas share
-        # it because aggregation keeps them identical.
-        self.stage_params = [init_stage_params(cfg, s, S, key)
-                             for s in range(S)]
-        self.head_params = {d.id: init_head_params(
-            cfg, jax.random.fold_in(key, 999)) for d in net.data_nodes()}
+        # it because aggregation keeps them identical.  Initial trees
+        # come from the process-wide cache (immutable, replaced on
+        # update, so sharing across trainers cannot leak state).
+        stage_p, head_p = cache.initial_params(cfg, S, seed)
+        self.stage_params = list(stage_p)
+        self.head_params = {d.id: head_p for d in net.data_nodes()}
         self.opt = AdamW(lr=lr)
         self.stage_opt = [self.opt.init(p) for p in self.stage_params]
         self.head_opt = {d: self.opt.init(p)
@@ -107,9 +195,10 @@ class RuntimeTrainer:
         self.joins_bootstrapped = 0
         self.last_microbatch_grads: List[Tuple[int, Any, Any]] = []
         # introspection for tests/examples: the most recent iteration's
-        # planned chains and crash resolution
+        # planned chains, crash resolution, and store high-water mark
         self.last_chains: List[List[int]] = []
         self.last_resolution: Optional[Resolution] = None
+        self.last_store_peak_bytes = 0
 
     # ------------------------------------------------------------------
     @property
@@ -219,7 +308,8 @@ class RuntimeTrainer:
             loss=mean_loss, completed=len(res.completed), launched=launched,
             dropped=res.dropped, rerouted=res.rerouted,
             requeued=res.requeued, fwd_recomputes=res.fwd_recomputes,
-            bwd_replays=res.bwd_replays)
+            bwd_replays=res.bwd_replays,
+            store_peak_bytes=self.last_store_peak_bytes)
 
     # ------------------------------------------------------------------
     # Numeric pass
@@ -229,14 +319,17 @@ class RuntimeTrainer:
         apply the aggregated update; dispatch each recorded crash's
         lost work so recovery cost is real."""
         done = res.completed
+        self.store.clear()
+        self.store.reset_peak()
+        self.last_store_peak_bytes = 0
         if not done:
             return 0.0
-        self.store.clear()
         self.last_microbatch_grads = []
         if self.batch_microbatches:
             total = self._execute_batched(done, res)
         else:
             total = self._execute_per_microbatch(done, res)
+        self.last_store_peak_bytes = self.store.peak_bytes
         self.store.clear()
         return total / len(done)
 
@@ -246,88 +339,46 @@ class RuntimeTrainer:
             by_dn.setdefault(job.data_node, []).append(k)
         return by_dn
 
+    def _chunk_size(self, n_mb: int, per: int, seq: int) -> int:
+        if self.dispatch_chunk is not None:
+            return max(1, min(self.dispatch_chunk, n_mb))
+        itemsize = jnp.dtype(self.cfg.param_dtype).itemsize
+        return auto_chunk(n_mb, per, seq, self.cfg.d_model, itemsize)
+
     def _execute_batched(self, done: List[Job], res: Resolution) -> float:
-        S = self.net.num_stages
         by_dn = self._group_by_dn(done)
-        ids = tuple(j.index for j in done)
         per = np.asarray(done[0].mb["tokens"]).shape[0]
-
-        # ---- forward: one stacked dispatch per stage ------------------
-        toks_by_dn: Dict[int, Any] = {}
-        single_dn = len(by_dn) == 1
-        if single_dn:
-            dn0 = next(iter(by_dn))
-            toks_by_dn[dn0] = jnp.asarray(np.concatenate(
-                [np.asarray(j.mb["tokens"]) for j in done]))
-            x = self.stages.embed(self.head_params[dn0], toks_by_dn[dn0])
-        else:
-            parts: List[Any] = [None] * len(done)
-            for dn, idxs in by_dn.items():
-                toks = jnp.asarray(np.concatenate(
-                    [np.asarray(done[k].mb["tokens"]) for k in idxs]))
-                toks_by_dn[dn] = toks
-                h = self.stages.embed(self.head_params[dn], toks)
-                for row, k in enumerate(idxs):
-                    parts[k] = h[row * per:(row + 1) * per]
-            x = (parts[0] if len(parts) == 1
-                 else jnp.concatenate(parts, axis=0))
-        for s in range(S):
-            self.store.put(s, ids, x)
-            x = self.stages.forward(s, self.stage_params[s], x)
-            self._replay_lost(res, s, "fwd")
-
-        # ---- loss head per data node ----------------------------------
-        D = x.shape[-1]
-        seq = x.shape[1]
+        seq = np.asarray(done[0].mb["tokens"]).shape[1]
+        S = self.net.num_stages
         total = 0.0
-        g_head_by_dn: Dict[int, Any] = {}
-        if single_dn:
-            B = len(done)
-            h = x.reshape(B, per, seq, D)
-            labels = jnp.asarray(np.stack(
-                [np.asarray(j.mb["labels"]) for j in done]))
-            losses, g_head, g_hidden = self.stages.head_loss(
-                self.head_params[dn0], h, labels)
-            total += float(jnp.sum(losses))
-            g_head_by_dn[dn0] = (g_head, B)
-            g = g_hidden.reshape(B * per, seq, D)
-        else:
-            g_parts: List[Any] = [None] * len(done)
-            for dn, idxs in by_dn.items():
-                B = len(idxs)
-                h = jnp.concatenate([x[k * per:(k + 1) * per] for k in idxs],
-                                    axis=0).reshape(B, per, seq, D)
-                labels = jnp.asarray(np.stack(
-                    [np.asarray(done[k].mb["labels"]) for k in idxs]))
-                losses, g_head, g_hidden = self.stages.head_loss(
-                    self.head_params[dn], h, labels)
-                total += float(jnp.sum(losses))
-                g_head_by_dn[dn] = (g_head, B)
-                for row, k in enumerate(idxs):
-                    g_parts[k] = g_hidden[row]
-            g = (g_parts[0] if len(g_parts) == 1
-                 else jnp.concatenate(g_parts, axis=0))
-
-        # ---- backward: one stacked VJP per stage ----------------------
         grad_stage: List[Any] = [None] * S
-        for s in reversed(range(S)):
-            self._replay_lost(res, s, "bwd", cotangent=g, ids=ids, per=per)
-            xin = self.store.stacked(s, ids)
-            dp, dx = self.stages.backward(s, self.stage_params[s], xin, g)
-            grad_stage[s] = dp
-            g = dx
-            self.store.drop_stage(s)
+        g_head_by_dn: Dict[int, Any] = {}
 
-        # ---- embedding pull-back (the token-lookup share of the head
-        # gradient: the loss head's VJP alone misses it) ----------------
+        def replay(s, direction, ids, cotangent=None, p=0):
+            self.recovery.replay_lost(
+                self.stages, self.store, self.stage_params, res,
+                s, direction, ids=ids, cotangent=cotangent, per=p,
+                remat=self.remat)
+
         for dn, idxs in by_dn.items():
-            gslice = (g if single_dn else jnp.concatenate(
-                [g[k * per:(k + 1) * per] for k in idxs], axis=0))
-            g_emb = self.stages.embed_backward(self.head_params[dn],
-                                               toks_by_dn[dn], gslice)
-            gh, n = g_head_by_dn[dn]
-            g_head_by_dn[dn] = (jax.tree.map(jnp.add, gh, g_emb), n)
-
+            C = self._chunk_size(len(idxs), per, seq)
+            head_p = self.head_params[dn]
+            g_head = None
+            for lo in range(0, len(idxs), C):
+                jobs = [done[k] for k in idxs[lo:lo + C]]
+                ids = tuple(j.index for j in jobs)
+                toks = jnp.asarray(np.concatenate(
+                    [np.asarray(j.mb["tokens"]) for j in jobs]))
+                labels = jnp.asarray(np.stack(
+                    [np.asarray(j.mb["labels"]) for j in jobs]))
+                loss_sum, gh = _chunk_pass(
+                    self.stages, self.store, self.stage_params, head_p,
+                    toks, labels, ids, per, remat=self.remat,
+                    grad_stage=grad_stage, replay=replay)
+                total += loss_sum
+                g_head = (gh if g_head is None else
+                          jax.tree.map(jnp.add, g_head, gh))
+            g_head_by_dn[dn] = (g_head, len(idxs))
         self._apply_update(grad_stage, g_head_by_dn, len(done))
         return total
 
@@ -350,29 +401,45 @@ class RuntimeTrainer:
         for job in done:
             toks = jnp.asarray(job.mb["tokens"])
             labels = jnp.asarray(job.mb["labels"])[None]
+            ids = (job.index,)
             x = self.stages.embed(self.head_params[job.data_node], toks)
             for s in range(S):
-                self.store.put(s, (job.index,), x)
+                self.store.put(s, ids, x)
                 for _ in range(lost.get((job.index, s, "fwd"), 0)):
                     self.stages.forward(s, self.stage_params[s], x)
-                x = self.stages.forward(s, self.stage_params[s], x)
+                if self.remat:
+                    x = self.stages.forward(s, self.stage_params[s], x)
+                else:
+                    x, resid = self.stages.forward_fused(
+                        s, self.stage_params[s], x)
+                    self.store.put_residuals(s, ids, resid)
             losses, g_head, g_hidden = self.stages.head_loss(
                 self.head_params[job.data_node], x[None], labels)
             total += float(losses[0])
             g = g_hidden[0]
             g_stages: List[Any] = [None] * S
             for s in reversed(range(S)):
-                xin = self.store.get(s, job.index)
                 for _ in range(lost.get((job.index, s, "bwd"), 0)):
                     # copied cotangent: the backward dispatch donates
-                    # its cotangent buffer on GPU/TPU and g is reused
-                    # by the real dispatch below
-                    self.stages.backward(s, self.stage_params[s], xin,
-                                         jnp.copy(g))
-                dp, dx = self.stages.backward(s, self.stage_params[s],
-                                              xin, g)
+                    # its cotangent buffer on donating backends and g
+                    # is reused by the real dispatch below
+                    if not self.remat and self.store.has_residuals(s, ids):
+                        self.stages.backward_from_residuals(
+                            s, self.store.residuals(s, ids), jnp.copy(g))
+                    else:
+                        self.stages.backward(
+                            s, self.stage_params[s],
+                            self.store.get(s, job.index), jnp.copy(g))
+                if self.remat:
+                    dp, dx = self.stages.backward(
+                        s, self.stage_params[s],
+                        self.store.get(s, job.index), g)
+                else:
+                    dp, dx = self.stages.backward_from_residuals(
+                        s, self.store.residuals(s, ids), g)
                 g_stages[s] = dp
                 g = dx
+                self.store.drop(s, ids)
             g_emb = self.stages.embed_backward(
                 self.head_params[job.data_node], toks, g)
             g_head = jax.tree.map(jnp.add, g_head, g_emb)
@@ -392,28 +459,6 @@ class RuntimeTrainer:
         self._apply_update(grad_stage, g_head_by_dn, len(done))
         return total
 
-    def _replay_lost(self, res: Resolution, s: int, direction: str,
-                     cotangent=None, ids=None, per: int = 0) -> None:
-        """Dispatch the dead replica's lost work for each crash recorded
-        at stage ``s``: a forward crash costs one wasted stage forward,
-        a backward crash one wasted VJP replay.  Results are discarded
-        — the substitute's (identical) computation lives in the batch —
-        but the wall time and the dispatch counters are real, which is
-        what the recovery benchmarks and tests measure."""
-        for ev in res.events:
-            if ev.stage != s or ev.direction != direction:
-                continue
-            try:
-                xin = self.store.get(s, ev.job)
-            except KeyError:
-                continue    # microbatch dropped before reaching the batch
-            if direction == "fwd":
-                self.stages.forward(s, self.stage_params[s], xin)
-            elif cotangent is not None and ids is not None and ev.job in ids:
-                k = ids.index(ev.job)
-                gslice = cotangent[k * per:(k + 1) * per]
-                self.stages.backward(s, self.stage_params[s], xin, gslice)
-
     def _apply_update(self, grad_stage, g_head_by_dn, n_completed: int):
         for s in range(self.net.num_stages):
             if grad_stage[s] is None:
@@ -422,6 +467,8 @@ class RuntimeTrainer:
             self.stage_params[s], self.stage_opt[s] = self._upd(
                 gs, self.stage_opt[s], self.stage_params[s])
         for dn, (gh, n) in g_head_by_dn.items():
+            if gh is None:
+                continue
             g = jax.tree.map(lambda a: a / n, gh)
             self.head_params[dn], self.head_opt[dn] = self._upd(
                 g, self.head_opt[dn], self.head_params[dn])
@@ -430,60 +477,68 @@ class RuntimeTrainer:
 class CentralizedTrainer:
     """Baseline: same model, same data, no decentralization (Fig. 6).
 
-    Runs on the *same* staged kernels (`StageCompute`) and the same
-    jitted AdamW update as the decentralized runtime, in the same
-    dispatch order.  At churn 0 the decentralized trainer therefore
-    executes bit-for-bit the identical float program — which is the
-    paper's convergence claim stated as an executable invariant (the
-    pre-refactor whole-model-jit formulation could only guarantee this
-    by being one monolithic program; the staged formulation preserves
-    it by construction).
+    Runs the *same* chunked pass (`_chunk_pass`) over the same cached
+    staged kernels (`StageCompute`) and the same jitted AdamW update as
+    the decentralized runtime, in the same dispatch order.  At churn 0
+    the decentralized trainer therefore executes bit-for-bit the
+    identical float program — which is the paper's convergence claim
+    stated as an executable invariant (the pre-refactor whole-model-jit
+    formulation could only guarantee this by being one monolithic
+    program; the staged formulation preserves it by construction).
     """
 
     def __init__(self, cfg, num_stages: int, *, lr: float = 1e-3,
-                 seed: int = 0):
+                 seed: int = 0, remat: bool = False,
+                 activation_codec: str = "fp",
+                 dispatch_chunk: Optional[int] = None,
+                 donate: Optional[bool] = None):
         self.cfg = cfg
         self.num_stages = num_stages
-        key = jax.random.PRNGKey(seed)
-        self.stage_params = [init_stage_params(cfg, s, num_stages, key)
-                             for s in range(num_stages)]
-        self.head_params = init_head_params(cfg, jax.random.fold_in(key, 999))
+        self.remat = remat
+        self.dispatch_chunk = dispatch_chunk
+        stage_p, head_p = cache.initial_params(cfg, num_stages, seed)
+        self.stage_params = list(stage_p)
+        self.head_params = head_p
         self.opt = AdamW(lr=lr)
         self.stage_opt = [self.opt.init(p) for p in self.stage_params]
         self.head_opt = self.opt.init(self.head_params)
-        self.stages = StageCompute(cfg, num_stages)
-        self.store = ActivationStore()
+        self.stages = StageCompute(cfg, num_stages, donate=donate)
+        self.store = ActivationStore(codec=activation_codec)
         self._upd = jax.jit(lambda g, s, p: self.opt.update(g, s, p))
         self.losses: List[float] = []
+        self.last_store_peak_bytes = 0
+
+    def _chunk_size(self, n_mb: int, per: int, seq: int) -> int:
+        if self.dispatch_chunk is not None:
+            return max(1, min(self.dispatch_chunk, n_mb))
+        itemsize = jnp.dtype(self.cfg.param_dtype).itemsize
+        return auto_chunk(n_mb, per, seq, self.cfg.d_model, itemsize)
 
     def iteration(self, microbatches: List[dict]) -> float:
         S = self.num_stages
         B = len(microbatches)
         per = np.asarray(microbatches[0]["tokens"]).shape[0]
-        ids = tuple(range(B))
+        seq = np.asarray(microbatches[0]["tokens"]).shape[1]
         self.store.clear()
-        toks = jnp.asarray(np.concatenate(
-            [np.asarray(mb["tokens"]) for mb in microbatches]))
-        x = self.stages.embed(self.head_params, toks)
-        for s in range(S):
-            self.store.put(s, ids, x)
-            x = self.stages.forward(s, self.stage_params[s], x)
-        seq, D = x.shape[1], x.shape[-1]
-        h = x.reshape(B, per, seq, D)
-        labels = jnp.asarray(np.stack(
-            [np.asarray(mb["labels"]) for mb in microbatches]))
-        losses, g_head, g_hidden = self.stages.head_loss(
-            self.head_params, h, labels)
-        g = g_hidden.reshape(B * per, seq, D)
+        self.store.reset_peak()
+        total = 0.0
         grad_stage: List[Any] = [None] * S
-        for s in reversed(range(S)):
-            xin = self.store.stacked(s, ids)
-            dp, dx = self.stages.backward(s, self.stage_params[s], xin, g)
-            grad_stage[s] = dp
-            g = dx
-            self.store.drop_stage(s)
-        g_emb = self.stages.embed_backward(self.head_params, toks, g)
-        g_head = jax.tree.map(jnp.add, g_head, g_emb)
+        g_head = None
+        C = self._chunk_size(B, per, seq)
+        for lo in range(0, B, C):
+            part = microbatches[lo:lo + C]
+            ids = tuple(range(lo, lo + len(part)))
+            toks = jnp.asarray(np.concatenate(
+                [np.asarray(mb["tokens"]) for mb in part]))
+            labels = jnp.asarray(np.stack(
+                [np.asarray(mb["labels"]) for mb in part]))
+            loss_sum, gh = _chunk_pass(
+                self.stages, self.store, self.stage_params,
+                self.head_params, toks, labels, ids, per,
+                remat=self.remat, grad_stage=grad_stage)
+            total += loss_sum
+            g_head = gh if g_head is None else jax.tree.map(jnp.add,
+                                                            g_head, gh)
         for s in range(S):
             gs = jax.tree.map(lambda a: a / B, grad_stage[s])
             self.stage_params[s], self.stage_opt[s] = self._upd(
@@ -491,6 +546,7 @@ class CentralizedTrainer:
         gh = jax.tree.map(lambda a: a / B, g_head)
         self.head_params, self.head_opt = self._upd(
             gh, self.head_opt, self.head_params)
-        mean = float(jnp.sum(losses)) / B
+        self.last_store_peak_bytes = self.store.peak_bytes
+        mean = float(total) / B
         self.losses.append(mean)
         return mean

@@ -340,6 +340,7 @@ def check_zero_churn(spec: ScenarioSpec,
         from repro.core.runtime.trainer import CentralizedTrainer
 
         trainer, batches = generate.build_runtime(spec)
+        oracle, _ = generate.build_runtime(spec, remat=True)
         dn = next(iter(batches))
         cen = CentralizedTrainer(generate.model_config(spec),
                                  spec.num_stages, lr=3e-3, seed=spec.seed)
@@ -353,7 +354,16 @@ def check_zero_churn(spec: ScenarioSpec,
             _require(r.loss == cl, spec, "zero-churn",
                      f"iteration {i}: decentralized loss {r.loss!r} != "
                      f"centralized {cl!r} (bit-equality broken)")
+            # fused vs remat: the in-engine equality oracle (same
+            # compiled programs, composed) must agree bitwise too
+            ro = oracle.iteration(batches)
+            _require(r.loss == ro.loss, spec, "zero-churn",
+                     f"iteration {i}: fused loss {r.loss!r} != remat "
+                     f"oracle {ro.loss!r} (bit-equality broken)")
+        _require(trainer.stages.remat_recompute_count == 0, spec,
+                 "zero-churn", "fused path recomputed a forward")
         result["runtime_iterations"] = rt_its
+        result["store_peak_bytes"] = trainer.last_store_peak_bytes
     return result
 
 

@@ -1,5 +1,14 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 CPU device;
-only launch/dryrun.py forces 512 host devices."""
+only launch/dryrun.py forces 512 host devices.
+
+``runtime_env`` is the session-cached JAX model fixture: it warms the
+process-wide kernel/param caches (`repro.core.runtime.cache`) for the
+tiny runtime config once, so every runtime-involving test (and the
+scenario harness's runtime leg, which keys the same caches through the
+trainers) reuses the compiled stage kernels instead of recompiling.
+"""
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -13,3 +22,21 @@ def key():
 @pytest.fixture()
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def runtime_env():
+    """Session-cached stage kernels + initial params for the tiny
+    runtime config (same ``ModelConfig`` as tests/test_runtime.py's
+    ``tiny_cfg``, so both files share one cache entry)."""
+    from repro.configs import get_config
+    from repro.core.runtime import cache
+
+    cfg = dataclasses.replace(
+        get_config("gwtf-llama-300m").reduced(num_layers=4, d_model=128),
+        vocab_size=256)
+    stages = 2
+    kernels = cache.kernels(cfg, donate=False)
+    params = cache.initial_params(cfg, stages, 0)
+    return {"cfg": cfg, "stages": stages, "kernels": kernels,
+            "params": params}
