@@ -28,12 +28,22 @@ dial-oracle optimality gap of every plan
 ``GWTFPolicy(track_optimality=True)``; the oracle's wall time is
 excluded from the engine's planning-overrun guard).
 
+A separate **WAN compression record** (``wan`` key in the JSON) runs
+the same seeded iterations on a bandwidth-starved topology twice —
+links priced at fp32 vs. with the full codec menu (bf16/int8/top-k
+under a fidelity budget) — and reports ``bytes_on_wire_reduction``
+(raw bytes / encoded bytes actually sent) plus the simulated
+WAN-row throughput gain (completed microbatches per simulated
+second).  Both are ratios of simulated quantities, so the smoke gate
+on them is host-independent.
+
 Results go to ``BENCH_sim.json`` at the repo root.  ``--smoke`` runs
 the small size only and compares against the committed JSON: it exits
 non-zero if the engine's events/sec regressed by more than 2x
 (host-normalized by the reference loop's events/sec measured in the
-same run) or if GWTF equivalence broke.  Numpy-only on purpose — the
-CI smoke job stays light.
+same run), if GWTF equivalence broke, or if the WAN record's
+``bytes_on_wire_reduction`` fell below the committed floor.
+Numpy-only on purpose — the CI smoke job stays light.
 """
 from __future__ import annotations
 
@@ -60,6 +70,17 @@ ITERATIONS = 5
 SEED = 0
 FULL_SIZES = (200, 1000)
 SMOKE_SIZES = (200,)
+
+# WAN compression record: bandwidth-starved links (vs the default
+# 50-500 Mb/s grid) so transfer time dominates and the planner prices
+# its way down to the aggressive codecs; the smoke gate's bytes floor
+# is a ratio of simulated quantities and therefore host-independent.
+WAN_RELAYS = 200
+WAN_MIN_BANDWIDTH = 2e6       # bytes/s
+WAN_MAX_BANDWIDTH = 1e7
+WAN_MENU = ("fp32", "bf16", "int8", "top-k")
+WAN_FIDELITY_BUDGET = 0.1
+WAN_BYTES_REDUCTION_FLOOR = 3.0
 
 
 def build_network(relays: int, seed: int = SEED):
@@ -162,9 +183,68 @@ def print_rec(rec: dict):
                       f"planning {100 * frac:5.1f}% of iteration{gap}")
 
 
+def bench_wan(relays: int = WAN_RELAYS, seed: int = SEED) -> dict:
+    """fp32-priced vs codec-priced runs of the same seeded iterations on
+    the bandwidth-starved WAN topology; all reported ratios are between
+    simulated quantities (bytes, simulated seconds)."""
+    def run(with_codecs: bool) -> dict:
+        rng = np.random.default_rng(seed)
+        caps = [int(rng.uniform(1, 4)) for _ in range(relays)]
+        net = geo_distributed_network(
+            num_stages=STAGES, relay_capacities=caps,
+            num_data_nodes=DATA_NODES, data_capacity=DATA_CAPACITY,
+            compute_cost=0.5,
+            min_bandwidth=WAN_MIN_BANDWIDTH,
+            max_bandwidth=WAN_MAX_BANDWIDTH,
+            rng=np.random.default_rng(seed))
+        if with_codecs:
+            net.codec_menu = WAN_MENU
+            net.fidelity_budget = WAN_FIDELITY_BUDGET
+        sim = TrainingSimulator(net, scheduler="gwtf", churn=CHURN,
+                                rng=np.random.default_rng(seed + 11))
+        ms = sim.run(ITERATIONS)
+        legs: dict = {}
+        for m in ms:
+            for name, cnt in (m.codec_legs or {}).items():
+                legs[name] = legs.get(name, 0) + cnt
+        return dict(bytes=sum(m.bytes_on_wire for m in ms),
+                    duration=sum(m.duration for m in ms),
+                    completed=sum(m.completed for m in ms),
+                    comm_time=sum(m.comm_time for m in ms),
+                    codec_legs=legs)
+    fp32, codec = run(False), run(True)
+    fp32_tp = fp32["completed"] / fp32["duration"]
+    codec_tp = codec["completed"] / codec["duration"]
+    return dict(
+        relays=relays, stages=STAGES, churn=CHURN, iterations=ITERATIONS,
+        min_bandwidth=WAN_MIN_BANDWIDTH, max_bandwidth=WAN_MAX_BANDWIDTH,
+        menu=list(WAN_MENU), fidelity_budget=WAN_FIDELITY_BUDGET,
+        bytes_on_wire_fp32=fp32["bytes"],
+        bytes_on_wire_codec=codec["bytes"],
+        bytes_on_wire_reduction=round(fp32["bytes"] / codec["bytes"], 2),
+        codec_legs=codec["codec_legs"],
+        completed=(fp32["completed"], codec["completed"]),
+        comm_time=(round(fp32["comm_time"], 2), round(codec["comm_time"], 2)),
+        mb_per_sim_sec_fp32=round(fp32_tp, 4),
+        mb_per_sim_sec_codec=round(codec_tp, 4),
+        sim_throughput_gain=round(codec_tp / fp32_tp, 2))
+
+
+def print_wan(rec: dict):
+    print(f"  wan relays={rec['relays']:5d}: bytes "
+          f"{rec['bytes_on_wire_fp32'] / 1e9:.2f}GB -> "
+          f"{rec['bytes_on_wire_codec'] / 1e9:.2f}GB "
+          f"({rec['bytes_on_wire_reduction']:.2f}x reduction)  "
+          f"throughput {rec['mb_per_sim_sec_fp32']:.4f} -> "
+          f"{rec['mb_per_sim_sec_codec']:.4f} mb/sim-s "
+          f"({rec['sim_throughput_gain']:.2f}x)  legs={rec['codec_legs']}")
+
+
 def smoke(committed_path: Path) -> int:
     """CI gate: fail (exit 1) if events/sec regressed > 2x vs committed
-    (host-normalized via the reference loop) or GWTF equivalence broke."""
+    (host-normalized via the reference loop), GWTF equivalence broke, or
+    the WAN record's bytes-on-wire reduction fell below the committed
+    floor (the bytes ratio is simulated, so no host normalization)."""
     if not committed_path.exists():
         print(f"no committed {committed_path.name}; smoke run is "
               f"informational only")
@@ -219,6 +299,27 @@ def smoke(committed_path: Path) -> int:
                     f"relays={relays} {scheduler}: events/sec regressed >2x "
                     f"({cell['engine_events_per_sec']:,.0f} < "
                     f"floor {floor:,.0f})")
+    wan = bench_wan()
+    print_wan(wan)
+    if committed_path.exists():
+        committed_wan = json.loads(committed_path.read_text()).get("wan")
+    else:
+        committed_wan = None
+    wan_floor = WAN_BYTES_REDUCTION_FLOOR
+    if committed_wan is not None:
+        # never gate below what the committed record actually achieved
+        wan_floor = min(wan_floor, committed_wan["bytes_on_wire_reduction"])
+    print(f"    gate[wan]: bytes_on_wire_reduction "
+          f"{wan['bytes_on_wire_reduction']:.2f}x vs floor "
+          f"{wan_floor:.2f}x (simulated ratio, host-independent)")
+    if wan["bytes_on_wire_reduction"] < wan_floor:
+        failures.append(
+            f"wan: bytes_on_wire_reduction {wan['bytes_on_wire_reduction']:.2f}x "
+            f"< floor {wan_floor:.2f}x")
+    if wan["sim_throughput_gain"] < 1.0:
+        failures.append(
+            f"wan: codec pricing made simulated throughput worse "
+            f"({wan['sim_throughput_gain']:.2f}x)")
     if failures:
         print("SMOKE FAILURES:")
         for f in failures:
@@ -250,6 +351,8 @@ def main(argv=None) -> int:
         rec = bench_size(relays, profile=args.profile)
         print_rec(rec)
         results.append(rec)
+    wan = bench_wan()
+    print_wan(wan)
     out = dict(
         meta=dict(stages=STAGES, data_nodes=DATA_NODES,
                   data_capacity=DATA_CAPACITY, churn=CHURN,
@@ -257,8 +360,10 @@ def main(argv=None) -> int:
                   metric="canonical calendar events (pre-refactor loop's "
                          "count) per second of event-loop wall time; "
                          "reference = repro.core.sim.reference on "
-                         "identical seeded iterations"),
-        results=results)
+                         "identical seeded iterations; wan = fp32-priced "
+                         "vs codec-priced bytes on wire and simulated "
+                         "throughput on a bandwidth-starved topology"),
+        results=results, wan=wan)
     args.out.write_text(json.dumps(out, indent=2) + "\n")
     print(f"wrote {args.out}")
     return 0

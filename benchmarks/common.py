@@ -89,13 +89,18 @@ def csv_row(name: str, value: float, derived: str = "") -> str:
 
 def runtime_row(model_arch: str, *, churn: float = 0.1, iterations: int = 4,
                 seed: int = 0, verbose: bool = True,
-                activation_codec: str = "fp") -> Dict:
+                activation_codec: str = "fp",
+                wire_codec: str = "fp32") -> Dict:
     """One real-compute row through the staged runtime: the crash-table
     scenario (reduced to CPU scale) executed with actual JAX compute
     instead of the event simulator — losses, reroute/recompute counters,
     microbatches/sec, and the resident activation+residual store
     high-water mark from `repro.core.runtime` (fused dispatch;
-    ``activation_codec="int8"`` measures the quantized store)."""
+    ``activation_codec="int8"`` measures the quantized store;
+    ``wire_codec`` compresses inter-stage boundary transfers —
+    ``"fp32"`` keeps them exact, ``"bf16"``/``"int8"``/``"top-k"``
+    force one codec, ``"planner"`` follows the network's per-link
+    codec-choice matrix)."""
     import dataclasses
     import time
 
@@ -114,11 +119,13 @@ def runtime_row(model_arch: str, *, churn: float = 0.1, iterations: int = 4,
                     microbatch_size=1, seed=seed)
     shard = DataNodeShard(dc, 0, 1)
     tr = RuntimeTrainer(cfg, net, churn=churn, lr=1e-3, seed=seed,
-                        activation_codec=activation_codec)
+                        activation_codec=activation_codec,
+                        wire_codec=wire_codec)
     dn = net.data_nodes()[0].id
     tr.iteration({dn: shard.microbatches()})        # compile
     t0 = time.perf_counter()
     completed = rerouted = recomputes = dropped = store_peak = 0
+    wire_bytes = 0
     for _ in range(iterations):
         r = tr.iteration({dn: shard.microbatches()})
         completed += r.completed
@@ -126,6 +133,7 @@ def runtime_row(model_arch: str, *, churn: float = 0.1, iterations: int = 4,
         recomputes += r.fwd_recomputes + r.bwd_replays
         dropped += r.dropped
         store_peak = max(store_peak, r.store_peak_bytes)
+        wire_bytes += r.wire_bytes
     dt = time.perf_counter() - t0
     row = dict(model=cfg.name, churn=churn, iterations=iterations,
                completed=completed, dropped=dropped, rerouted=rerouted,
@@ -133,6 +141,7 @@ def runtime_row(model_arch: str, *, churn: float = 0.1, iterations: int = 4,
                mb_per_sec=round(completed / dt, 2),
                store_peak_bytes=store_peak,
                activation_codec=activation_codec,
+               wire_codec=wire_codec, wire_bytes=wire_bytes,
                final_loss=round(tr.losses[-1], 4))
     if verbose:
         print(f"runtime row [{cfg.name}] churn={churn:.0%}: "
@@ -140,5 +149,6 @@ def runtime_row(model_arch: str, *, churn: float = 0.1, iterations: int = 4,
               f"{completed} completed / {dropped} dropped, "
               f"{rerouted} rerouted ({recomputes} stage recomputes), "
               f"store {store_peak / 1e6:.1f}MB ({activation_codec}), "
+              f"wire {wire_codec} ({wire_bytes / 1e6:.1f}MB), "
               f"final loss {row['final_loss']:.4f}")
     return row

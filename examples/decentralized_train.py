@@ -14,6 +14,11 @@ activations + VJP residuals kept by the fused dispatch);
 ``--activation-codec int8`` quantises the store (per-tensor symmetric
 int8 + fp32 scale) for ~4x less resident memory at a bounded fidelity
 cost, and ``--remat`` switches to the rematerialising oracle backward.
+``--wire-codec`` compresses the inter-stage boundary-chunk transfers on
+the forward path (bf16 / int8 / top-k, or ``planner`` to follow the
+flow layer's per-link codec choices; the centralized baseline gets the
+same forced codec so the Fig. 6 gap isolates the scheduling, not the
+wire fidelity).
 """
 import argparse
 import os
@@ -75,6 +80,13 @@ def main():
                     help="rematerialising backward (the in-engine "
                          "equality oracle) instead of the fused "
                          "residual-carrying dispatch")
+    ap.add_argument("--wire-codec",
+                    choices=["fp32", "bf16", "int8", "top-k", "planner"],
+                    default="fp32",
+                    help="inter-stage wire codec for boundary-chunk "
+                         "transfers: fp32 (exact, default), a forced "
+                         "codec, or planner (follow the network's "
+                         "per-link codec-choice matrix)")
     args = ap.parse_args()
 
     cfg = get_config("gwtf-llama-300m").reduced(
@@ -88,10 +100,13 @@ def main():
                                checkpoint_dir=args.checkpoint_dir,
                                checkpoint_every=args.checkpoint_every,
                                activation_codec=args.activation_codec,
-                               remat=args.remat)
+                               remat=args.remat,
+                               wire_codec=args.wire_codec)
     cen = CentralizedTrainer(cfg, S, lr=1e-3, seed=args.seed,
                              activation_codec=args.activation_codec,
-                             remat=args.remat)
+                             remat=args.remat,
+                             wire_codec=("fp32" if args.wire_codec ==
+                                         "planner" else args.wire_codec))
     if args.resume:
         if not args.checkpoint_dir:
             ap.error("--resume requires --checkpoint-dir")
@@ -121,7 +136,9 @@ def main():
                   f"recomputes fwd={r.fwd_recomputes} "
                   f"bwd={r.bwd_replays}, dropped={r.dropped}, "
                   f"store={r.store_peak_bytes / 1e6:.1f}MB "
-                  f"{args.activation_codec}]   "
+                  f"{args.activation_codec}, "
+                  f"wire={r.wire_bytes / 1e6:.1f}MB "
+                  f"{','.join(r.wire_codecs) or 'fp32'}]   "
                   f"centralized loss={cl:.4f}")
     g = np.mean(dec.losses[-10:])
     c = np.mean(cen.losses[-10:])

@@ -1535,6 +1535,20 @@ class GWTFProtocol:
     def total_cost(self) -> float:
         return float(sum(self.flow_costs()))
 
+    def flow_codecs(self) -> List[List[str]]:
+        """Per-edge chosen wire codec for every complete flow.
+
+        Mirrors ``complete_flows()``: entry ``k`` of chain ``c`` is the
+        codec the network priced edge ``(chain[k], chain[k+1])`` at, at
+        the planner's activation size.  With an explicit external
+        ``cost_matrix`` (abstract topologies) the menu is whatever the
+        network carries — by construction fp32-only there.
+        """
+        names = self.net.wire_codec_names()
+        choice = self.net.wire_codec_matrix()
+        return [[names[choice[a, b]] for a, b in zip(chain, chain[1:])]
+                for chain in self.complete_flows()]
+
     def max_edge_cost(self) -> float:
         self._refresh_cost_source()
         m = 0.0

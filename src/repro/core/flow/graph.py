@@ -8,6 +8,27 @@ costs follow Eq. 1:
 with asymmetric latency/bandwidth averaged because every link is used once
 forward and once backward.
 
+Compression-aware pricing
+-------------------------
+On WAN links, compressing the payload is the dominant bandwidth lever
+(FusionLLM), so every link is priced at its *best admissible wire
+codec*: ``FlowNetwork.codec_menu`` names entries of :data:`WIRE_CODECS`
+(compression ratio, encode+decode compute rate, fidelity penalty), the
+scenario-level ``fidelity_budget`` gates which codecs are admissible,
+and the per-edge price becomes
+
+    min over admissible codecs c of
+        lat_avg + 2*(ratio_c*size)/(beta_ij+beta_ji)
+        + coder_rate_c*size + fidelity_weight*penalty_c
+
+so fast links keep ``fp32`` (no distortion for negligible time saved)
+while slow inter-region links pick aggressive codecs — routing and
+compression are co-optimized because both land in the same cost
+matrices the planner consumes.  ``wire_codec_matrix()`` exposes the
+argmin (which codec each link chose).  The default menu ``("fp32",)``
+takes a short-circuit path whose float arithmetic is *bit-identical* to
+the pre-codec implementation; that is the in-engine equality oracle.
+
 Scale notes
 -----------
 ``edge_cost``/``comm_cost`` are the innermost calls of both the protocol
@@ -15,9 +36,14 @@ and the simulator, so the Eq. 1 terms are precomputed once into dense
 (N, N) matrices (``cost_matrix()``) and every query is a single array
 read.  The caches are keyed on a version counter that ``add_node`` (and
 ``invalidate_costs``) bumps; node death does *not* invalidate them
-because link costs are independent of liveness.  ``add_node`` grows the
-latency/bandwidth matrices geometrically (amortized O(N) per join
-instead of a fresh O(N^2) reallocation per join).
+because link costs are independent of liveness.  Per-size matrices
+(``comm_matrix``/``edge_matrix``) live in a small per-epoch dict so
+alternating sizes — e.g. activation bytes vs aggregation bytes, or the
+multiple effective sizes a codec menu produces — do not thrash full
+rebuilds (``matrix_rebuild_count`` tracks rebuilds for regression
+tests).  ``add_node`` grows the latency/bandwidth matrices
+geometrically (amortized O(N) per join instead of a fresh O(N^2)
+reallocation per join).
 """
 from __future__ import annotations
 
@@ -32,6 +58,42 @@ import numpy as np
 # (previously inlined in add_node).
 DEFAULT_JOIN_LATENCY = 0.05
 DEFAULT_JOIN_BANDWIDTH = 500e6 / 8
+
+
+@dataclass(frozen=True)
+class LinkCodec:
+    """One wire-codec entry of the per-link compression menu.
+
+    ``ratio`` is encoded bytes per raw byte; ``coder_rate`` is the
+    encode+decode compute term in seconds per raw byte (both endpoints
+    combined); ``fidelity_penalty`` is a dimensionless distortion proxy
+    — a scenario's ``fidelity_budget`` gates admissibility and
+    ``FlowNetwork.fidelity_weight`` converts the residual distortion of
+    an admissible codec into seconds-equivalent cost, so near-lossless
+    links are not compressed for free.
+    """
+    name: str
+    ratio: float
+    coder_rate: float
+    fidelity_penalty: float
+
+
+# The planner's codec menu.  Ratios mirror the runtime codecs in
+# `runtime/activations.py`: bf16 halves the payload, int8 is 1 byte per
+# element plus a fp32 scale (~0.26 measured on bench tensors), top-k at
+# k=1/16 keeps value+int32 index pairs (2*k of the raw bytes).  Coder
+# rates are seconds/byte on the CI-class host (cast ~10 GB/s, quantise
+# ~5 GB/s, top-k selection ~2.5 GB/s, encode+decode combined).
+WIRE_CODECS: Dict[str, LinkCodec] = {
+    "fp32": LinkCodec("fp32", 1.0, 0.0, 0.0),
+    "bf16": LinkCodec("bf16", 0.5, 1.0e-10, 0.004),
+    "int8": LinkCodec("int8", 0.26, 2.0e-10, 0.02),
+    "top-k": LinkCodec("top-k", 0.125, 4.0e-10, 0.08),
+}
+
+# Bounded per-epoch size->matrix cache (a codec menu touches a handful
+# of sizes per epoch; 16 is generous).
+_WIRE_CACHE_MAX = 16
 
 
 @dataclass
@@ -61,6 +123,9 @@ class FlowNetwork:
     latency: np.ndarray          # (N, N) lambda_ij, seconds
     bandwidth: np.ndarray        # (N, N) beta_ij, bytes/s
     activation_size: float       # bytes per microbatch activation
+    codec_menu: Tuple[str, ...] = ("fp32",)   # WIRE_CODECS names offered
+    fidelity_budget: float = 0.0  # max admissible fidelity_penalty
+    fidelity_weight: float = 1.0  # seconds-equivalent per unit penalty
 
     # ------------------------------------------------------------------
     # Cached Eq. 1 cost model
@@ -68,9 +133,11 @@ class FlowNetwork:
     def __setattr__(self, name, value):
         object.__setattr__(self, name, value)
         # rebinding a cost input (e.g. bench code replacing the whole
-        # latency matrix) invalidates the caches; in-place element writes
-        # still require an explicit invalidate_costs().
-        if name in ("latency", "bandwidth", "activation_size"):
+        # latency matrix, or widening the codec menu) invalidates the
+        # caches; in-place element writes still require an explicit
+        # invalidate_costs().
+        if name in ("latency", "bandwidth", "activation_size",
+                    "codec_menu", "fidelity_budget", "fidelity_weight"):
             object.__setattr__(self, "_cost_version",
                                getattr(self, "_cost_version", 0) + 1)
 
@@ -106,65 +173,189 @@ class FlowNetwork:
         self._cc = cc
         return cc
 
+    # -- wire-codec menu ------------------------------------------------
+    def admissible_codecs(self) -> Tuple[LinkCodec, ...]:
+        """Menu entries whose fidelity penalty fits the budget, in menu
+        order (ties in edge price resolve to the earlier entry).
+
+        ``fp32`` (penalty 0) is always admissible, so an over-tight
+        budget degrades to lossless rather than to an empty menu.
+        """
+        key = (tuple(self.codec_menu), float(self.fidelity_budget))
+        cached = getattr(self, "_adm", None)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        menu = []
+        for name in key[0]:
+            codec = WIRE_CODECS.get(name)
+            if codec is None:
+                raise ValueError(
+                    f"unknown wire codec {name!r}; "
+                    f"known: {sorted(WIRE_CODECS)}")
+            if codec.fidelity_penalty <= key[1] or codec.name == "fp32":
+                menu.append(codec)
+        adm = tuple(menu)
+        self._adm = (key, adm)
+        return adm
+
+    def _wire_trivial(self) -> bool:
+        """True when pricing reduces to the pre-codec fp32 arithmetic."""
+        adm = self.admissible_codecs()
+        return (len(adm) == 1 and adm[0].ratio == 1.0
+                and adm[0].coder_rate == 0.0
+                and adm[0].fidelity_penalty == 0.0)
+
+    def wire_codec_names(self) -> Tuple[str, ...]:
+        """Names indexing ``wire_codec_matrix`` entries (menu order)."""
+        return tuple(c.name for c in self.admissible_codecs())
+
+    def wire_codec_ratios(self) -> np.ndarray:
+        """Compression ratio per admissible codec, same order as names."""
+        return np.array([c.ratio for c in self.admissible_codecs()])
+
+    def wire_codec_matrix(self, size: Optional[float] = None) -> np.ndarray:
+        """(N, N) index into ``wire_codec_names()``: the codec each link
+        chose at ``size`` bytes (argmin of the per-codec edge price)."""
+        cc = self._cost_cache()
+        if size is None:
+            size = self.activation_size
+        comm, choice = self._wire_tables(cc, float(size))
+        if choice is None:
+            choice = np.zeros(comm.shape, dtype=np.int8)
+        return choice
+
+    # -- matrix caches --------------------------------------------------
+    @property
+    def matrix_rebuild_count(self) -> int:
+        """Total per-size comm/edge matrix builds (regression guard for
+        the per-epoch dict cache: alternating sizes must not thrash)."""
+        return getattr(self, "_matrix_rebuilds", 0)
+
+    def _wire_tables(self, cc: dict, size: float):
+        """Codec-priced ``(comm, choice)`` at ``size``, per-epoch cached.
+
+        ``comm[i, j]`` is the communication price of the best admissible
+        codec on link (i, j); ``choice`` is the argmin (``None`` on the
+        trivial fp32-only path, whose arithmetic is bit-identical to the
+        pre-codec implementation).
+        """
+        cache = getattr(self, "_wire_m", None)
+        if cache is None or cache[0] != cc["version"]:
+            cache = (cc["version"], {})
+            self._wire_m = cache
+        ent = cache[1].get(size)
+        if ent is not None:
+            return ent
+        lat, bw = cc["lat_avg"], cc["bw_sum"]
+        if self._wire_trivial():
+            ent = (lat + 2.0 * size / bw, None)
+        else:
+            adm = self.admissible_codecs()
+            fw = float(self.fidelity_weight)
+            first = adm[0]
+            best = (lat + 2.0 * (first.ratio * size) / bw
+                    + (first.coder_rate * size
+                       + fw * first.fidelity_penalty))
+            choice = np.zeros(lat.shape, dtype=np.int8)
+            for k, codec in enumerate(adm[1:], start=1):
+                cand = (lat + 2.0 * (codec.ratio * size) / bw
+                        + (codec.coder_rate * size
+                           + fw * codec.fidelity_penalty))
+                better = cand < best
+                best = np.where(better, cand, best)
+                choice[better] = k
+            ent = (best, choice)
+        if len(cache[1]) >= _WIRE_CACHE_MAX:
+            cache[1].clear()
+        cache[1][size] = ent
+        self._matrix_rebuilds = getattr(self, "_matrix_rebuilds", 0) + 1
+        return ent
+
     def cost_matrix(self) -> np.ndarray:
         """Dense Eq. 1 cost matrix at the default activation size.
 
         Cached; treat as read-only.  ``d(i, j)`` is ``cost_matrix()[i, j]``.
+        With a non-trivial codec menu each entry is priced at that
+        link's best admissible codec.
         """
-        return self._cost_cache()["cost"]
+        cc = self._cost_cache()
+        if self._wire_trivial():
+            return cc["cost"]
+        return self.edge_matrix(self.activation_size)
 
     def comm_matrix(self, size: Optional[float] = None) -> np.ndarray:
         """Dense communication-only Eq. 1 matrix at ``size`` bytes.
 
         ``comm_matrix(size)[i, j] == comm_cost(i, j, size)`` exactly (the
-        elementwise NumPy expression mirrors the scalar one).  Cached per
-        (cost epoch, size); treat as read-only.  This is the batched
+        elementwise NumPy expression mirrors the scalar one).  Cached in
+        a per-epoch size dict; treat as read-only.  This is the batched
         lookup the simulator's event core resolves its per-leg transfer
         delays against instead of calling ``comm_cost`` per event.
         """
         cc = self._cost_cache()
         if size is None:
             size = self.activation_size
-        key = (cc["version"], float(size))
-        cached = getattr(self, "_comm_m", None)
-        if cached is not None and cached[0] == key:
-            return cached[1]
-        mat = cc["lat_avg"] + 2.0 * float(size) / cc["bw_sum"]
-        self._comm_m = (key, mat)
-        return mat
+        return self._wire_tables(cc, float(size))[0]
 
     def edge_matrix(self, size: Optional[float] = None) -> np.ndarray:
         """Dense full Eq. 1 matrix (compute + comm) at ``size`` bytes.
 
         ``edge_matrix(size)[i, j] == edge_cost(i, j, size)`` exactly
-        (same elementwise association as the scalar path).  Cached per
-        (cost epoch, size); treat as read-only.
+        (same elementwise association as the scalar path).  Cached in a
+        per-epoch size dict; treat as read-only.
         """
         cc = self._cost_cache()
+        if self._wire_trivial():
+            if size is None:
+                return cc["cost"]
+            key = float(size)
+            cache = getattr(self, "_edge_m", None)
+            if cache is None or cache[0] != cc["version"]:
+                cache = (cc["version"], {})
+                self._edge_m = cache
+            mat = cache[1].get(key)
+            if mat is None:
+                mat = (cc["comp_pair"] + cc["lat_avg"]
+                       + 2.0 * float(size) / cc["bw_sum"])
+                if len(cache[1]) >= _WIRE_CACHE_MAX:
+                    cache[1].clear()
+                cache[1][key] = mat
+                self._matrix_rebuilds = (
+                    getattr(self, "_matrix_rebuilds", 0) + 1)
+            return mat
         if size is None:
-            return cc["cost"]
-        key = (cc["version"], float(size))
-        cached = getattr(self, "_edge_m", None)
-        if cached is not None and cached[0] == key:
-            return cached[1]
-        mat = cc["comp_pair"] + cc["lat_avg"] + 2.0 * float(size) / cc["bw_sum"]
-        self._edge_m = (key, mat)
+            size = self.activation_size
+        key = float(size)
+        cache = getattr(self, "_edge_m", None)
+        if cache is None or cache[0] != cc["version"]:
+            cache = (cc["version"], {})
+            self._edge_m = cache
+        mat = cache[1].get(key)
+        if mat is None:
+            mat = cc["comp_pair"] + self._wire_tables(cc, key)[0]
+            if len(cache[1]) >= _WIRE_CACHE_MAX:
+                cache[1].clear()
+            cache[1][key] = mat
         return mat
 
     def edge_cost(self, i: int, j: int, size: Optional[float] = None) -> float:
         """Eq. 1 cost of moving one microbatch between nodes i and j."""
         cc = self._cost_cache()
-        if size is None:
-            return float(cc["cost"][i, j])
-        return float(cc["comp_pair"][i, j] + cc["lat_avg"][i, j]
-                     + 2.0 * size / cc["bw_sum"][i, j])
+        if self._wire_trivial():
+            if size is None:
+                return float(cc["cost"][i, j])
+            return float(cc["comp_pair"][i, j] + cc["lat_avg"][i, j]
+                         + 2.0 * size / cc["bw_sum"][i, j])
+        return float(self.edge_matrix(size)[i, j])
 
     def comm_cost(self, i: int, j: int, size: Optional[float] = None) -> float:
         """Communication-only part of Eq. 1 (no compute term)."""
         cc = self._cost_cache()
         if size is None:
             size = self.activation_size
-        return float(cc["lat_avg"][i, j] + 2.0 * size / cc["bw_sum"][i, j])
+        if self._wire_trivial():
+            return float(cc["lat_avg"][i, j] + 2.0 * size / cc["bw_sum"][i, j])
+        return float(self.comm_matrix(size)[i, j])
 
     # ------------------------------------------------------------------
     def stage_nodes(self, stage: int, alive_only: bool = True) -> List[Node]:

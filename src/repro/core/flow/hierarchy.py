@@ -103,6 +103,12 @@ def build_region_network(
     integral, so ``method="auto"`` keeps selecting the dial core) on
     the adjacent-stage blocks the layered flow consumes; unconsumed
     blocks are left zero rather than aggregated.
+
+    When ``net`` carries a wire-codec menu, ``net.cost_matrix()`` is
+    already priced at each link's best admissible codec, so the region
+    aggregation (and everything downstream) is codec-aware for free;
+    the region net itself stores the aggregated costs directly
+    (infinite bandwidth), so no second round of codec pricing applies.
     """
     CM = (np.asarray(cost_matrix, float) if cost_matrix is not None
           else net.cost_matrix())

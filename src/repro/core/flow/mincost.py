@@ -420,6 +420,10 @@ def solve_training_flow(net: FlowNetwork,
     """Optimal min-cost max-flow through the stage-layered training graph.
 
     cost_matrix overrides Eq.1 edge costs (flow tests draw d_ij directly).
+    When no override is given, ``net.cost_matrix()`` is consumed as-is —
+    including per-link wire-codec pricing when the network carries a
+    codec menu — so the oracle optimizes over the same codec-priced
+    graph as the decentralized engine.
     When ``data_node`` is given, only that source's flow is considered
     (the GWTF formulation requires flow to return to its own origin).
     ``method`` selects the Dijkstra core (see ``MinCostFlow.solve``).

@@ -22,8 +22,13 @@ Keeping residuals costs memory; the opt-in :class:`Int8Codec`
 (per-tensor symmetric int8 + fp32 scale, the FusionLLM-style
 compression lever) shrinks both boundary activations and residuals
 ~4x at a bounded fidelity cost (``|x - dq(q(x))| <= scale/2``
-elementwise).  ``peak_bytes`` tracks the high-water resident size so
-benchmarks can surface the memory/recompute/fidelity trade.
+elementwise).  :class:`Bf16Codec` (half the bytes, <= 2**-8 relative
+error) and :class:`TopKCodec` (sparse value+index pairs, dropped
+magnitudes bounded by the smallest kept one) complete the menu the
+flow planner prices per link (``flow.graph.WIRE_CODECS``); the same
+codecs double as *wire* codecs on inter-stage boundary transfers
+(``trainer.py``).  ``peak_bytes`` tracks the high-water resident size
+so benchmarks can surface the memory/recompute/fidelity trade.
 
 The batched runtime stores one stacked array per (stage, chunk) (the
 rows of all microbatches of a dispatch chunk, one ``put``); the
@@ -113,18 +118,128 @@ class Int8Codec:
         return _leaf_nbytes(enc)
 
 
-CODECS = {"fp": NullCodec, "int8": Int8Codec}
+class _Bf16:
+    """One bf16-encoded tensor + its original dtype (so decode restores
+    the exact dtype the compute graph expects)."""
+    __slots__ = ("h", "dtype")
+
+    def __init__(self, h, dtype):
+        self.h = h
+        self.dtype = dtype
+
+    @property
+    def nbytes(self) -> int:
+        return _leaf_nbytes(self.h)
+
+
+class Bf16Codec:
+    """Truncate to bfloat16 on the wire / in the store.
+
+    Round-to-nearest into an 8-bit significand bounds the elementwise
+    relative error by ``2**-8`` (half an ulp of eps = 2**-7):
+    ``|x - dq(q(x))| <= 2**-8 * |x|`` for normal values.  Non-float
+    leaves pass through.
+    """
+    name = "bf16"
+
+    def encode(self, x):
+        if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            return x
+        x = jnp.asarray(x)
+        return _Bf16(x.astype(jnp.bfloat16), x.dtype)
+
+    def decode(self, enc):
+        if not isinstance(enc, _Bf16):
+            return enc
+        return enc.h.astype(enc.dtype)
+
+    @staticmethod
+    def nbytes(enc) -> int:
+        if isinstance(enc, _Bf16):
+            return enc.nbytes
+        return _leaf_nbytes(enc)
+
+
+class _Sparse:
+    """One top-k-encoded tensor: kept values, flat int32 indices, and
+    enough metadata to scatter back into a dense zero tensor."""
+    __slots__ = ("vals", "idx", "shape", "dtype", "size")
+
+    def __init__(self, vals, idx, shape, dtype, size):
+        self.vals = vals
+        self.idx = idx
+        self.shape = shape
+        self.dtype = dtype
+        self.size = size
+
+    @property
+    def nbytes(self) -> int:
+        return _leaf_nbytes(self.vals) + _leaf_nbytes(self.idx)
+
+
+class TopKCodec:
+    """Magnitude top-k sparsification: keep the ``k_frac`` largest-|x|
+    entries as (value, flat index) pairs, decode scatters them into
+    zeros.
+
+    Error bound: kept entries round-trip exactly, dropped entries are
+    zeroed, and every dropped magnitude is <= the smallest kept
+    magnitude — so ``|x - dq(q(x))| <= min(|kept values|)``
+    elementwise.  ``nbytes`` is monotone in k (more kept pairs, more
+    bytes).  Non-float leaves pass through.
+    """
+    name = "topk"
+
+    def __init__(self, k_frac: float = 1.0 / 16.0):
+        if not 0.0 < k_frac <= 1.0:
+            raise ValueError(f"k_frac must be in (0, 1], got {k_frac}")
+        self.k_frac = float(k_frac)
+
+    def encode(self, x):
+        if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            return x
+        x = jnp.asarray(x)
+        flat = x.ravel()
+        n = int(flat.size)
+        k = max(1, int(round(self.k_frac * n)))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        idx = idx.astype(jnp.int32)
+        return _Sparse(flat[idx], idx, x.shape, x.dtype, n)
+
+    def decode(self, enc):
+        if not isinstance(enc, _Sparse):
+            return enc
+        dense = jnp.zeros(enc.size, dtype=enc.dtype).at[enc.idx].set(
+            enc.vals)
+        return dense.reshape(enc.shape)
+
+    @staticmethod
+    def nbytes(enc) -> int:
+        if isinstance(enc, _Sparse):
+            return enc.nbytes
+        return _leaf_nbytes(enc)
+
+
+CODECS = {"fp": NullCodec, "int8": Int8Codec, "bf16": Bf16Codec,
+          "topk": TopKCodec}
+
+# Planner-side wire-codec names (flow.graph.WIRE_CODECS) map onto the
+# runtime codec registry, so a flow-layer codec choice can be applied
+# to real tensors without translation at every call site.
+CODEC_ALIASES = {"fp32": "fp", "top-k": "topk"}
 
 
 def make_codec(spec: Union[str, None, NullCodec, Int8Codec]):
     if spec is None:
         return NullCodec()
     if isinstance(spec, str):
+        name = CODEC_ALIASES.get(spec, spec)
         try:
-            return CODECS[spec]()
+            return CODECS[name]()
         except KeyError:
-            raise ValueError(f"unknown activation codec {spec!r} "
-                             f"(choose from {sorted(CODECS)})") from None
+            raise ValueError(
+                f"unknown activation codec {spec!r} (choose from "
+                f"{sorted(CODECS) + sorted(CODEC_ALIASES)})") from None
     return spec
 
 

@@ -51,7 +51,7 @@ import numpy as np
 from repro.checkpoint import store as ckpt
 from repro.core.flow.graph import FlowNetwork, Node
 from repro.core.runtime import cache
-from repro.core.runtime.activations import ActivationStore
+from repro.core.runtime.activations import ActivationStore, make_codec
 from repro.core.runtime.recovery import Job, RecoveryManager, Resolution
 from repro.core.runtime.stages import StageCompute
 from repro.core.sim.faults import BernoulliChurn, ChurnContext, ChurnModel
@@ -79,11 +79,37 @@ def auto_chunk(n_mb: int, per: int, seq: int, d_model: int,
                       _CHUNK_TARGET_BYTES // mb_bytes))
 
 
+class _WireLink:
+    """Per-boundary wire codecs for inter-stage chunk transfers.
+
+    ``send(s, x)`` encodes + decodes the boundary activation leaving
+    stage ``s`` with the codec the planner chose for that boundary's
+    link (encode → wire → decode; the receiving stage computes on the
+    decoded tensor, so compression fidelity costs are *real* in the
+    loss, not simulated).  Cotangents stay exact: crash replay consumes
+    stored residuals, and compressing the backward would double-charge
+    the fidelity budget the planner priced for one crossing.
+    ``bytes`` accumulates the encoded (on-wire) payload size.
+    """
+
+    def __init__(self, names: List[str]):
+        self.names = list(names)
+        self._codecs = [make_codec(n) for n in self.names]
+        self.bytes = 0
+
+    def send(self, boundary: int, x):
+        codec = self._codecs[boundary]
+        enc = codec.encode(x)
+        self.bytes += int(codec.nbytes(enc))
+        return codec.decode(enc)
+
+
 def _chunk_pass(stages: StageCompute, store: ActivationStore,
                 stage_params: List[Any], head_params, toks, labels,
                 ids: Tuple[int, ...], per: int, *, remat: bool,
                 grad_stage: List[Any],
-                replay: Optional[Callable] = None) -> Tuple[float, Any]:
+                replay: Optional[Callable] = None,
+                wire: Optional[_WireLink] = None) -> Tuple[float, Any]:
     """One depth-first chunk: embed → per-stage forward (fused residual
     capture unless ``remat``) → loss head → per-stage backward from
     stored residuals (or remat oracle) → embedding pull-back.
@@ -91,8 +117,12 @@ def _chunk_pass(stages: StageCompute, store: ActivationStore,
     Shared verbatim by `RuntimeTrainer` and `CentralizedTrainer`: at
     churn 0 (``replay=None``) both execute exactly this program, which
     is what makes the bit-identity invariant hold by construction.
-    Accumulates per-stage gradients into ``grad_stage`` in place;
-    returns ``(loss_sum, g_head)`` with the embedding share included.
+    ``wire`` (when set) compresses each inter-stage boundary transfer
+    with that boundary's planner-chosen codec — callers pass ``None``
+    (not a no-op wire) for fp32 so the bit-identity path stays
+    untouched.  Accumulates per-stage gradients into ``grad_stage`` in
+    place; returns ``(loss_sum, g_head)`` with the embedding share
+    included.
     """
     S = len(stage_params)
     x = stages.embed(head_params, toks)
@@ -105,6 +135,8 @@ def _chunk_pass(stages: StageCompute, store: ActivationStore,
             store.put_residuals(s, ids, resid)
         if replay is not None:
             replay(s, "fwd", ids)
+        if wire is not None and s < S - 1:
+            x = wire.send(s, x)
     B = len(ids)
     seq, D = x.shape[1], x.shape[-1]
     h = x.reshape(B, per, seq, D)
@@ -139,6 +171,10 @@ class IterationResult:
     bwd_replays: int = 0          # stage-local VJP replays (Sec. V-D)
     store_peak_bytes: int = 0     # high-water resident activation+residual
                                   # bytes (encoded) during the numeric pass
+    wire_bytes: int = 0           # encoded bytes sent over inter-stage
+                                  # boundaries (0 when the wire is fp32)
+    wire_codecs: Tuple[str, ...] = ()   # applied codec per stage boundary
+                                  # (empty when the wire is fp32/off)
 
 
 class RuntimeTrainer:
@@ -156,6 +192,7 @@ class RuntimeTrainer:
                  record_microbatch_grads: bool = False,
                  remat: bool = False,
                  activation_codec: str = "fp",
+                 wire_codec: Optional[str] = None,
                  dispatch_chunk: Optional[int] = None,
                  donate: Optional[bool] = None):
         self.cfg = cfg
@@ -168,6 +205,11 @@ class RuntimeTrainer:
         self.checkpoint_every = checkpoint_every
         self.record_microbatch_grads = record_microbatch_grads
         self.remat = remat
+        # wire_codec: None/"fp"/"fp32" leaves boundary transfers exact;
+        # "planner" applies, per stage boundary, the codec the network's
+        # menu chose for that boundary's planned links; any codec name
+        # ("bf16"/"int8"/"top-k") forces it on every boundary.
+        self.wire_codec = wire_codec
         self.dispatch_chunk = dispatch_chunk
 
         self.stages = StageCompute(cfg, net.num_stages, donate=donate)
@@ -199,6 +241,8 @@ class RuntimeTrainer:
         self.last_chains: List[List[int]] = []
         self.last_resolution: Optional[Resolution] = None
         self.last_store_peak_bytes = 0
+        self.last_wire_codecs: List[str] = []
+        self.last_wire_bytes = 0
 
     # ------------------------------------------------------------------
     @property
@@ -266,6 +310,45 @@ class RuntimeTrainer:
         return step
 
     # ------------------------------------------------------------------
+    # Wire codec (planner-chosen per-boundary compression)
+    # ------------------------------------------------------------------
+    def _make_wire(self, chains: List[List[int]]) -> Optional[_WireLink]:
+        """Resolve this iteration's per-boundary wire codecs.
+
+        ``"planner"`` mode reads the network's codec-choice matrix at
+        the hop each planned chain crosses between stages ``s`` and
+        ``s+1`` and applies the modal choice per boundary (chunks stack
+        microbatches from several chains, so one codec per boundary;
+        ties resolve to the earlier menu entry).  Returns ``None`` when
+        every boundary resolves to fp32 — the exact path must not even
+        construct a wire, so bit-identity survives by construction.
+        """
+        spec = self.wire_codec
+        if spec is None or spec in ("fp", "fp32"):
+            return None
+        S = self.net.num_stages
+        if S < 2:
+            return None
+        if spec != "planner":
+            return _WireLink([spec] * (S - 1))
+        menu = self.net.wire_codec_names()
+        if len(menu) <= 1:
+            return None
+        choice = self.net.wire_codec_matrix()
+        names = []
+        for s in range(S - 1):
+            votes: Dict[int, int] = {}
+            for chain in chains:
+                k = int(choice[chain[s + 1], chain[s + 2]])
+                votes[k] = votes.get(k, 0) + 1
+            best = (min(votes, key=lambda k: (-votes[k], k))
+                    if votes else 0)
+            names.append(menu[best])
+        if all(n == "fp32" for n in names):
+            return None
+        return _WireLink(names)
+
+    # ------------------------------------------------------------------
     # One training iteration
     # ------------------------------------------------------------------
     def iteration(self, batches_per_data_node: Dict[int, List[dict]]
@@ -291,7 +374,10 @@ class RuntimeTrainer:
         res = self.recovery.resolve(jobs, chains, crash_times, horizon)
         self.last_chains = chains
         self.last_resolution = res
-        mean_loss = self._execute(res)
+        wire = self._make_wire(chains)
+        self.last_wire_codecs = list(wire.names) if wire is not None else []
+        mean_loss = self._execute(res, wire)
+        self.last_wire_bytes = wire.bytes if wire is not None else 0
 
         # ---- commit crashes for the next iteration --------------------
         for nid in crash_times:
@@ -309,12 +395,15 @@ class RuntimeTrainer:
             dropped=res.dropped, rerouted=res.rerouted,
             requeued=res.requeued, fwd_recomputes=res.fwd_recomputes,
             bwd_replays=res.bwd_replays,
-            store_peak_bytes=self.last_store_peak_bytes)
+            store_peak_bytes=self.last_store_peak_bytes,
+            wire_bytes=self.last_wire_bytes,
+            wire_codecs=tuple(self.last_wire_codecs))
 
     # ------------------------------------------------------------------
     # Numeric pass
     # ------------------------------------------------------------------
-    def _execute(self, res: Resolution) -> float:
+    def _execute(self, res: Resolution,
+                 wire: Optional[_WireLink] = None) -> float:
         """Run the completed microbatches through the staged compute and
         apply the aggregated update; dispatch each recorded crash's
         lost work so recovery cost is real."""
@@ -326,9 +415,9 @@ class RuntimeTrainer:
             return 0.0
         self.last_microbatch_grads = []
         if self.batch_microbatches:
-            total = self._execute_batched(done, res)
+            total = self._execute_batched(done, res, wire)
         else:
-            total = self._execute_per_microbatch(done, res)
+            total = self._execute_per_microbatch(done, res, wire)
         self.last_store_peak_bytes = self.store.peak_bytes
         self.store.clear()
         return total / len(done)
@@ -345,7 +434,8 @@ class RuntimeTrainer:
         itemsize = jnp.dtype(self.cfg.param_dtype).itemsize
         return auto_chunk(n_mb, per, seq, self.cfg.d_model, itemsize)
 
-    def _execute_batched(self, done: List[Job], res: Resolution) -> float:
+    def _execute_batched(self, done: List[Job], res: Resolution,
+                         wire: Optional[_WireLink] = None) -> float:
         by_dn = self._group_by_dn(done)
         per = np.asarray(done[0].mb["tokens"]).shape[0]
         seq = np.asarray(done[0].mb["tokens"]).shape[1]
@@ -374,7 +464,7 @@ class RuntimeTrainer:
                 loss_sum, gh = _chunk_pass(
                     self.stages, self.store, self.stage_params, head_p,
                     toks, labels, ids, per, remat=self.remat,
-                    grad_stage=grad_stage, replay=replay)
+                    grad_stage=grad_stage, replay=replay, wire=wire)
                 total += loss_sum
                 g_head = (gh if g_head is None else
                           jax.tree.map(jnp.add, g_head, gh))
@@ -382,8 +472,8 @@ class RuntimeTrainer:
         self._apply_update(grad_stage, g_head_by_dn, len(done))
         return total
 
-    def _execute_per_microbatch(self, done: List[Job],
-                                res: Resolution) -> float:
+    def _execute_per_microbatch(self, done: List[Job], res: Resolution,
+                                wire: Optional[_WireLink] = None) -> float:
         """Unbatched path: every microbatch runs its own per-stage
         dispatches and gradients are accumulated with ``jnp.add`` —
         the dispatch order (and float association) of the centralized
@@ -413,6 +503,8 @@ class RuntimeTrainer:
                     x, resid = self.stages.forward_fused(
                         s, self.stage_params[s], x)
                     self.store.put_residuals(s, ids, resid)
+                if wire is not None and s < S - 1:
+                    x = wire.send(s, x)
             losses, g_head, g_hidden = self.stages.head_loss(
                 self.head_params[job.data_node], x[None], labels)
             total += float(losses[0])
@@ -490,11 +582,16 @@ class CentralizedTrainer:
     def __init__(self, cfg, num_stages: int, *, lr: float = 1e-3,
                  seed: int = 0, remat: bool = False,
                  activation_codec: str = "fp",
+                 wire_codec: Optional[str] = None,
                  dispatch_chunk: Optional[int] = None,
                  donate: Optional[bool] = None):
         self.cfg = cfg
         self.num_stages = num_stages
         self.remat = remat
+        # fixed per-boundary wire codec (no planner here); None/fp32
+        # keeps the exact program the bit-identity invariant pins
+        self.wire_codec = (None if wire_codec in (None, "fp", "fp32")
+                           else wire_codec)
         self.dispatch_chunk = dispatch_chunk
         stage_p, head_p = cache.initial_params(cfg, num_stages, seed)
         self.stage_params = list(stage_p)
@@ -507,6 +604,7 @@ class CentralizedTrainer:
         self._upd = jax.jit(lambda g, s, p: self.opt.update(g, s, p))
         self.losses: List[float] = []
         self.last_store_peak_bytes = 0
+        self.last_wire_bytes = 0
 
     def _chunk_size(self, n_mb: int, per: int, seq: int) -> int:
         if self.dispatch_chunk is not None:
@@ -521,6 +619,8 @@ class CentralizedTrainer:
         seq = np.asarray(microbatches[0]["tokens"]).shape[1]
         self.store.clear()
         self.store.reset_peak()
+        wire = (_WireLink([self.wire_codec] * (S - 1))
+                if self.wire_codec and S > 1 else None)
         total = 0.0
         grad_stage: List[Any] = [None] * S
         g_head = None
@@ -535,7 +635,7 @@ class CentralizedTrainer:
             loss_sum, gh = _chunk_pass(
                 self.stages, self.store, self.stage_params,
                 self.head_params, toks, labels, ids, per,
-                remat=self.remat, grad_stage=grad_stage)
+                remat=self.remat, grad_stage=grad_stage, wire=wire)
             total += loss_sum
             g_head = gh if g_head is None else jax.tree.map(jnp.add,
                                                             g_head, gh)
@@ -547,6 +647,7 @@ class CentralizedTrainer:
         self.head_params, self.head_opt = self._upd(
             gh, self.head_opt, self.head_params)
         self.last_store_peak_bytes = self.store.peak_bytes
+        self.last_wire_bytes = wire.bytes if wire is not None else 0
         mean = float(total) / B
         self.losses.append(mean)
         return mean

@@ -87,6 +87,17 @@ def _corpus() -> List[ScenarioSpec]:
                      region_bandwidth_scale=[1.0, 0.25, 1.0, 0.5, 1.0,
                                              0.5, 1.0, 1.0, 0.3, 1.0],
                      churn=[{"kind": "bernoulli", "p": 0.10}], **geo),
+        # ---- compression-aware WAN planning --------------------------
+        # full codec menu under a budget admitting everything up to
+        # top-k; per-link choices and bytes-on-wire are pinned by the
+        # golden table and cross-checked by harness.check_codec_agreement
+        ScenarioSpec(name="geo-wan-compress", seed=24,
+                     capacity_range=(1, 4),
+                     compression={"menu": ["fp32", "bf16", "int8",
+                                           "top-k"],
+                                  "fidelity_budget": 0.1,
+                                  "fidelity_weight": 1.0},
+                     churn=[{"kind": "bernoulli", "p": 0.10}], **geo),
         ScenarioSpec(name="trace-crash-rejoin", seed=21,
                      capacity_range=(2, 4),
                      churn=[{"kind": "trace",

@@ -103,7 +103,22 @@ def build_network(spec: ScenarioSpec
         rng=_rng(spec, _SALT_NET))
     _apply_region_heterogeneity(spec, net)
     _add_spare_nodes(spec, net)
+    _apply_compression(spec, net)
     return net, None
+
+
+def _apply_compression(spec: ScenarioSpec, net: FlowNetwork) -> None:
+    """Install the spec's ``compression`` clause on the network: the
+    per-link codec menu and the scenario-level fidelity budget/weight
+    that gate and price it.  RNG-free, so it never perturbs the
+    topology or policy streams."""
+    if spec.compression is None:
+        return
+    net.codec_menu = tuple(spec.compression["menu"])
+    net.fidelity_budget = float(
+        spec.compression.get("fidelity_budget", 0.0))
+    net.fidelity_weight = float(
+        spec.compression.get("fidelity_weight", 1.0))
 
 
 def _geo_abstract_network(spec: ScenarioSpec
@@ -437,6 +452,10 @@ def build_runtime(spec: ScenarioSpec, *, lr: float = 3e-3,
     policy = make_policy(spec.scheduler, net, rng=rng)
     if policy_wrapper is not None:
         policy = policy_wrapper(policy)
+    if spec.compression is not None:
+        # non-trivial menu: boundary transfers follow the planner's
+        # per-link codec choices unless the caller forces a codec
+        trainer_kw.setdefault("wire_codec", "planner")
     trainer = RuntimeTrainer(
         model_config(spec), net, lr=lr, seed=spec.seed, rng=rng,
         policy=policy, churn_model=build_churn_model(spec, net),

@@ -24,6 +24,11 @@ harness checks that they *agree*:
 * `check_hierarchy_gap` — the hierarchical geo-planner
   (`flow.hierarchy.solve_hierarchical`) emits feasible chains within
   the committed optimality-gap bound of the flat dial MCMF oracle;
+* `check_codec_agreement` — on scenarios with a ``compression``
+  clause, the flow planner's per-edge codec choices, the simulator's
+  bytes-on-wire accounting and the runtime's per-boundary wire codecs
+  all derive from the same codec-choice matrix, and an fp32-only menu
+  is bit-identical to no clause at all on every layer;
 * `fuzz` — seeded randomized spec generation under a wall-clock
   budget; a failing spec is shrunk (`minimize`) to a minimal
   reproducer and written into the committed corpus directory so it
@@ -385,7 +390,10 @@ def permuted_network(net, perm: Dict[int, int]):
     return FlowNetwork(nodes=nodes, num_stages=net.num_stages,
                        latency=net.latency[np.ix_(inv, inv)].copy(),
                        bandwidth=net.bandwidth[np.ix_(inv, inv)].copy(),
-                       activation_size=net.activation_size)
+                       activation_size=net.activation_size,
+                       codec_menu=net.codec_menu,
+                       fidelity_budget=net.fidelity_budget,
+                       fidelity_weight=net.fidelity_weight)
 
 
 def check_permutation_invariance(spec: ScenarioSpec) -> Dict[str, Any]:
@@ -510,6 +518,128 @@ def check_sim_invariants(spec: ScenarioSpec,
             "completed": [m.completed for m in first]}
 
 
+def check_codec_agreement(spec: ScenarioSpec,
+                          iterations: Optional[int] = None) -> Dict[str, Any]:
+    """Compression clauses price consistently across every layer.
+
+    * fp32-menu oracle: a spec whose menu is ``["fp32"]`` produces flows,
+      total cost, annealing temperature, RNG stream and simulator
+      summary *bit-identical* to the same spec with no compression
+      clause at all (the codec machinery has a zero-cost off switch);
+    * flow layer: every codec the protocol records per flow edge is on
+      the spec's menu, admissible under the budget, and is the true
+      per-edge price argmin (re-derived scalar-wise from the raw
+      latency/bandwidth matrices, first-min tie-breaking);
+    * sim layer: the chosen-codec histogram only names admissible
+      codecs and ``bytes_on_wire`` equals the histogram folded against
+      the codec ratios at the profile's activation size;
+    * runtime layer: the per-boundary wire codecs the trainer applied
+      are the modal choice over its planned chains in the *same*
+      codec-choice matrix the flow layer exposes, and a non-trivial
+      wire moves a positive number of encoded bytes.
+    """
+    from repro.core.flow.graph import WIRE_CODECS
+    from repro.core.sim.metrics import summarize
+
+    check = "codec-agreement"
+    if spec.compression is None:
+        raise ValueError(f"{spec.name}: check_codec_agreement needs a "
+                         f"compression clause")
+
+    # ---- fp32-menu oracle vs no clause at all -------------------------
+    base = spec.replace(compression=None)
+    fp32 = spec.replace(compression={"menu": ["fp32"]})
+    rb = generate.run_flow(base)
+    rf = generate.run_flow(fp32)
+    _require(rf.flows == rb.flows and rf.total_cost == rb.total_cost,
+             spec, check,
+             f"fp32-only menu perturbed the flow outcome "
+             f"({len(rf.flows)} chains / {rf.total_cost!r} vs "
+             f"{len(rb.flows)} / {rb.total_cost!r})")
+    _require(rf.temperature == rb.temperature
+             and rf.rng_state == rb.rng_state, spec, check,
+             "fp32-only menu perturbed the annealing/RNG stream")
+    _require(summarize(generate.run_sim(fp32))
+             == summarize(generate.run_sim(base)), spec, check,
+             "fp32-only menu perturbed the simulator summary")
+
+    # ---- flow layer: per-edge argmin ----------------------------------
+    flow = generate.run_flow(spec)
+    net = flow.net
+    names = net.wire_codec_names()
+    adm = net.admissible_codecs()
+    budget = float(spec.compression.get("fidelity_budget", 0.0))
+    menu = set(spec.compression["menu"])
+    lat_avg = 0.5 * (net.latency + net.latency.T)
+    bw_sum = net.bandwidth + net.bandwidth.T
+    fw, size = net.fidelity_weight, net.activation_size
+    hist: Dict[str, int] = {}
+    for chain, chain_codecs in zip(flow.flows,
+                                   flow.protocol.flow_codecs()):
+        for (a, b), cname in zip(zip(chain, chain[1:]), chain_codecs):
+            _require(cname in menu, spec, check,
+                     f"edge ({a},{b}) chose {cname!r}, not on the menu")
+            _require(cname == "fp32"
+                     or WIRE_CODECS[cname].fidelity_penalty <= budget,
+                     spec, check,
+                     f"edge ({a},{b}) chose {cname!r} over the fidelity "
+                     f"budget {budget}")
+            prices = [lat_avg[a, b] + 2.0 * (c.ratio * size) / bw_sum[a, b]
+                      + c.coder_rate * size + fw * c.fidelity_penalty
+                      for c in adm]
+            want = names[int(np.argmin(prices))]   # first-min, like argmin
+            _require(cname == want, spec, check,
+                     f"edge ({a},{b}) chose {cname!r} but the price "
+                     f"argmin is {want!r}")
+            hist[cname] = hist.get(cname, 0) + 1
+
+    # ---- sim layer: histogram + bytes accounting ----------------------
+    its = min(iterations if iterations is not None else spec.iterations, 3)
+    sim = generate.build_sim(spec)
+    act = sim.profile.activation_bytes
+    ratio = {c.name: c.ratio for c in adm}
+    for i, m in enumerate(sim.run(its)):
+        legs = m.codec_legs or {}
+        _require(set(legs) <= set(names), spec, check,
+                 f"iteration {i}: sim histogram names inadmissible "
+                 f"codecs {sorted(set(legs) - set(names))}")
+        if legs:
+            expect = sum(cnt * ratio[n] * act for n, cnt in legs.items())
+            _require(abs(m.bytes_on_wire - expect)
+                     <= 1e-6 * max(1.0, expect), spec, check,
+                     f"iteration {i}: bytes_on_wire {m.bytes_on_wire!r} "
+                     f"!= histogram fold {expect!r}")
+
+    # ---- runtime layer: modal per-boundary choice ---------------------
+    trainer, batches = generate.build_runtime(spec)
+    r = trainer.iteration(batches)
+    rt_names = list(r.wire_codecs)
+    _require(all(n in menu for n in rt_names), spec, check,
+             f"runtime applied off-menu codecs {rt_names}")
+    tnet = trainer.net
+    choice = tnet.wire_codec_matrix()
+    tmenu = tnet.wire_codec_names()
+    S = tnet.num_stages
+    expected: List[str] = []
+    for s in range(S - 1):
+        votes: Dict[int, int] = {}
+        for chain in trainer.last_chains:
+            k = int(choice[chain[s + 1], chain[s + 2]])
+            votes[k] = votes.get(k, 0) + 1
+        expected.append(tmenu[min(votes, key=lambda k: (-votes[k], k))]
+                        if votes else "fp32")
+    if all(n == "fp32" for n in expected):
+        expected = []
+    _require(rt_names == expected, spec, check,
+             f"runtime wire codecs {rt_names} != modal planner choice "
+             f"{expected}")
+    _require((r.wire_bytes > 0) == bool(rt_names), spec, check,
+             f"runtime wire bytes {r.wire_bytes} inconsistent with "
+             f"codecs {rt_names}")
+    return {"flow_codec_hist": hist, "runtime_codecs": rt_names,
+            "runtime_wire_bytes": r.wire_bytes}
+
+
 # ---------------------------------------------------------------------------
 # Check registry / corpus sweep
 # ---------------------------------------------------------------------------
@@ -527,6 +657,8 @@ CHECKS: Dict[str, Tuple[Callable[[ScenarioSpec], Dict], Callable]] = {
                     lambda s: s.scheduler == "gwtf"),
     "hierarchy-gap": (check_hierarchy_gap,
                       lambda s: s.topology == "geo-abstract"),
+    "codec-agreement": (check_codec_agreement,
+                        lambda s: s.compression is not None),
 }
 
 #: checks cheap enough for the fuzz loop (no real JAX compute).
@@ -621,6 +753,16 @@ def random_spec(rng: np.random.Generator, index: int) -> ScenarioSpec:
         spare = int(rng.integers(1, 4))
         spec = spec.replace(spare_nodes=spare, churn=spec.churn + [
             {"kind": "flash_crowd", "at_iteration": 1, "nodes": spare}])
+    if topology == "geo" and rng.uniform() < 0.3:
+        # a random codec-menu prefix under a random budget: exercises
+        # codec-aware pricing through flow-equivalence + sim-invariants
+        # (check_codec_agreement itself stays out of the fuzz set — its
+        # runtime leg runs real JAX compute)
+        menu = ["fp32", "bf16", "int8", "top-k"]
+        spec = spec.replace(compression={
+            "menu": menu[:int(rng.integers(2, 5))],
+            "fidelity_budget": float(rng.choice([0.004, 0.02, 0.1])),
+            "fidelity_weight": float(rng.uniform(0.1, 2.0))})
     return spec
 
 
@@ -680,6 +822,7 @@ def _fails(spec: ScenarioSpec, checks: Sequence[str]
 
 
 _SHRINK_PASSES: Tuple[Tuple[str, Callable[[ScenarioSpec], Dict]], ...] = (
+    ("drop-compression", lambda s: {"compression": None}),
     ("drop-churn", lambda s: {"churn": s.churn[:-1],
                               "spare_nodes": 0
                               if not any(c["kind"] == "flash_crowd"

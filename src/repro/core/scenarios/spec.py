@@ -106,6 +106,18 @@ class ScenarioSpec:
     # ---- churn program ------------------------------------------------
     churn: List[Dict[str, Any]] = field(default_factory=list)
 
+    # ---- compression clause (per-link wire-codec co-optimization) -----
+    #: ``{"menu": [codec names], "fidelity_budget": float,
+    #:   "fidelity_weight": float (optional)}`` — the wire-codec menu
+    #: the planner prices per link (flow.graph.WIRE_CODECS names; must
+    #: include "fp32" as the lossless fallback), the scenario-level
+    #: fidelity budget gating admissibility, and the optional
+    #: seconds-per-unit-distortion weight.  ``None`` = fp32 everywhere
+    #: (bit-identical to the pre-codec stack).  Geo topology only: the
+    #: abstract topologies store d_ij directly (infinite bandwidth), so
+    #: codec pricing would be degenerate there.
+    compression: Optional[Dict[str, Any]] = None
+
     # ---- run shape ----------------------------------------------------
     iterations: int = 6
     scheduler: str = "gwtf"                     # "gwtf" | "swarm"
@@ -186,8 +198,45 @@ class ScenarioSpec:
         if self.spare_nodes and self.topology != "geo":
             raise ValueError(f"{self.name}: spare_nodes (flash crowd) "
                              f"requires the geo topology")
+        self._validate_compression()
         self._validate_churn()
         return self
+
+    def _validate_compression(self) -> None:
+        if self.compression is None:
+            return
+        from repro.core.flow.graph import WIRE_CODECS
+        c = self.compression
+        if not isinstance(c, dict):
+            raise ValueError(f"{self.name}: compression must be a dict")
+        unknown = set(c) - {"menu", "fidelity_budget", "fidelity_weight"}
+        if unknown:
+            raise ValueError(f"{self.name}: compression has unknown "
+                             f"field(s) {sorted(unknown)}")
+        if self.topology != "geo":
+            raise ValueError(f"{self.name}: compression requires the geo "
+                             f"topology (abstract d_ij links have no "
+                             f"bandwidth for a codec to save)")
+        menu = c.get("menu")
+        if not isinstance(menu, (list, tuple)) or not menu:
+            raise ValueError(f"{self.name}: compression.menu must be a "
+                             f"non-empty list of codec names")
+        bad = [n for n in menu if n not in WIRE_CODECS]
+        if bad:
+            raise ValueError(f"{self.name}: compression.menu has unknown "
+                             f"codec(s) {bad} (known: "
+                             f"{sorted(WIRE_CODECS)})")
+        if "fp32" not in menu:
+            raise ValueError(f"{self.name}: compression.menu must include "
+                             f"'fp32' (the lossless fallback)")
+        budget = c.get("fidelity_budget", 0.0)
+        if not isinstance(budget, (int, float)) or budget < 0:
+            raise ValueError(f"{self.name}: compression.fidelity_budget="
+                             f"{budget!r} must be a number >= 0")
+        weight = c.get("fidelity_weight", 1.0)
+        if not isinstance(weight, (int, float)) or weight < 0:
+            raise ValueError(f"{self.name}: compression.fidelity_weight="
+                             f"{weight!r} must be a number >= 0")
 
     def _validate_churn(self) -> None:
         flash_total = 0

@@ -169,6 +169,9 @@ class SimulationEngine:
         self._tables_key = None          # (cost_version, size, N)
         self._comm_rows: List[List[float]] = []
         self._edge_rows: List[List[float]] = []
+        self._codec_names: Tuple[str, ...] = ("fp32",)
+        self._codec_rows: Optional[List[List[int]]] = None
+        self._legbytes_rows: Optional[List[List[float]]] = None
         self._node_tables_key = None     # (cost_version, N)
         self._fwd_t: List[float] = []
         self._bwd_t: List[float] = []
@@ -182,7 +185,13 @@ class SimulationEngine:
         """Dense comm-only and full-edge Eq. 1 matrices at the profile's
         activation size, lowered to nested lists (plain-float reads in
         the hot loop and the fault path).  Rebuilt only when the
-        network's cost epoch moves."""
+        network's cost epoch moves.
+
+        With a non-trivial wire-codec menu the matrices are already
+        codec-priced (encoded bytes + encode/decode delay baked into
+        each entry by ``FlowNetwork``); this also lowers the per-link
+        chosen-codec indices and encoded-bytes-per-leg tables the event
+        loop charges ``bytes_on_wire`` / ``codec_legs`` against."""
         key = (self.net.cost_version, self.profile.activation_bytes, n_nodes)
         if key != self._tables_key:
             size = self.profile.activation_bytes
@@ -190,6 +199,16 @@ class SimulationEngine:
                 :n_nodes, :n_nodes].tolist()
             self._edge_rows = self.net.edge_matrix(size)[
                 :n_nodes, :n_nodes].tolist()
+            names = self.net.wire_codec_names()
+            self._codec_names = names
+            if len(names) > 1:
+                choice = self.net.wire_codec_matrix(size)[:n_nodes, :n_nodes]
+                ratios = self.net.wire_codec_ratios()
+                self._codec_rows = choice.tolist()
+                self._legbytes_rows = (ratios[choice] * float(size)).tolist()
+            else:
+                self._codec_rows = None
+                self._legbytes_rows = None
             self._tables_key = key
         return self._comm_rows, self._edge_rows
 
@@ -281,6 +300,10 @@ class SimulationEngine:
         timeout = self.timeout
         comm_total = 0.0
         qdepth = 0
+        sends = 0
+        wire_bytes = 0.0
+        codec_rows, legb = self._codec_rows, self._legbytes_rows
+        codec_hist = [0] * len(self._codec_names)
 
         def push(ev: tuple):
             if ev[0] <= boundary:
@@ -289,10 +312,16 @@ class SimulationEngine:
                 far_append(ev)
 
         def send(mb: _MB, frm: int, to: int, t: float):
-            nonlocal comm_total
+            nonlocal comm_total, sends, wire_bytes
             mb.leg += 1
             c = comm[frm][to]
             comm_total += c
+            sends += 1
+            if legb is not None:
+                # leg priced at the link's chosen codec: encoded bytes
+                # on the wire, encode/decode delay already inside c
+                wire_bytes += legb[frm][to]
+                codec_hist[codec_rows[frm][to]] += 1
             push((t + c, next(seq), ARRIVE, mb, to, mb.leg, frm))
             # sender expects a COMPLETE within comm+compute+timeout; a slow
             # (overloaded) peer is indistinguishable from a dead one.  The
@@ -503,6 +532,12 @@ class SimulationEngine:
         m.comm_time = comm_total
         m.queue_depth_peak = qdepth_peak
         m.queue_enqueues = enqueues
+        if legb is not None:
+            m.bytes_on_wire = wire_bytes
+            m.codec_legs = {self._codec_names[k]: codec_hist[k]
+                            for k in range(len(codec_hist)) if codec_hist[k]}
+        else:
+            m.bytes_on_wire = sends * self.profile.activation_bytes
 
         # ---- planning-overrun guard (warn-and-cap) ---------------------
         # the optimality oracle (GWTFPolicy track_optimality) is a

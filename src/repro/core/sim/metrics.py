@@ -74,6 +74,13 @@ class IterationMetrics:
     #   live optimality gap: (this iteration's planned-flow cost) /
     #   (dial MinCostFlow oracle cost on the same alive network); None
     #   unless the policy tracks it (GWTFPolicy(track_optimality=True))
+    bytes_on_wire: float = 0.0    # encoded bytes actually moved by comm
+    #   legs this iteration (= raw activation bytes x the chosen wire
+    #   codec's ratio per leg; equals sends * activation_bytes when the
+    #   network's codec menu is fp32-only)
+    codec_legs: Optional[Dict[str, int]] = None
+    #   chosen-codec histogram over comm legs ({codec name: leg count});
+    #   None when the menu is trivial (every leg fp32)
 
     @property
     def time_per_microbatch(self) -> float:
@@ -94,6 +101,7 @@ _COLUMNS = (
     ("reroutes", lambda m: float(m.reroutes)),
     ("queue_depth_peak", lambda m: float(m.queue_depth_peak)),
     ("queue_enqueues", lambda m: float(m.queue_enqueues)),
+    ("bytes_on_wire", lambda m: m.bytes_on_wire),
 )
 
 

@@ -17,6 +17,7 @@ from repro.core.scenarios.corpus import (GOLDEN_PINNED, get_scenario,
 from repro.core.scenarios.harness import (FUZZ_CHECKS, SCALE_FUZZ_CHECKS,
                                           ScenarioDiscrepancy,
                                           check_capacity_monotonicity,
+                                          check_codec_agreement,
                                           check_flow_equivalence,
                                           check_optimal_consistency,
                                           check_permutation_invariance,
@@ -468,6 +469,14 @@ class TestRuntimeDifferentials:
         # reduced shape: real compute per iteration is the expensive part
         spec = spec.replace(iterations=min(spec.iterations, 4))
         check_sim_runtime_consistency(spec)
+
+    def test_codec_agreement_corpus_scenario(self):
+        """Flow/sim/runtime agree on per-link codec choices and the
+        fp32-only menu is a bit-exact no-op (full cross-layer check,
+        including one real-compute iteration)."""
+        out = check_codec_agreement(get_scenario("geo-wan-compress"))
+        assert out["flow_codec_hist"]           # someone chose a codec
+        assert out["runtime_wire_bytes"] > 0
 
 
 @pytest.mark.scenarios
