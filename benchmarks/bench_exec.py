@@ -47,7 +47,18 @@ only and gates against the committed JSON: it exits non-zero if
   inter-stage boundary transfers) broke fidelity — end-of-run loss
   delta vs the fp32 wire above its ceiling — or stopped compressing
   (encoded bytes reduction below the codec's floor).  Both wire gates
-  are in-run ratios/deltas, so they are host-independent.
+  are in-run ratios/deltas, so they are host-independent, or
+* the **byzantine record** (``byzantine`` key) broke: the same seeded
+  run is trained three ways — clean, with a corrupt-gradient adversary
+  on 1 of 6 relays (>= 10% of the compute fleet, seeded "perturb"
+  noise) and the gradient screen disabled, and with the adversary plus
+  the screen (lower-median norm + leave-one-out cosine test before
+  AdamW aggregation, detection feeding the reputation/quarantine
+  layer).  The gate pins the end-of-run |loss - clean loss| deltas:
+  the defended run must stay below a fixed ceiling while the
+  undefended run exceeds it, and the screen must actually detect the
+  corrupt node (timeline detections > 0, corrupt node quarantined).
+  All three are in-run loss/count comparisons — host-independent.
 
 The int8 store row is reported but never gates.
 """
@@ -88,6 +99,20 @@ WIRE_ROW = (2, 128, 64, 1, 16, 2)      # layers d_model seq mb n_mb stages
 WIRE_CODECS_MEASURED = ("bf16", "int8", "top-k")
 WIRE_LOSS_DELTA_MAX = {"bf16": 0.05, "int8": 0.5, "top-k": 2.5}
 WIRE_BYTES_REDUCTION_MIN = {"bf16": 1.9, "int8": 3.0, "top-k": 6.0}
+
+# Byzantine record: tiny 2-stage topology (6 relays, node 2 corrupt =
+# 1/6 >= 10% of the compute fleet), seeded "perturb" corruption of
+# every contribution whose chain crosses the corrupt node.  The loss
+# ceiling splits the observed deltas (defended ~0.15, undefended
+# ~0.39 on this seeded run) with margin on both sides; all gates
+# compare quantities from the same run, so they are host-independent.
+BYZ_ROW = (2, 32, 16, 1, 4, 2)         # layers d_model seq mb n_mb stages
+BYZ_CORRUPT_NODES = (2,)
+BYZ_MODE = "perturb"
+BYZ_SCALE = 1.0
+BYZ_FAULT_SEED = 7
+BYZ_ITERATIONS = 6
+BYZ_LOSS_DELTA_CEILING = 0.25
 
 
 def _build(label, layers, d_model, seq, mbsz, n_mb, stages):
@@ -257,6 +282,97 @@ def bench_wire(layers=WIRE_ROW[0], d_model=WIRE_ROW[1], seq=WIRE_ROW[2],
         codecs=codecs)
 
 
+def bench_byzantine() -> dict:
+    """The same seeded run trained three ways: clean, corrupt relay
+    with the gradient screen off, corrupt relay with the screen on
+    (auto-enabled; detection feeds the reputation/quarantine layer).
+    Everything reported is a loss/count from within this run, so the
+    smoke gates on it are host-independent."""
+    from repro.configs import get_config
+    from repro.core.flow.graph import geo_distributed_network
+    from repro.core.runtime.trainer import RuntimeTrainer
+    from repro.core.sim.faults import CorruptGradientChurn
+    from repro.data.pipeline import DataConfig, DataNodeShard
+
+    layers, d_model, seq, mbsz, n_mb, stages = BYZ_ROW
+    cfg = dataclasses.replace(
+        get_config("gwtf-llama-300m").reduced(num_layers=layers,
+                                              d_model=d_model),
+        vocab_size=512)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                    batch_size=n_mb * mbsz, microbatch_size=mbsz, seed=3)
+    mbs = DataNodeShard(dc, 0, 1).microbatches()
+
+    def run(corrupt: bool, screen):
+        net = geo_distributed_network(
+            num_stages=stages, relay_capacities=[2] * (3 * stages),
+            num_data_nodes=1, data_capacity=n_mb,
+            rng=np.random.default_rng(SEED))
+        kw = {}
+        if corrupt:
+            kw["churn_model"] = CorruptGradientChurn(
+                list(BYZ_CORRUPT_NODES), mode=BYZ_MODE, scale=BYZ_SCALE,
+                seed=BYZ_FAULT_SEED, known_ids=net.nodes.keys())
+        tr = RuntimeTrainer(cfg, net, lr=1e-3, seed=SEED,
+                            grad_screen=screen, **kw)
+        losses, flagged = [], 0
+        ever_quarantined = set()
+        for _ in range(BYZ_ITERATIONS):
+            r = tr.iteration({0: mbs})
+            losses.append(round(float(r.loss), 6))
+            flagged += r.grads_flagged
+            # the decay rehabilitation lifts the node back over the
+            # quarantine threshold within a few clean iterations, so
+            # quarantine is checked after every commit, not at the end
+            ever_quarantined.update(n for n in BYZ_CORRUPT_NODES
+                                    if net.quarantined(n))
+        counts = tr.timeline.counts()
+        detections = sum(c for (_, fault, kind), c in counts.items()
+                         if fault == "corrupt_gradient"
+                         and kind == "detection")
+        return dict(losses=losses, flagged=flagged, detections=detections,
+                    quarantined=sorted(ever_quarantined),
+                    reputation={n: round(net.reputation(n), 4)
+                                for n in BYZ_CORRUPT_NODES})
+
+    clean = run(False, None)
+    undefended = run(True, False)
+    defended = run(True, None)
+    return dict(
+        layers=layers, d_model=d_model, seq_len=seq, microbatch=mbsz,
+        num_microbatches=n_mb, stages=stages, iterations=BYZ_ITERATIONS,
+        corrupt_nodes=list(BYZ_CORRUPT_NODES), mode=BYZ_MODE,
+        scale=BYZ_SCALE, fault_seed=BYZ_FAULT_SEED,
+        corrupt_fraction=round(len(BYZ_CORRUPT_NODES) / (3 * stages), 3),
+        loss_ceiling=BYZ_LOSS_DELTA_CEILING,
+        losses_clean=clean["losses"],
+        losses_undefended=undefended["losses"],
+        losses_defended=defended["losses"],
+        loss_delta_undefended=round(
+            abs(undefended["losses"][-1] - clean["losses"][-1]), 6),
+        loss_delta_defended=round(
+            abs(defended["losses"][-1] - clean["losses"][-1]), 6),
+        grads_flagged=(defended["flagged"], undefended["flagged"],
+                       clean["flagged"]),
+        detections=defended["detections"],
+        quarantined_during_run=defended["quarantined"],
+        corrupt_reputation_final=defended["reputation"])
+
+
+def print_byzantine(b: dict):
+    print(f"  byzantine       L{b['layers']} d{b['d_model']} "
+          f"seq{b['seq_len']:4d} S{b['stages']}: corrupt nodes "
+          f"{b['corrupt_nodes']} ({100 * b['corrupt_fraction']:.0f}% of "
+          f"relays, {b['mode']} x{b['scale']})")
+    print(f"  {'':15s} end-loss delta vs clean: defended "
+          f"{b['loss_delta_defended']:.4f} / undefended "
+          f"{b['loss_delta_undefended']:.4f} (ceiling "
+          f"{b['loss_ceiling']})  detections={b['detections']} "
+          f"flagged={b['grads_flagged'][0]} "
+          f"quarantined={b['quarantined_during_run']} "
+          f"final rep={b['corrupt_reputation_final']}")
+
+
 def print_wire(w: dict):
     print(f"  wire codecs     L{w['layers']} d{w['d_model']} "
           f"seq{w['seq_len']:4d} S{w['stages']}: fp32 "
@@ -353,6 +469,27 @@ def smoke(committed_path: Path) -> int:
                 f"{c['wire_bytes_reduction']:.2f}x < "
                 f"{WIRE_BYTES_REDUCTION_MIN[codec]}x — codec not applied "
                 f"to the boundary transfers")
+    byz = bench_byzantine()
+    print_byzantine(byz)
+    # all three byzantine gates compare quantities from the same run —
+    # host-independent
+    if byz["loss_delta_defended"] >= BYZ_LOSS_DELTA_CEILING:
+        failures.append(
+            f"byzantine: defended end-loss delta "
+            f"{byz['loss_delta_defended']:.4f} >= ceiling "
+            f"{BYZ_LOSS_DELTA_CEILING} — the gradient screen no longer "
+            f"contains a 10% corrupt fleet")
+    if byz["loss_delta_undefended"] <= BYZ_LOSS_DELTA_CEILING:
+        failures.append(
+            f"byzantine: undefended end-loss delta "
+            f"{byz['loss_delta_undefended']:.4f} <= ceiling "
+            f"{BYZ_LOSS_DELTA_CEILING} — the adversary stopped hurting, "
+            f"the defended gate is vacuous")
+    if byz["detections"] == 0 or not byz["quarantined_during_run"]:
+        failures.append(
+            f"byzantine: screen detections={byz['detections']}, "
+            f"quarantined={byz['quarantined_during_run']} — detection or "
+            f"the reputation/quarantine hand-off broke")
     if failures:
         print("SMOKE FAILURES:")
         for f in failures:
@@ -383,6 +520,8 @@ def main(argv=None) -> int:
         print_row(r)
     wire = bench_wire()
     print_wire(wire)
+    byz = bench_byzantine()
+    print_byzantine(byz)
     recovery = bench_recovery()
     print(f"-- recovery: residual replay "
           f"{recovery['stage_replay_residual_ms']:.1f} ms vs remat replay "
@@ -406,8 +545,10 @@ def main(argv=None) -> int:
                    "seeded run; wire = forced inter-stage wire codecs "
                    "(bf16/int8/top-k on boundary-chunk transfers, forward "
                    "path only) with per-codec encoded bytes and end-of-run "
-                   "loss delta vs the exact fp32 wire; recovery = "
-                   "per-crashed-microbatch repair "
+                   "loss delta vs the exact fp32 wire; byzantine = the "
+                   "same seeded run clean / corrupt+screen-off / "
+                   "corrupt+screen-on with end-of-run loss deltas vs "
+                   "clean; recovery = per-crashed-microbatch repair "
                    "cost.  Measured on a 1-core CPU host: per-stage "
                    "dispatch chunking (auto_chunk, <=4 microbatches) "
                    "keeps residuals cache-hot, so absolute speedups vs "
@@ -417,6 +558,7 @@ def main(argv=None) -> int:
         results=results,
         smoke_results=smoke_results,
         wire=wire,
+        byzantine=byz,
         recovery=recovery)
     args.out.write_text(json.dumps(out, indent=2) + "\n")
     print(f"wrote {args.out}")

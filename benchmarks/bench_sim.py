@@ -37,12 +37,26 @@ WAN-row throughput gain (completed microbatches per simulated
 second).  Both are ratios of simulated quantities, so the smoke gate
 on them is host-independent.
 
+An **adversarial straggler record** (``adversarial`` key in the JSON)
+runs the same seeded iterations twice against a 10%-straggler
+adversary (one pathologically slow relay per stage, slowdowns far past
+the deadline-catchable threshold): once with the engine's deadline
+defense (hedged re-dispatch at the healthy-estimate deadline) and once
+with ``deadline_defense=False`` (the sender waits out the slowed
+compute).  It reports ``defense_throughput_gain`` — defended vs
+undefended completed microbatches per *simulated* second — plus the
+defended run's straggler detection/repair counts from the shared
+``FaultTimeline``.  The gain is a ratio of simulated quantities, so
+the smoke gate on it is host-independent.
+
 Results go to ``BENCH_sim.json`` at the repo root.  ``--smoke`` runs
 the small size only and compares against the committed JSON: it exits
 non-zero if the engine's events/sec regressed by more than 2x
 (host-normalized by the reference loop's events/sec measured in the
-same run), if GWTF equivalence broke, or if the WAN record's
-``bytes_on_wire_reduction`` fell below the committed floor.
+same run), if GWTF equivalence broke, if the WAN record's
+``bytes_on_wire_reduction`` fell below the committed floor, or if the
+adversarial record's defense gain fell below its floor (2x, or the
+committed gain if lower).
 Numpy-only on purpose — the CI smoke job stays light.
 """
 from __future__ import annotations
@@ -57,6 +71,7 @@ import numpy as np
 
 from repro.core.flow.graph import geo_distributed_network
 from repro.core.sim import TrainingSimulator
+from repro.core.sim.faults import StragglerChurn
 from repro.core.sim.reference import ReferenceTrainingSimulator
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
@@ -81,6 +96,16 @@ WAN_MAX_BANDWIDTH = 1e7
 WAN_MENU = ("fp32", "bf16", "int8", "top-k")
 WAN_FIDELITY_BUDGET = 0.1
 WAN_BYTES_REDUCTION_FLOOR = 3.0
+
+# Adversarial straggler record: one slow relay per stage (10% of the
+# 60-relay topology), slowdown chosen so the slowed compute blows far
+# past the healthy-estimate deadline (compute floor 0.5s x (400-1)
+# >> 30s timeout) — i.e. squarely in the deadline-catchable regime.
+# The smoke gate's throughput gain is a ratio of *simulated* seconds
+# and therefore host-independent.
+ADV_RELAYS = 60
+ADV_SLOWDOWN = 400.0
+ADV_GAIN_FLOOR = 2.0
 
 
 def build_network(relays: int, seed: int = SEED):
@@ -240,6 +265,62 @@ def print_wan(rec: dict):
           f"({rec['sim_throughput_gain']:.2f}x)  legs={rec['codec_legs']}")
 
 
+def bench_adversarial(relays: int = ADV_RELAYS, seed: int = SEED) -> dict:
+    """Deadline-defended vs undefended runs of the same seeded
+    iterations against a 10% straggler adversary; the reported gain is
+    a ratio of simulated quantities (completed microbatches, simulated
+    seconds), so it is host-independent."""
+    per_stage = relays // STAGES
+    slow_nodes = [DATA_NODES + s * per_stage for s in range(STAGES)]
+
+    def run(defended: bool) -> dict:
+        net = build_network(relays, seed)
+        model = StragglerChurn({n: ADV_SLOWDOWN for n in slow_nodes},
+                               known_ids=net.nodes.keys())
+        sim = TrainingSimulator(net, scheduler="gwtf", churn_model=model,
+                                rng=np.random.default_rng(seed + 11),
+                                deadline_defense=defended)
+        ms = sim.run(ITERATIONS)
+        counts = sim.engine.timeline.counts()
+        detections = sum(c for (_, fault, kind), c in counts.items()
+                         if fault == "straggler" and kind == "detection")
+        repairs = sum(c for (_, fault, kind), c in counts.items()
+                      if fault == "straggler" and kind == "repair")
+        return dict(completed=sum(m.completed for m in ms),
+                    duration=sum(m.duration for m in ms),
+                    timeouts=sum(m.timeouts for m in ms),
+                    retries=sum(m.retries for m in ms),
+                    detections=detections, repairs=repairs)
+
+    defended, undefended = run(True), run(False)
+    def_tp = defended["completed"] / defended["duration"]
+    undef_tp = undefended["completed"] / undefended["duration"]
+    return dict(
+        relays=relays, stages=STAGES, iterations=ITERATIONS,
+        straggler_nodes=slow_nodes, slowdown=ADV_SLOWDOWN,
+        completed=(defended["completed"], undefended["completed"]),
+        duration=(round(defended["duration"], 2),
+                  round(undefended["duration"], 2)),
+        timeouts=(defended["timeouts"], undefended["timeouts"]),
+        retries=(defended["retries"], undefended["retries"]),
+        straggler_detections=defended["detections"],
+        straggler_repairs=defended["repairs"],
+        mb_per_sim_sec_defended=round(def_tp, 4),
+        mb_per_sim_sec_undefended=round(undef_tp, 4),
+        defense_throughput_gain=round(def_tp / undef_tp, 2))
+
+
+def print_adversarial(rec: dict):
+    print(f"  adversarial relays={rec['relays']:5d} "
+          f"({len(rec['straggler_nodes'])} stragglers x"
+          f"{rec['slowdown']:.0f}): throughput "
+          f"{rec['mb_per_sim_sec_undefended']:.4f} -> "
+          f"{rec['mb_per_sim_sec_defended']:.4f} mb/sim-s "
+          f"({rec['defense_throughput_gain']:.2f}x defended)  "
+          f"detections={rec['straggler_detections']} "
+          f"repairs={rec['straggler_repairs']}")
+
+
 def smoke(committed_path: Path) -> int:
     """CI gate: fail (exit 1) if events/sec regressed > 2x vs committed
     (host-normalized via the reference loop), GWTF equivalence broke, or
@@ -320,6 +401,27 @@ def smoke(committed_path: Path) -> int:
         failures.append(
             f"wan: codec pricing made simulated throughput worse "
             f"({wan['sim_throughput_gain']:.2f}x)")
+    adv = bench_adversarial()
+    print_adversarial(adv)
+    if committed_path.exists():
+        committed_adv = json.loads(committed_path.read_text()).get("adversarial")
+    else:
+        committed_adv = None
+    adv_floor = ADV_GAIN_FLOOR
+    if committed_adv is not None:
+        # never gate below what the committed record actually achieved
+        adv_floor = min(adv_floor, committed_adv["defense_throughput_gain"])
+    print(f"    gate[adversarial]: defense_throughput_gain "
+          f"{adv['defense_throughput_gain']:.2f}x vs floor "
+          f"{adv_floor:.2f}x (simulated ratio, host-independent)")
+    if adv["defense_throughput_gain"] < adv_floor:
+        failures.append(
+            f"adversarial: defense_throughput_gain "
+            f"{adv['defense_throughput_gain']:.2f}x < floor {adv_floor:.2f}x")
+    if adv["straggler_detections"] == 0:
+        failures.append(
+            "adversarial: deadline defense produced zero straggler "
+            "detections — the defended run never caught a straggler")
     if failures:
         print("SMOKE FAILURES:")
         for f in failures:
@@ -353,6 +455,8 @@ def main(argv=None) -> int:
         results.append(rec)
     wan = bench_wan()
     print_wan(wan)
+    adv = bench_adversarial()
+    print_adversarial(adv)
     out = dict(
         meta=dict(stages=STAGES, data_nodes=DATA_NODES,
                   data_capacity=DATA_CAPACITY, churn=CHURN,
@@ -362,8 +466,11 @@ def main(argv=None) -> int:
                          "reference = repro.core.sim.reference on "
                          "identical seeded iterations; wan = fp32-priced "
                          "vs codec-priced bytes on wire and simulated "
-                         "throughput on a bandwidth-starved topology"),
-        results=results, wan=wan)
+                         "throughput on a bandwidth-starved topology; "
+                         "adversarial = deadline-defended vs undefended "
+                         "simulated throughput under a 10% straggler "
+                         "adversary"),
+        results=results, wan=wan, adversarial=adv)
     args.out.write_text(json.dumps(out, indent=2) + "\n")
     print(f"wrote {args.out}")
     return 0

@@ -14,9 +14,22 @@ harder scenarios (FusionLLM-style geo-distributed failure modes):
   location mid-run (plus background Bernoulli churn) so both
   schedulers face the *identical* fault sequence.
 
+Two beyond-fail-stop scenarios demo the adversarial fault models and
+the detect–quarantine–reroute layer (these compare the GWTF engine
+*defended vs undefended* instead of GWTF vs SWARM):
+
+* ``straggler`` — pathologically slow and hung relays: the deadline
+  defense hedges at the healthy-estimate deadline and reroutes, the
+  undefended engine waits the slowdown out;
+* ``byzantine`` — corrupt-gradient relays: the detection screen feeds
+  the reputation layer, which quarantines the corrupt relay and plans
+  around it (the simulator carries no real gradients, so this shows
+  the detection/quarantine plumbing; the real gradient math lives in
+  the runtime trainer and `BENCH_exec.json`'s byzantine record).
+
     PYTHONPATH=src python examples/churn_recovery.py               # all
     PYTHONPATH=src python examples/churn_recovery.py bernoulli
-    PYTHONPATH=src python examples/churn_recovery.py regional trace
+    PYTHONPATH=src python examples/churn_recovery.py straggler byzantine
 """
 import sys
 
@@ -24,9 +37,10 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.flow.graph import geo_distributed_network
-from repro.core.simulator import (ComposedChurn, BernoulliChurn, ModelProfile,
-                                  RegionalOutageChurn, TraceChurn,
-                                  TrainingSimulator, summarize)
+from repro.core.simulator import (ComposedChurn, BernoulliChurn,
+                                  CorruptGradientChurn, ModelProfile,
+                                  RegionalOutageChurn, StragglerChurn,
+                                  TraceChurn, TrainingSimulator, summarize)
 
 
 def make_setup(seed: int = 0):
@@ -105,10 +119,76 @@ def scenario_trace():
             "+ 5% background churn", churn_model=model)
 
 
+def _run_defense(model_factory, *, seed: int = 0, iterations: int = 10,
+                 **sim_kw):
+    net, prof = make_setup(seed)
+    sim = TrainingSimulator(net, scheduler="gwtf", profile=prof,
+                            churn_model=model_factory(net),
+                            rng=np.random.default_rng(seed + 7), **sim_kw)
+    ms = sim.run(iterations)
+    detections = sum(c for (_, _f, kind), c
+                     in sim.engine.timeline.counts().items()
+                     if kind == "detection")
+    return {
+        "duration (min)": sum(m.duration for m in ms) / 60,
+        "throughput": (sum(m.completed for m in ms)
+                       / max(1e-9, sum(m.duration for m in ms))),
+        "timeouts": sum(m.timeouts for m in ms),
+        "reroutes": sum(m.reroutes for m in ms),
+        "detections": detections,
+    }, net
+
+
+def _compare_defense(title: str, model_factory, defended_kw, undefended_kw):
+    print(f"\n=== {title} ===")
+    d, d_net = _run_defense(model_factory, **defended_kw)
+    u, _ = _run_defense(model_factory, **undefended_kw)
+    for k in d:
+        print(f"  {k:18s} defended={d[k]:8.2f}  undefended={u[k]:8.2f}")
+    if u["throughput"]:
+        print(f"  deadline/quarantine defense throughput gain: "
+              f"{d['throughput'] / u['throughput']:.1f}x")
+    return d, u, d_net
+
+
+def scenario_straggler():
+    # one hung relay plus one pathological slowdown, sized from the
+    # profile so the slowed compute blows the healthy-estimate deadline
+    # (timeout 30s) — i.e. both are deadline-catchable
+    def model(net):
+        relays = [n.id for n in net.nodes.values() if not n.is_data]
+        factor = 2.0 * (30.0 / max(1e-6, min(
+            net.nodes[r].compute_cost for r in relays)) + 1.0)
+        return StragglerChurn({relays[1]: factor}, hangs=[relays[0]],
+                              known_ids=net.nodes.keys())
+    _compare_defense(
+        "stragglers: 1 hung + 1 pathologically slow relay",
+        model, dict(deadline_defense=True), dict(deadline_defense=False))
+
+
+def scenario_byzantine():
+    # one corrupt relay; the (simulated) screen detects contributions
+    # whose chains cross it, reports drop its reputation below the
+    # quarantine threshold, and the next plan routes around it
+    def model(net):
+        victim = net.stage_nodes(1)[0].id
+        return CorruptGradientChurn([victim], mode="perturb", scale=1.0,
+                                    seed=7, known_ids=net.nodes.keys())
+    d, u, net = _compare_defense(
+        "byzantine: 1 corrupt-gradient relay (perturb x1.0)",
+        model, dict(corrupt_screen=True), dict(corrupt_screen=False))
+    victim = net.stage_nodes(1)[0].id
+    print(f"  corrupt relay {victim}: reputation "
+          f"{net.reputation(victim):.3f}"
+          f"{'  [quarantined]' if net.quarantined(victim) else ''}")
+
+
 SCENARIOS = {
     "bernoulli": scenario_bernoulli,
     "regional": scenario_regional,
     "trace": scenario_trace,
+    "straggler": scenario_straggler,
+    "byzantine": scenario_byzantine,
 }
 
 

@@ -37,14 +37,48 @@ def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any, int]:
 
 
 def save(path: str, tree, step: int = 0, meta: dict | None = None):
+    """Atomically write ``<path>.npz`` (+ ``.json`` sidecar).
+
+    Both files go through a same-directory temp file + ``os.replace``,
+    so a crash mid-save (the fail-stop *and* the beyond-fail-stop
+    churn models both kill nodes at arbitrary times) can never leave a
+    truncated archive under the final name — a joining node
+    bootstrapping from this checkpoint (Sec. V-E) either sees the old
+    complete checkpoint or the new complete one.  The npz lands before
+    the sidecar, so the sidecar never describes an archive that does
+    not exist yet; a stale sidecar over a new archive fails loudly in
+    `restore` via the leaf-count cross-check.
+    """
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat, treedef, num_leaves = _flatten(tree)
     flat["__step"] = np.asarray(step)
-    np.savez(path, **flat)
+    # np.savez appends ".npz" to string paths but not to file objects;
+    # writing through a file object keeps the temp name exact
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    tmp = npz_path + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, npz_path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
     sidecar = {"treedef": str(treedef), "num_leaves": num_leaves,
                "step": step, **(meta or {})}
-    with open(path + ".json", "w") as f:
-        json.dump(sidecar, f)
+    tmp_json = npz_path + ".json.tmp"
+    try:
+        with open(tmp_json, "w") as f:
+            json.dump(sidecar, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp_json, npz_path + ".json")
+    except BaseException:
+        if os.path.exists(tmp_json):
+            os.unlink(tmp_json)
+        raise
 
 
 def restore(path: str, like) -> Tuple[Any, int]:

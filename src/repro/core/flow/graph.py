@@ -29,6 +29,27 @@ argmin (which codec each link chose).  The default menu ``("fp32",)``
 takes a short-circuit path whose float arithmetic is *bit-identical* to
 the pre-codec implementation; that is the in-engine equality oracle.
 
+Reputation-aware pricing
+------------------------
+Beyond fail-stop faults, the defense layer prices *distrust* into the
+same Eq. 1 matrices: each node carries a reputation in (0, 1] (default
+1.0), and every edge INTO node j pays an extra
+
+    reputation_weight * (1/rep_j - 1)
+
+on ``cost_matrix()``/``edge_matrix()``/``edge_cost()`` — the matrices
+the planner and reroute policy consume — but NOT on
+``comm_matrix()``/``comm_cost()``, which model transfer physics (a
+suspected node does not move bytes slower; the planner just avoids
+it).  ``report_fault`` multiplicatively drops a node's reputation
+(quarantine: the penalty dwarfs typical edge costs so flow routes
+around it), ``decay_reputations`` relaxes everyone back toward 1.0
+(rehabilitation), and when every reputation returns to ~1.0 storage
+snaps back to the trivial ``None`` state whose arithmetic — and cached
+matrix *objects* — are bit-identical to the reputation-free
+implementation.  Reputation survives ``kill_node``/rejoin: quarantine
+is about trust, not liveness.
+
 Scale notes
 -----------
 ``edge_cost``/``comm_cost`` are the innermost calls of both the protocol
@@ -95,6 +116,19 @@ WIRE_CODECS: Dict[str, LinkCodec] = {
 # of sizes per epoch; 16 is generous).
 _WIRE_CACHE_MAX = 16
 
+# Reputation defaults for the detect-quarantine-reroute defense layer.
+# A fault report multiplies reputation by REPORT_DROP (floored), each
+# decay step closes RECOVERY_RATE of the gap back to 1.0, and a node is
+# "quarantined" while its reputation sits below QUARANTINE_THRESHOLD.
+# With drop 0.2 the edge penalty is reputation_weight*(1/0.2-1) = 4x
+# the weight — at the default weight of 50 that is ~200s-equivalent,
+# dominating typical Eq. 1 edge costs (~10-40s) so planning routes
+# around the node until decay rehabilitates it.
+REPORT_DROP = 0.2
+REPUTATION_FLOOR = 1e-3
+RECOVERY_RATE = 0.4
+QUARANTINE_THRESHOLD = 0.5
+
 
 @dataclass
 class Node:
@@ -126,6 +160,8 @@ class FlowNetwork:
     codec_menu: Tuple[str, ...] = ("fp32",)   # WIRE_CODECS names offered
     fidelity_budget: float = 0.0  # max admissible fidelity_penalty
     fidelity_weight: float = 1.0  # seconds-equivalent per unit penalty
+    reputation_weight: float = 50.0  # seconds-equivalent per unit of
+    #   distrust (1/rep - 1) on edges into a suspected node
 
     # ------------------------------------------------------------------
     # Cached Eq. 1 cost model
@@ -137,7 +173,8 @@ class FlowNetwork:
         # caches; in-place element writes still require an explicit
         # invalidate_costs().
         if name in ("latency", "bandwidth", "activation_size",
-                    "codec_menu", "fidelity_budget", "fidelity_weight"):
+                    "codec_menu", "fidelity_budget", "fidelity_weight",
+                    "reputation_weight"):
             object.__setattr__(self, "_cost_version",
                                getattr(self, "_cost_version", 0) + 1)
 
@@ -204,6 +241,110 @@ class FlowNetwork:
         return (len(adm) == 1 and adm[0].ratio == 1.0
                 and adm[0].coder_rate == 0.0
                 and adm[0].fidelity_penalty == 0.0)
+
+    # -- reputation (detect-quarantine-reroute defense layer) -----------
+    def _reputation_trivial(self) -> bool:
+        """True when every node is fully trusted (storage is ``None``)
+        and pricing reduces to the exact reputation-free arithmetic."""
+        return getattr(self, "_reputation", None) is None
+
+    def reputation_active(self) -> bool:
+        """True while any node's reputation is below 1.0."""
+        return not self._reputation_trivial()
+
+    def _rep_array(self) -> np.ndarray:
+        """Materialize (and grow) the reputation vector for mutation."""
+        n = (max(self.nodes) + 1) if self.nodes else 0
+        rep = getattr(self, "_reputation", None)
+        if rep is None:
+            rep = np.ones(n)
+        elif rep.shape[0] < n:
+            grown = np.ones(n)          # joiners start fully trusted
+            grown[:rep.shape[0]] = rep
+            rep = grown
+        self._reputation = rep
+        return rep
+
+    def reputation(self, nid: int) -> float:
+        rep = getattr(self, "_reputation", None)
+        if rep is None or nid >= rep.shape[0]:
+            return 1.0
+        return float(rep[nid])
+
+    def quarantined(self, nid: int) -> bool:
+        """True while planning actively routes around ``nid``."""
+        return self.reputation(nid) < QUARANTINE_THRESHOLD
+
+    def set_reputation(self, nid: int, value: float):
+        """Pin a node's reputation directly (tests / manual override)."""
+        if not 0.0 < value <= 1.0:
+            raise ValueError(f"reputation must be in (0, 1], got {value}")
+        rep = self._rep_array()
+        rep[nid] = value
+        self._maybe_snap_trivial()
+        self.invalidate_costs()
+
+    def report_fault(self, nid: int, *, drop: float = REPORT_DROP):
+        """Multiplicatively drop ``nid``'s reputation on a detection.
+
+        Order-independent within an iteration (multiplication commutes);
+        the engine applies decay first, then the iteration's reports, so
+        fresh detections carry the full penalty into the next plan.
+        """
+        rep = self._rep_array()
+        rep[nid] = max(REPUTATION_FLOOR, float(rep[nid]) * drop)
+        self.invalidate_costs()
+
+    def decay_reputations(self, *, rate: float = RECOVERY_RATE):
+        """Relax all reputations toward 1.0 (rehabilitation).
+
+        No-op (and no cache-version bump) in the trivial state, so runs
+        that never report a fault keep their exact cache epochs.  When
+        the worst deficit decays below 1e-9 storage snaps back to
+        ``None`` and pricing returns to the bit-identical trivial path.
+        """
+        rep = getattr(self, "_reputation", None)
+        if rep is None:
+            return
+        self._reputation = rep + rate * (1.0 - rep)
+        self._maybe_snap_trivial()
+        self.invalidate_costs()
+
+    def _maybe_snap_trivial(self):
+        rep = getattr(self, "_reputation", None)
+        if rep is not None and float(np.max(1.0 - rep)) < 1e-9:
+            self._reputation = None
+
+    def _rep_penalty(self, cc: dict) -> Optional[np.ndarray]:
+        """Per-destination penalty vector ``w*(1/rep - 1)``, or ``None``
+        in the trivial state.  Cached per cost-cache epoch (reputation
+        mutators bump the version)."""
+        rep = getattr(self, "_reputation", None)
+        if rep is None:
+            return None
+        cached = getattr(self, "_rep_pen", None)
+        if cached is not None and cached[0] == cc["version"]:
+            return cached[1]
+        n = cc["lat_avg"].shape[0]
+        r = np.ones(n)
+        m = min(n, rep.shape[0])
+        r[:m] = rep[:m]
+        vec = self.reputation_weight * (1.0 / r - 1.0)
+        self._rep_pen = (cc["version"], vec)
+        return vec
+
+    def _cost_with_rep(self, cc: dict) -> np.ndarray:
+        """``cc["cost"]`` plus the reputation penalty, epoch-cached;
+        returns the untouched legacy object in the trivial state."""
+        pen = self._rep_penalty(cc)
+        if pen is None:
+            return cc["cost"]
+        cached = getattr(self, "_cost_rep", None)
+        if cached is not None and cached[0] == cc["version"]:
+            return cached[1]
+        mat = cc["cost"] + pen[None, :]
+        self._cost_rep = (cc["version"], mat)
+        return mat
 
     def wire_codec_names(self) -> Tuple[str, ...]:
         """Names indexing ``wire_codec_matrix`` entries (menu order)."""
@@ -276,11 +417,12 @@ class FlowNetwork:
 
         Cached; treat as read-only.  ``d(i, j)`` is ``cost_matrix()[i, j]``.
         With a non-trivial codec menu each entry is priced at that
-        link's best admissible codec.
+        link's best admissible codec; with active reputations each
+        column j additionally pays ``reputation_weight*(1/rep_j - 1)``.
         """
         cc = self._cost_cache()
         if self._wire_trivial():
-            return cc["cost"]
+            return self._cost_with_rep(cc)
         return self.edge_matrix(self.activation_size)
 
     def comm_matrix(self, size: Optional[float] = None) -> np.ndarray:
@@ -305,9 +447,10 @@ class FlowNetwork:
         per-epoch size dict; treat as read-only.
         """
         cc = self._cost_cache()
+        pen = self._rep_penalty(cc)
         if self._wire_trivial():
             if size is None:
-                return cc["cost"]
+                return self._cost_with_rep(cc)
             key = float(size)
             cache = getattr(self, "_edge_m", None)
             if cache is None or cache[0] != cc["version"]:
@@ -317,6 +460,10 @@ class FlowNetwork:
             if mat is None:
                 mat = (cc["comp_pair"] + cc["lat_avg"]
                        + 2.0 * float(size) / cc["bw_sum"])
+                if pen is not None:
+                    # safe to fold into the cached entry: reputation
+                    # mutators bump the version, starting a new epoch
+                    mat = mat + pen[None, :]
                 if len(cache[1]) >= _WIRE_CACHE_MAX:
                     cache[1].clear()
                 cache[1][key] = mat
@@ -333,6 +480,8 @@ class FlowNetwork:
         mat = cache[1].get(key)
         if mat is None:
             mat = cc["comp_pair"] + self._wire_tables(cc, key)[0]
+            if pen is not None:
+                mat = mat + pen[None, :]
             if len(cache[1]) >= _WIRE_CACHE_MAX:
                 cache[1].clear()
             cache[1][key] = mat
@@ -342,10 +491,16 @@ class FlowNetwork:
         """Eq. 1 cost of moving one microbatch between nodes i and j."""
         cc = self._cost_cache()
         if self._wire_trivial():
+            pen = self._rep_penalty(cc)
             if size is None:
-                return float(cc["cost"][i, j])
-            return float(cc["comp_pair"][i, j] + cc["lat_avg"][i, j]
-                         + 2.0 * size / cc["bw_sum"][i, j])
+                if pen is None:
+                    return float(cc["cost"][i, j])
+                return float(self._cost_with_rep(cc)[i, j])
+            val = float(cc["comp_pair"][i, j] + cc["lat_avg"][i, j]
+                        + 2.0 * size / cc["bw_sum"][i, j])
+            if pen is not None:
+                val = float(val + pen[j])
+            return val
         return float(self.edge_matrix(size)[i, j])
 
     def comm_cost(self, i: int, j: int, size: Optional[float] = None) -> float:

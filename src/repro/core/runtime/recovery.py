@@ -48,6 +48,25 @@ Repair semantics (paper Sec. V-D, now real)
   remaining relays are still expected alive (``requeued``, reported as
   part of ``rerouted``).  Only when no such chain exists is the
   microbatch dropped.
+
+Beyond fail-stop: the deadline defense
+--------------------------------------
+When the churn model publishes an :class:`~repro.core.sim.faults.AdversarialPlan`
+(hung nodes, deadline-catchable stragglers), ``resolve`` mirrors the
+simulator's deadline-triggered re-dispatch: a visit to a hung relay —
+or to a straggler slow enough that the healthy-estimate deadline is
+guaranteed to fire (``leg_time * (factor - 1) > timeout``, the same
+predicate the sim engine applies) — is detected at the sender's
+timeout, recorded on the shared :class:`~repro.core.sim.timeline.FaultTimeline`,
+and re-dispatched through the same substitute/requeue machinery as a
+crash (counted in ``Resolution.deadline_requeues``).  The policy's
+view marks hung/catchable nodes crashed-at-0 (exactly like the sim
+engine) so recovery never substitutes onto one.  With
+``deadline_defense=False`` a hung relay wedges its microbatch for the
+whole iteration (dropped), and a slow one is simply waited out — the
+undefended baseline the adversarial benchmarks compare against.
+Detected nodes are reported in ``Resolution.rep_reports`` for the
+trainer's reputation update (quarantine).
 """
 from __future__ import annotations
 
@@ -55,7 +74,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.flow.graph import FlowNetwork
+from repro.core.sim.faults import AdversarialPlan
 from repro.core.sim.policies import FaultView, RoutingPolicy
+from repro.core.sim.timeline import FaultTimeline
 
 
 @dataclass
@@ -94,6 +115,10 @@ class Resolution:
     fwd_recomputes: int = 0
     bwd_replays: int = 0
     events: List[RepairEvent] = field(default_factory=list)
+    deadline_requeues: int = 0    # subset of rerouted: re-dispatches fired
+    #   by the sender's deadline on a hung/straggling (alive) relay
+    rep_reports: List[int] = field(default_factory=list)
+    #   detection-attributed nodes for the reputation update
 
 
 class _MBView:
@@ -113,18 +138,28 @@ class RecoveryManager:
     """Resolves one iteration's crashes against the routing policy."""
 
     def __init__(self, net: FlowNetwork, policy: RoutingPolicy, *,
-                 max_retries: int = 2):
+                 max_retries: int = 2, timeout: float = 30.0,
+                 deadline_defense: bool = True):
         self.net = net
         self.policy = policy
         self.max_retries = max_retries
+        # sender-side deadline window (seconds, same default as the sim
+        # engine): drives the catchable-straggler predicate below
+        self.timeout = timeout
+        self.deadline_defense = deadline_defense
 
     # ------------------------------------------------------------------
-    def build_view(self, crash_frac: Dict[int, float]) -> FaultView:
+    def build_view(self, crash_frac: Dict[int, float],
+                   blocked: Sequence[int] = ()) -> FaultView:
         """A ``FaultView`` over the real network on the normalized
         iteration clock: ``crash[nid]`` is the crash moment in [0, 1]
         (inf for survivors); the runtime has no capacity queues, so
         ``busy``/``queues`` are empty and the policy's load penalty
-        vanishes."""
+        vanishes.  ``blocked`` nodes (hung / deadline-catchable
+        stragglers) are marked crashed-at-0 in the view — the policy's
+        *opinion* only, not the engine's liveness tables — so recovery
+        never substitutes a microbatch onto one (the sim engine applies
+        the identical view trick)."""
         net = self.net
         N = (max(net.nodes) + 1) if net.nodes else 0
         view = FaultView()
@@ -139,6 +174,9 @@ class RecoveryManager:
         crash = [float("inf")] * N
         for nid, f in crash_frac.items():
             crash[nid] = f
+        for nid in blocked:
+            if nid < N:
+                crash[nid] = 0.0
         view.crash = crash
         view.busy = [0] * N
         view.queues = [()] * N
@@ -160,22 +198,52 @@ class RecoveryManager:
 
     # ------------------------------------------------------------------
     def resolve(self, jobs: Sequence[Job], chains: Sequence[Sequence[int]],
-                crash_times: Dict[int, float], horizon: float) -> Resolution:
+                crash_times: Dict[int, float], horizon: float,
+                adv: Optional[AdversarialPlan] = None,
+                timeline: Optional[FaultTimeline] = None,
+                iteration: int = 0) -> Resolution:
         """Sweep the iteration's visits through the crash plan.
 
         ``chains`` is the full planned chain set (assigned + spare);
         requeue candidates come from it.  Pure bookkeeping: the numeric
         pass afterwards executes exactly the completed set plus the
-        recorded lost-work dispatches.
+        recorded lost-work dispatches.  ``adv`` (when the churn model
+        publishes one) adds hung/straggling relays to the sweep;
+        detections and repairs land on ``timeline`` at ``iteration``.
         """
         S = self.net.num_stages
         frac = {nid: max(0.0, min(1.0, t / horizon))
                 for nid, t in crash_times.items()}
-        view = self.build_view(frac)
         res = Resolution()
         self._frac = frac
-        self._view = view
         self._chains = [list(c) for c in chains]
+        self._timeline = timeline
+        self._iteration = iteration
+        # adversarial stall sets, per direction.  Hung nodes stall any
+        # visit; a straggler stalls a visit only when the slowed leg is
+        # guaranteed past the healthy-estimate deadline — the sim
+        # engine's catchability predicate, on this layer's own
+        # fwd_t/bwd_t tables.
+        self._hung = frozenset(adv.hung) if adv is not None else frozenset()
+        slow = adv.slow if adv is not None else {}
+        catch_f, catch_b = set(), set()
+        for nid, f in slow.items():
+            node = self.net.nodes.get(nid)
+            if node is None:
+                continue
+            leg = max(0.05, node.compute_cost)
+            if leg * (f - 1.0) > self.timeout:
+                catch_f.add(nid)
+            if 2.0 * leg * (f - 1.0) > self.timeout:
+                catch_b.add(nid)
+        self._stall_fwd = self._hung | frozenset(catch_f)
+        self._stall_bwd = self._hung | frozenset(catch_b)
+        # the policy's view blocks exactly the nodes the *forward*
+        # predicate catches (the sim engine blocks the same set)
+        blocked = self._stall_fwd if self.deadline_defense else frozenset()
+        view = self.build_view(frac, sorted(blocked))
+        self._view = view
+        self._blocked = blocked
 
         live = list(jobs)
         for s in range(S):                       # forward sweep
@@ -195,13 +263,32 @@ class RecoveryManager:
         f = self._frac.get(nid)
         return f is not None and f <= t
 
+    def _record(self, fault: str, kind: str, node: int):
+        if self._timeline is not None:
+            self._timeline.record(self._iteration, fault, kind, node)
+
     def _visit(self, job: Job, s: int, direction: str, t: float,
                res: Resolution) -> bool:
         relay = job.chain[s + 1]
+        stall = self._stall_fwd if direction == "fwd" else self._stall_bwd
         while True:
             now = min(1.0, t + job.penalty)
-            if not self._dead_at(relay, now):
+            dead = self._dead_at(relay, now)
+            stalled = not dead and relay in stall
+            if not dead and not stalled:
                 return True                       # visit served
+            if stalled:
+                if not self.deadline_defense:
+                    if relay in self._hung:
+                        # no deadline fires: the hung relay wedges the
+                        # microbatch for the whole iteration
+                        job.failed_stage, job.failed_dir = s, direction
+                        res.dropped += 1
+                        return False
+                    return True   # undefended straggler: waited out
+                # sender's deadline fires on an alive-but-useless relay
+                self._record("straggler", "detection", relay)
+                res.rep_reports.append(relay)
             ev = RepairEvent(job.index, s, direction, relay)
             res.events.append(ev)
             job.retries += 1
@@ -223,6 +310,9 @@ class RecoveryManager:
                     ev.substitute = sub
                     res.rerouted += 1
                     self._count_recompute(direction, res)
+                    if stalled:
+                        res.deadline_requeues += 1
+                        self._record("straggler", "repair", relay)
                     relay = sub
                     continue
                 relay = sub                       # substitute died too
@@ -244,6 +334,9 @@ class RecoveryManager:
             res.rerouted += 1
             res.requeued += 1
             self._count_recompute(direction, res)
+            if stalled:
+                res.deadline_requeues += 1
+                self._record("straggler", "repair", relay)
             relay = job.chain[s + 1]
 
     # ------------------------------------------------------------------
@@ -327,6 +420,7 @@ class RecoveryManager:
             else:
                 remaining = chain[1:s + 2]
             if all(self.net.nodes[r].alive and not self._dead_at(r, t)
+                   and r not in self._blocked
                    for r in remaining):
                 return chain
         return None

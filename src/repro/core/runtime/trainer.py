@@ -54,8 +54,10 @@ from repro.core.runtime import cache
 from repro.core.runtime.activations import ActivationStore, make_codec
 from repro.core.runtime.recovery import Job, RecoveryManager, Resolution
 from repro.core.runtime.stages import StageCompute
-from repro.core.sim.faults import BernoulliChurn, ChurnContext, ChurnModel
+from repro.core.sim.faults import (BernoulliChurn, ChurnContext, ChurnModel,
+                                   adversarial_plan)
 from repro.core.sim.policies import GWTFPolicy, RoutingPolicy
+from repro.core.sim.timeline import FaultTimeline, record_injections
 from repro.optim.adamw import AdamW
 
 # Depth-first dispatch chunking: stack at most this many microbatches
@@ -175,6 +177,12 @@ class IterationResult:
                                   # boundaries (0 when the wire is fp32)
     wire_codecs: Tuple[str, ...] = ()   # applied codec per stage boundary
                                   # (empty when the wire is fp32/off)
+    deadline_requeues: int = 0    # subset of rerouted: re-dispatches
+                                  # fired by the sender's deadline on a
+                                  # hung/straggling (alive) relay
+    grads_flagged: int = 0        # contributions the gradient screen
+                                  # excluded from this update (the jobs
+                                  # still count as completed)
 
 
 class RuntimeTrainer:
@@ -187,6 +195,9 @@ class RuntimeTrainer:
                  churn_model: Optional[ChurnModel] = None,
                  batch_microbatches: bool = True,
                  max_retries: int = 2,
+                 timeout: float = 30.0,
+                 deadline_defense: bool = True,
+                 grad_screen: Optional[bool] = None,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 0,
                  record_microbatch_grads: bool = False,
@@ -212,10 +223,22 @@ class RuntimeTrainer:
         self.wire_codec = wire_codec
         self.dispatch_chunk = dispatch_chunk
 
+        # defenses against beyond-fail-stop faults: the sender-side
+        # deadline (hung/straggling relays are requeued, mirroring the
+        # sim engine) and the gradient screen (norm/cosine outlier test
+        # over per-microbatch contributions before aggregation).
+        # grad_screen=None auto-enables the screen exactly when the
+        # churn model injects corrupt gradients; False is the
+        # undefended baseline the adversarial benchmarks compare.
+        self.grad_screen = grad_screen
+        self.timeline = FaultTimeline()
+
         self.stages = StageCompute(cfg, net.num_stages, donate=donate)
         self.store = ActivationStore(codec=activation_codec)
         self.recovery = RecoveryManager(net, self.policy,
-                                        max_retries=max_retries)
+                                        max_retries=max_retries,
+                                        timeout=timeout,
+                                        deadline_defense=deadline_defense)
 
         S = net.num_stages
         # identical replicas per stage (paper: joining nodes download the
@@ -354,9 +377,17 @@ class RuntimeTrainer:
     def iteration(self, batches_per_data_node: Dict[int, List[dict]]
                   ) -> IterationResult:
         horizon = 1.0                    # normalized pipeline-flush clock
+        it = self.step
         crash_times = self.churn_model.sample(ChurnContext(
             net=self.net, rng=self.rng, horizon=horizon,
-            iteration=self.step, on_rejoin=self._on_rejoin))
+            iteration=it, on_rejoin=self._on_rejoin))
+        # adversarial side channel — None for plain fail-stop models,
+        # keeping every defended branch below inert.  Injections are
+        # recorded from the same model outputs the simulator records
+        # from, which is what makes the two layers' timelines
+        # injection-count identical by construction.
+        adv = adversarial_plan(self.churn_model, it)
+        record_injections(self.timeline, it, crash_times, adv)
 
         chains = [list(c) for c in self.policy.plan()]
         jobs: List[Job] = []
@@ -371,9 +402,29 @@ class RuntimeTrainer:
                 per_dn[dn] = k + 1
         launched = len(jobs)
 
-        res = self.recovery.resolve(jobs, chains, crash_times, horizon)
+        res = self.recovery.resolve(jobs, chains, crash_times, horizon,
+                                    adv=adv, timeline=self.timeline,
+                                    iteration=it)
         self.last_chains = chains
         self.last_resolution = res
+
+        # corrupt-gradient injection: per completed job, the stages
+        # whose relay the adversarial plan corrupts (on the job's
+        # *final* chain, after any reroutes)
+        corrupt = adv.corrupt if adv is not None else {}
+        corrupt_stages: Dict[int, Dict[int, Tuple]] = {}
+        if corrupt:
+            S = self.net.num_stages
+            for job in res.completed:
+                hit = {s: corrupt[job.chain[s + 1]] + (job.chain[s + 1],)
+                       for s in range(S) if job.chain[s + 1] in corrupt}
+                if hit:
+                    corrupt_stages[job.index] = hit
+        self._corrupt_stages = corrupt_stages
+        self._screen = (self.grad_screen if self.grad_screen is not None
+                        else bool(corrupt))
+        self._grads_flagged = 0
+
         wire = self._make_wire(chains)
         self.last_wire_codecs = list(wire.names) if wire is not None else []
         mean_loss = self._execute(res, wire)
@@ -383,6 +434,15 @@ class RuntimeTrainer:
         for nid in crash_times:
             self.net.kill_node(nid)
             self.policy.on_crash(nid)
+
+        # ---- reputation: decay first (rehabilitation), then charge
+        # this iteration's detections (fresh faults carry the full
+        # quarantine penalty into the next plan).  Same ordering as the
+        # sim engine; both no-op bit-identically on clean runs.
+        if res.rep_reports or self.net.reputation_active():
+            self.net.decay_reputations()
+            for r_nid in res.rep_reports:
+                self.net.report_fault(r_nid)
 
         self.step += 1
         if (self.checkpoint_dir and self.checkpoint_every
@@ -397,7 +457,9 @@ class RuntimeTrainer:
             bwd_replays=res.bwd_replays,
             store_peak_bytes=self.last_store_peak_bytes,
             wire_bytes=self.last_wire_bytes,
-            wire_codecs=tuple(self.last_wire_codecs))
+            wire_codecs=tuple(self.last_wire_codecs),
+            deadline_requeues=res.deadline_requeues,
+            grads_flagged=self._grads_flagged)
 
     # ------------------------------------------------------------------
     # Numeric pass
@@ -414,7 +476,12 @@ class RuntimeTrainer:
         if not done:
             return 0.0
         self.last_microbatch_grads = []
-        if self.batch_microbatches:
+        # corrupt gradients (or an explicitly requested screen) force
+        # the per-microbatch path: the perturbation is per-job and the
+        # screen needs per-job contributions before aggregation
+        adversarial = (bool(getattr(self, "_corrupt_stages", None))
+                       or getattr(self, "_screen", False))
+        if self.batch_microbatches and not adversarial:
             total = self._execute_batched(done, res, wire)
         else:
             total = self._execute_per_microbatch(done, res, wire)
@@ -472,13 +539,88 @@ class RuntimeTrainer:
         self._apply_update(grad_stage, g_head_by_dn, len(done))
         return total
 
+    # -- corrupt-gradient adversary + screen ---------------------------
+    def _perturb_tree(self, tree, mode: str, scale: float, seed: int,
+                      job: int, stage: int):
+        """Apply one corrupt node's backward perturbation to a gradient
+        tree.  Deterministic: the noise stream is keyed on
+        (seed, iteration, job, stage), so seeded adversarial runs
+        reproduce bit-for-bit."""
+        if mode == "sign_flip":
+            return jax.tree.map(jnp.negative, tree)
+        if mode == "zero":
+            return jax.tree.map(jnp.zeros_like, tree)
+        rng = np.random.default_rng([seed, self.step, job, stage])
+        return jax.tree.map(
+            lambda a: a + scale * jnp.asarray(
+                rng.standard_normal(a.shape), dtype=a.dtype), tree)
+
+    @staticmethod
+    def _flatten_grads(tree) -> np.ndarray:
+        leaves = [np.asarray(x, dtype=np.float64).ravel()
+                  for x in jax.tree.leaves(tree)]
+        return (np.concatenate(leaves) if leaves
+                else np.zeros(1, dtype=np.float64))
+
+    def _screen_contribs(self, contribs) -> set:
+        """The cheap gradient screen: flag per-microbatch contributions
+        whose per-stage gradient is a norm outlier (>8x or <1/8 the
+        median) or anti-correlated with the other contributions at the
+        same stage (cosine < -0.1 vs the leave-one-out mean).  A
+        sign-flipped backward is ~-1 cosine at (and below) the corrupt
+        stage; a zeroed one fails the norm floor; large perturbations
+        fail the norm ceiling.  Returns flagged indices into
+        ``contribs``.
+
+        The reference norm is the *lower* median (element ``(k-1)//2``
+        of the sorted norms), not the interpolated one: with exactly
+        half the contributions inflated, the interpolated median
+        averages an honest and a poisoned norm and both tests go
+        blind, while the lower median stays an honest value for any
+        contamination strictly below half."""
+        S = self.net.num_stages
+        k = len(contribs)
+        flagged: set = set()
+        for s in range(S):
+            vecs = [self._flatten_grads(gs[s]) for _, _, gs in contribs]
+            norms = np.array([float(np.linalg.norm(v)) for v in vecs])
+            med = float(np.sort(norms)[(k - 1) // 2])
+            if med > 0.0:
+                for i in range(k):
+                    if norms[i] > 8.0 * med or norms[i] < med / 8.0:
+                        flagged.add(i)
+            if k >= 3:
+                total = np.sum(vecs, axis=0)
+                for i in range(k):
+                    others = total - vecs[i]
+                    no = float(np.linalg.norm(others))
+                    if norms[i] > 0.0 and no > 0.0:
+                        cos = float(np.dot(vecs[i], others)
+                                    / (norms[i] * no))
+                        if cos < -0.1:
+                            flagged.add(i)
+        return flagged
+
     def _execute_per_microbatch(self, done: List[Job], res: Resolution,
                                 wire: Optional[_WireLink] = None) -> float:
         """Unbatched path: every microbatch runs its own per-stage
         dispatches and gradients are accumulated with ``jnp.add`` —
         the dispatch order (and float association) of the centralized
-        baseline, used by the numerical-equivalence tests."""
+        baseline, used by the numerical-equivalence tests.
+
+        When the churn model injects corrupt gradients this path also
+        hosts the adversary and its defense: each corrupt relay on a
+        job's final chain perturbs that stage's backward outputs
+        (``dp``/``dx`` — the poison propagates to earlier stages
+        through the cotangent, as it would in a real pipeline), and the
+        gradient screen then excludes flagged contributions *before*
+        the AdamW aggregation (``grads_flagged``; flagged jobs still
+        count as completed — delivery succeeded, trust didn't)."""
         S = self.net.num_stages
+        corrupt_stages = getattr(self, "_corrupt_stages", None) or {}
+        screening = getattr(self, "_screen", False)
+        collect = bool(corrupt_stages) or screening
+        contribs: List[Tuple[Job, Any, List[Any]]] = []
         total = 0.0
         grad_stage: List[Any] = [None] * S
         g_head_by_dn: Dict[int, Any] = {}
@@ -529,6 +671,16 @@ class RuntimeTrainer:
                 else:
                     dp, dx = self.stages.backward_from_residuals(
                         s, self.store.residuals(s, ids), g)
+                hit = corrupt_stages.get(job.index)
+                if hit is not None and s in hit:
+                    # the corrupt relay at this stage perturbs the
+                    # backward results it computed; the poisoned
+                    # cotangent dx flows into every earlier stage
+                    mode, scale, c_seed, _nid = hit[s]
+                    dp = self._perturb_tree(dp, mode, scale, c_seed,
+                                            job.index, s)
+                    dx = self._perturb_tree(dx, mode, scale, c_seed,
+                                            job.index, s)
                 g_stages[s] = dp
                 g = dx
                 self.store.drop(s, ids)
@@ -538,6 +690,13 @@ class RuntimeTrainer:
             if self.record_microbatch_grads:
                 self.last_microbatch_grads.append(
                     (job.index, g_head, list(g_stages)))
+            if collect:
+                # defer aggregation until the screen has seen every
+                # contribution (same jnp.add chain in the same job
+                # order afterwards, so an empty flag set aggregates
+                # bit-identically to the inline path)
+                contribs.append((job, g_head, g_stages))
+                continue
             for s in range(S):
                 grad_stage[s] = (g_stages[s] if grad_stage[s] is None else
                                  jax.tree.map(jnp.add, grad_stage[s],
@@ -548,6 +707,39 @@ class RuntimeTrainer:
                 g_head_by_dn[dn] = (jax.tree.map(jnp.add, acc, g_head), n + 1)
             else:
                 g_head_by_dn[dn] = (g_head, 1)
+        if collect:
+            flagged = self._screen_contribs(contribs) if screening else set()
+            self._grads_flagged = len(flagged)
+            for i in sorted(flagged):
+                f_job = contribs[i][0]
+                hit = corrupt_stages.get(f_job.index)
+                if not hit:
+                    continue   # false positive: excluded, but nobody
+                    # is accused (no timeline record, no rep report)
+                for s in sorted(hit):
+                    c_nid = hit[s][3]
+                    self.timeline.record(self.step, "corrupt_gradient",
+                                         "detection", c_nid)
+                    self.timeline.record(self.step, "corrupt_gradient",
+                                         "repair", c_nid)
+                    res.rep_reports.append(c_nid)
+            kept = [i for i in range(len(contribs)) if i not in flagged]
+            for i in kept:
+                k_job, g_head, g_stages = contribs[i]
+                for s in range(S):
+                    grad_stage[s] = (
+                        g_stages[s] if grad_stage[s] is None else
+                        jax.tree.map(jnp.add, grad_stage[s], g_stages[s]))
+                dn = k_job.data_node
+                if dn in g_head_by_dn:
+                    acc, n = g_head_by_dn[dn]
+                    g_head_by_dn[dn] = (
+                        jax.tree.map(jnp.add, acc, g_head), n + 1)
+                else:
+                    g_head_by_dn[dn] = (g_head, 1)
+            if kept:
+                self._apply_update(grad_stage, g_head_by_dn, len(kept))
+            return total
         self._apply_update(grad_stage, g_head_by_dn, len(done))
         return total
 

@@ -36,7 +36,8 @@ GOLDEN_PATH = os.path.join(_HERE, "golden.json")
 
 #: scenarios whose sim `summarize` columns the golden regression test
 #: pins tolerance-free (GWTF runs are bit-deterministic per seed)
-GOLDEN_PINNED = ("table2-het-churn10", "geo-regional-blackout")
+GOLDEN_PINNED = ("table2-het-churn10", "geo-regional-blackout",
+                 "adversarial-straggler", "adversarial-flaky")
 
 
 def _corpus() -> List[ScenarioSpec]:
@@ -106,6 +107,51 @@ def _corpus() -> List[ScenarioSpec]:
                                         [3, "rejoin", 3],
                                         [4, "rejoin", 7],
                                         [4, "crash", 11, 0.2]]}], **geo),
+        # ---- beyond fail-stop: adversarial fault classes (ISSUE 9) ---
+        # corrupt relay 3 carries 2 of the 4 planned chains at seed 25;
+        # the runtime gradient screen catches both poisoned
+        # contributions at iteration 0 (mode "perturb" is certainly
+        # detectable — sign_flip is regime-dependent near init and
+        # deliberately not pinned), reputation quarantines the relay
+        # and the planner reroutes off it from iteration 1.  Swept by
+        # check_fault_timeline + check_detection_precision_recall.
+        ScenarioSpec(name="adversarial-corrupt", seed=25,
+                     topology="geo", num_stages=2, relays_per_stage=3,
+                     num_data_nodes=1, data_capacity=4,
+                     capacity_range=(2, 3), iterations=4, microbatches=4,
+                     model_layers=2, model_d=32, model_vocab=256,
+                     seq_len=16, microbatch_size=1,
+                     churn=[{"kind": "corrupt_gradient", "nodes": [3],
+                             "mode": "perturb", "scale": 1.0, "seed": 7}]),
+        # stage-1 relay 4 hangs for iterations 1-2 (deadline-catchable
+        # on both layers: only a timeout ever completes it) while relay
+        # 5 runs 1.5x slow (deliberately *below* both layers' catch
+        # thresholds — injected and timed, never detected); the shared
+        # fault timeline pins identical detection/repair counts
+        ScenarioSpec(name="adversarial-straggler", seed=25,
+                     topology="geo", num_stages=2, relays_per_stage=3,
+                     num_data_nodes=1, data_capacity=4,
+                     capacity_range=(2, 3), iterations=4, microbatches=4,
+                     model_layers=2, model_d=32, model_vocab=256,
+                     seq_len=16, microbatch_size=1,
+                     churn=[{"kind": "straggler", "nodes": [4],
+                             "hang": True, "at_iteration": 1,
+                             "duration": 2},
+                            {"kind": "straggler", "nodes": [5],
+                             "factor": 1.5, "at_iteration": 1,
+                             "duration": 2}]),
+        # per-leg Bernoulli delivery failure: detection/repair is
+        # engine-local (the runtime performs no transfer legs), so only
+        # the injections cross-compare; sim retries/timeouts are pinned
+        # by the golden table
+        ScenarioSpec(name="adversarial-flaky", seed=25,
+                     topology="geo", num_stages=2, relays_per_stage=3,
+                     num_data_nodes=1, data_capacity=4,
+                     capacity_range=(2, 3), iterations=4, microbatches=4,
+                     model_layers=2, model_d=32, model_vocab=256,
+                     seq_len=16, microbatch_size=1,
+                     churn=[{"kind": "flaky_link", "p": 0.15,
+                             "seed": 3}]),
         # ---- abstract flow settings (paper Tables IV/V) --------------
         ScenarioSpec(name="flow-tableV-1", seed=22, topology="synthetic",
                      num_stages=8, relays_per_stage=5, num_data_nodes=1,

@@ -35,9 +35,12 @@ from repro.core.flow.graph import (FlowNetwork, Node,
                                    geo_distributed_network,
                                    synthetic_network)
 from repro.core.scenarios.spec import ScenarioSpec
-from repro.core.sim.faults import (BernoulliChurn, ChurnModel, ComposedChurn,
+from repro.core.sim.faults import (AdversarialPlan, BernoulliChurn,
+                                   ChurnModel, ComposedChurn,
+                                   CorruptGradientChurn, FlakyLinkChurn,
                                    LinkDegradationChurn, RegionalOutageChurn,
-                                   TraceChurn)
+                                   StragglerChurn, TraceChurn,
+                                   adversarial_plan)
 from repro.core.sim.metrics import IterationMetrics, ModelProfile
 from repro.core.sim.policies import make_policy
 
@@ -227,6 +230,23 @@ def spare_node_ids(spec: ScenarioSpec) -> List[int]:
 # Churn program
 # ---------------------------------------------------------------------------
 
+def _blackout_location(net: FlowNetwork, location: int) -> int:
+    """Resolve a spec's blackout location against the built topology.
+
+    A spec draws its location before relay placement is known, so an
+    index that happens to land on an empty region wraps onto the
+    sorted populated locations deterministically (identity whenever
+    the drawn location already has relays — committed scenarios are
+    unaffected).  `TraceChurn.regional_blackout` itself stays strict:
+    direct callers name locations on a topology they can inspect.
+    """
+    populated = sorted({n.location for n in net.nodes.values()
+                        if not n.is_data and n.location >= 0})
+    if location in populated or not populated:
+        return location
+    return populated[location % len(populated)]
+
+
 def build_churn_model(spec: ScenarioSpec, net: FlowNetwork) -> ChurnModel:
     """Compose the spec's churn clauses into one `ChurnModel`.
 
@@ -243,7 +263,7 @@ def build_churn_model(spec: ScenarioSpec, net: FlowNetwork) -> ChurnModel:
             models.append(TraceChurn(clause["events"]))
         elif kind == "regional_blackout":
             models.append(TraceChurn.regional_blackout(
-                net, location=clause["location"],
+                net, location=_blackout_location(net, clause["location"]),
                 at_iteration=clause["at_iteration"],
                 duration=clause.get("duration", 2),
                 when=clause.get("when", 0.25)))
@@ -263,6 +283,31 @@ def build_churn_model(spec: ScenarioSpec, net: FlowNetwork) -> ChurnModel:
                 clause["at_iteration"], clause["factor"],
                 duration=clause.get("duration", 0),
                 inter_region_only=clause.get("inter_region_only", True)))
+        elif kind == "straggler":
+            nodes = [int(n) for n in clause["nodes"]]
+            hang = bool(clause.get("hang", False))
+            factor = float(clause.get("factor", 4.0))
+            models.append(StragglerChurn(
+                None if hang else {n: factor for n in nodes},
+                hangs=nodes if hang else (),
+                at_iteration=int(clause.get("at_iteration", 0)),
+                duration=int(clause.get("duration", 0)),
+                known_ids=net.nodes.keys()))
+        elif kind == "corrupt_gradient":
+            models.append(CorruptGradientChurn(
+                [int(n) for n in clause["nodes"]],
+                mode=clause.get("mode", "perturb"),
+                scale=float(clause.get("scale", 1.0)),
+                seed=int(clause.get("seed", 0)),
+                at_iteration=int(clause.get("at_iteration", 0)),
+                duration=int(clause.get("duration", 0)),
+                known_ids=net.nodes.keys()))
+        elif kind == "flaky_link":
+            models.append(FlakyLinkChurn(
+                float(clause["p"]),
+                seed=int(clause.get("seed", 0)),
+                at_iteration=int(clause.get("at_iteration", 0)),
+                duration=int(clause.get("duration", 0))))
         else:  # pragma: no cover - validate() rejects unknown kinds
             raise ValueError(f"unknown churn clause kind {kind!r}")
     if not models:
@@ -290,14 +335,35 @@ def iteration_crash_plan(spec: ScenarioSpec) -> Dict[int, List[Tuple[int, float]
                     plan.setdefault(int(ev[0]), []).append(
                         (int(ev[2]), when))
         elif kind == "regional_blackout":
+            loc = _blackout_location(net, clause["location"])
             nids = [n.id for n in net.nodes.values()
-                    if not n.is_data and n.location == clause["location"]]
+                    if not n.is_data and n.location == loc]
             when = clause.get("when", 0.25)
             for nid in nids:
                 plan.setdefault(int(clause["at_iteration"]), []).append(
                     (nid, when))
-        # flash_crowd / link_degradation crash nobody
+        # flash_crowd / link_degradation / adversarial clauses crash
+        # nobody (stragglers, corrupters and flaky links stay alive)
     return plan
+
+
+def iteration_adversarial_plan(spec: ScenarioSpec
+                               ) -> Dict[int, AdversarialPlan]:
+    """Static per-iteration `AdversarialPlan` view of a deterministic
+    churn program: what the beyond-fail-stop clauses inject at each
+    iteration, resolved without running either execution layer.  The
+    harness uses it to pin expected injection counts against both
+    layers' fault timelines.  Raises if the program draws randomness."""
+    if not spec.deterministic_churn:
+        raise ValueError(f"{spec.name}: churn program is not deterministic")
+    net, _ = build_network(spec)
+    model = build_churn_model(spec, net)
+    out: Dict[int, AdversarialPlan] = {}
+    for it in range(spec.iterations):
+        plan = adversarial_plan(model, it)
+        if plan is not None and not plan.is_empty():
+            out[it] = plan
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -393,11 +459,13 @@ def model_profile(spec: ScenarioSpec) -> ModelProfile:
 
 
 def build_sim(spec: ScenarioSpec,
-              policy_wrapper=None):
+              policy_wrapper=None, **sim_kw):
     """`TrainingSimulator` over the spec; ``policy_wrapper`` (if given)
     wraps the routing policy before the engine sees it — the harness
     uses it to record per-iteration plans without perturbing the RNG
-    stream."""
+    stream.  Extra keywords (``deadline_defense``, ``corrupt_screen``)
+    reach the engine — the benches use them for the undefended
+    baselines."""
     from repro.core.sim.facade import TrainingSimulator
 
     net, _ = build_network(spec)
@@ -407,7 +475,8 @@ def build_sim(spec: ScenarioSpec,
         policy = policy_wrapper(policy)
     return TrainingSimulator(
         net, profile=model_profile(spec),
-        churn_model=build_churn_model(spec, net), policy=policy, rng=rng)
+        churn_model=build_churn_model(spec, net), policy=policy, rng=rng,
+        **sim_kw)
 
 
 def run_sim(spec: ScenarioSpec,

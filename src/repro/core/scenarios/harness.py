@@ -50,7 +50,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.scenarios import generate
-from repro.core.scenarios.spec import ScenarioSpec
+from repro.core.scenarios.spec import ADVERSARIAL_CLAUSES, ScenarioSpec
 
 
 class ScenarioDiscrepancy(AssertionError):
@@ -248,8 +248,14 @@ def check_sim_runtime_consistency(spec: ScenarioSpec,
                  f"({r.fwd_recomputes} + {r.bwd_replays} != {r.rerouted})")
         _require(r.requeued <= r.rerouted, spec, "sim-runtime",
                  f"iteration {i}: requeued > rerouted")
+        _require(r.deadline_requeues <= r.rerouted, spec, "sim-runtime",
+                 f"iteration {i}: deadline_requeues "
+                 f"{r.deadline_requeues} > rerouted {r.rerouted}")
         _require(m.completed <= m.launched, spec, "sim-runtime",
                  f"iteration {i}: sim completed > launched")
+        _require(m.retries <= m.timeouts, spec, "sim-runtime",
+                 f"iteration {i}: sim retries {m.retries} > fired "
+                 f"deadline checks {m.timeouts}")
         if spec.microbatches >= spec.data_capacity:
             _require(r.launched == m.launched, spec, "sim-runtime",
                      f"iteration {i}: launch counts diverged "
@@ -257,11 +263,17 @@ def check_sim_runtime_consistency(spec: ScenarioSpec,
 
     if spec.deterministic_churn:
         crash_plan = generate.iteration_crash_plan(spec)
+        adv_plans = generate.iteration_adversarial_plan(spec)
         for i, (m, r) in enumerate(zip(sim_metrics, rt_results)):
             crashes = crash_plan.get(i, [])
             planned = {nid for chain in rt_plans[i] for nid in chain}
             on_plan_early = [nid for nid, when in crashes
                              if nid in planned and when <= 0.5]
+            if not crashes and i in adv_plans:
+                # adversarial faults legitimately cause reroutes, wasted
+                # compute and drops without any crash; the fault-timeline
+                # check pins their exact accounting instead
+                continue
             if not crashes:
                 _require(m.reroutes == 0 and m.wasted_gpu == 0.0, spec,
                          "sim-runtime",
@@ -290,6 +302,160 @@ def check_sim_runtime_consistency(spec: ScenarioSpec,
         "runtime_rerouted": sum(r.rerouted for r in rt_results),
         "sim_reroutes": sum(m.reroutes for m in sim_metrics),
     }
+
+
+# ---------------------------------------------------------------------------
+# Fault timeline: the shared beyond-fail-stop record (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def _adversarial_kinds(spec: ScenarioSpec) -> set:
+    return {c["kind"] for c in spec.churn if c["kind"] in ADVERSARIAL_CLAUSES}
+
+
+def check_fault_timeline(spec: ScenarioSpec,
+                         iterations: Optional[int] = None) -> Dict[str, Any]:
+    """The simulator and the runtime, driven by the same deterministic
+    adversarial churn program, must produce *identical* fault
+    timelines where the faults are cross-layer:
+
+    * per-iteration injection counts for every fault class equal the
+      static `iteration_adversarial_plan` view on both layers (the
+      layers can't even disagree by both being wrong the same way);
+    * per-iteration detection and repair counts agree exactly between
+      the layers for the cross-layer fault classes (straggler,
+      corrupt_gradient) — the deadline defense and the gradient screen
+      fire the same number of times at the same iterations whether the
+      training step is simulated or real.
+
+    Flaky-link detection/repair is engine-local (the runtime performs
+    no physical transfer legs) and is excluded by
+    ``FaultTimeline.comparable_counts``; its injections still compare.
+    """
+    from repro.core.sim.timeline import CROSS_LAYER_FAULTS
+
+    check = "fault-timeline"
+    if not spec.deterministic_churn:
+        raise ValueError(f"{spec.name}: check_fault_timeline needs a "
+                         f"deterministic churn program")
+    if not _adversarial_kinds(spec):
+        raise ValueError(f"{spec.name}: check_fault_timeline needs at "
+                         f"least one adversarial churn clause")
+    its = iterations if iterations is not None else spec.iterations
+    adv_plans = generate.iteration_adversarial_plan(spec)
+
+    sim = generate.build_sim(spec)
+    sim.run(its)
+    sim_tl = sim.engine.timeline
+    trainer, batches = generate.build_runtime(spec)
+    for _ in range(its):
+        trainer.iteration(batches)
+    rt_tl = trainer.timeline
+
+    # ---- injections vs the static plan, on both layers ----------------
+    for layer, tl in (("sim", sim_tl), ("runtime", rt_tl)):
+        counts = tl.counts()
+        for it in range(its):
+            plan = adv_plans.get(it)
+            expect = {
+                "straggler": (len(set(plan.slow) | set(plan.hung))
+                              if plan else 0),
+                "corrupt_gradient": len(plan.corrupt) if plan else 0,
+                "flaky_link": plan.flaky_episodes if plan else 0,
+            }
+            for fault, want in expect.items():
+                got = counts.get((it, fault, "injection"), 0)
+                _require(got == want, spec, check,
+                         f"{layer} iteration {it}: {fault} injections "
+                         f"{got} != planned {want}")
+
+    # ---- cross-layer detection / repair equality ----------------------
+    sim_cmp = sim_tl.comparable_counts()
+    rt_cmp = rt_tl.comparable_counts()
+    if sim_cmp != rt_cmp:
+        diff = {k: (sim_cmp.get(k, 0), rt_cmp.get(k, 0))
+                for k in sorted(set(sim_cmp) | set(rt_cmp))
+                if sim_cmp.get(k, 0) != rt_cmp.get(k, 0)}
+        _require(False, spec, check,
+                 f"fault timelines diverged (key -> (sim, runtime)): "
+                 f"{diff}")
+    detections = sum(v for (it, fault, kind), v in sim_cmp.items()
+                     if kind == "detection" and fault in CROSS_LAYER_FAULTS)
+    return {"iterations": its, "records": (len(sim_tl), len(rt_tl)),
+            "cross_layer_detections": detections}
+
+
+def check_detection_precision_recall(spec: ScenarioSpec,
+                                     iterations: Optional[int] = None
+                                     ) -> Dict[str, Any]:
+    """The runtime gradient screen, on a deterministic corrupt-gradient
+    program with a certainly-detectable mode ("perturb"/"zero"), has
+
+    * recall 1.0 — every completed contribution whose final chain
+      crossed a corrupt relay is detected (ground truth re-derived
+      from the recorded per-iteration plans and the static adversarial
+      plan, not from the screen's own bookkeeping);
+    * precision 1.0 on attribution — every detection record names a
+      relay the churn program actually corrupted that iteration.
+
+    Sign-flip corruption is excluded by construction: near
+    initialization honest per-microbatch gradients are close to
+    orthogonal, so a flipped sign is statistically invisible — the
+    corpus pins the detectable modes and documents the regime split.
+    """
+    check = "detection-precision-recall"
+    corrupt_clauses = [c for c in spec.churn
+                       if c["kind"] == "corrupt_gradient"]
+    if not corrupt_clauses:
+        raise ValueError(f"{spec.name}: needs a corrupt_gradient clause")
+    undetectable = [c for c in corrupt_clauses
+                    if c.get("mode", "perturb") not in ("perturb", "zero")]
+    if undetectable:
+        raise ValueError(f"{spec.name}: precision/recall is only exact "
+                         f"for certainly-detectable modes, got "
+                         f"{[c.get('mode') for c in undetectable]}")
+    its = iterations if iterations is not None else spec.iterations
+    adv_plans = generate.iteration_adversarial_plan(spec)
+
+    rec: Dict[str, RecordingPolicy] = {}
+
+    def wrap(p):
+        rec["p"] = RecordingPolicy(p)
+        return rec["p"]
+
+    trainer, batches = generate.build_runtime(spec, policy_wrapper=wrap)
+    results = [trainer.iteration(batches) for _ in range(its)]
+    counts = trainer.timeline.counts()
+
+    truths: List[int] = []
+    detected: List[int] = []
+    for it in range(its):
+        plan = adv_plans.get(it)
+        corrupt = set(plan.corrupt) if plan else set()
+        # ground truth: planned chains crossing a corrupt relay, one
+        # detection record per (contribution, corrupt stage hop); with
+        # no crash clauses the final chain is the planned chain
+        truth = sum(1 for chain in rec["p"].plans[it]
+                    for nid in chain[1:-1] if nid in corrupt)
+        got = counts.get((it, "corrupt_gradient", "detection"), 0)
+        truths.append(truth)
+        detected.append(got)
+        _require(got == truth, spec, check,
+                 f"iteration {it}: screen detected {got} corrupt "
+                 f"contributions, ground truth {truth} (recall/precision "
+                 f"broken)")
+        _require(results[it].grads_flagged >= got, spec, check,
+                 f"iteration {it}: {got} detections but only "
+                 f"{results[it].grads_flagged} contributions excluded")
+        for r_it, fault, kind, node in [
+                (r.iteration, r.fault, r.kind, r.node)
+                for r in trainer.timeline.records]:
+            if r_it == it and fault == "corrupt_gradient" \
+                    and kind == "detection":
+                _require(node in corrupt, spec, check,
+                         f"iteration {it}: detection accused node "
+                         f"{node}, not a corrupt relay {sorted(corrupt)}")
+    return {"iterations": its, "ground_truth": truths,
+            "detected": detected}
 
 
 # ---------------------------------------------------------------------------
@@ -339,6 +505,9 @@ def check_zero_churn(spec: ScenarioSpec,
                  f"iteration {i}: truncated without churn")
         _require(m.completed == m.launched > 0, spec, "zero-churn",
                  f"iteration {i}: {m.completed}/{m.launched} completed")
+        _require(m.timeouts == 0 and m.retries == 0, spec, "zero-churn",
+                 f"iteration {i}: deadline fired without churn "
+                 f"(timeouts={m.timeouts}, retries={m.retries})")
     result = {"iterations": its, "sim_completed":
               [m.completed for m in metrics]}
     if runtime and spec.num_data_nodes == 1:
@@ -655,6 +824,23 @@ CHECKS: Dict[str, Tuple[Callable[[ScenarioSpec], Dict], Callable]] = {
     "sim-invariants": (check_sim_invariants, lambda s: True),
     "sim-runtime": (check_sim_runtime_consistency,
                     lambda s: s.scheduler == "gwtf"),
+    "fault-timeline": (check_fault_timeline,
+                       lambda s: (s.scheduler == "gwtf"
+                                  and s.deterministic_churn
+                                  and bool(_adversarial_kinds(s)))),
+    "detection-precision-recall": (
+        check_detection_precision_recall,
+        lambda s: (s.scheduler == "gwtf" and s.deterministic_churn
+                   and all(c["kind"] in ADVERSARIAL_CLAUSES
+                           for c in s.churn)
+                   and any(c["kind"] == "corrupt_gradient"
+                           and c.get("mode", "perturb") in ("perturb",
+                                                            "zero")
+                           for c in s.churn)
+                   and not any(c["kind"] == "corrupt_gradient"
+                               and c.get("mode", "perturb") not in
+                               ("perturb", "zero")
+                               for c in s.churn))),
     "hierarchy-gap": (check_hierarchy_gap,
                       lambda s: s.topology == "geo-abstract"),
     "codec-agreement": (check_codec_agreement,
@@ -766,6 +952,67 @@ def random_spec(rng: np.random.Generator, index: int) -> ScenarioSpec:
     return spec
 
 
+#: checks for the adversarial fuzz loop: `sim-invariants` pushes the
+#: sampled straggler/corrupt/flaky programs through the full event
+#: engine (deadline checks, hedged re-dispatch, modelled screen,
+#: reputation) including the seeded-rerun determinism gate.  The
+#: real-compute cross-layer checks stay out — they run JAX per case.
+ADVERSARIAL_FUZZ_CHECKS = ("sim-invariants",)
+
+
+def random_adversarial_spec(rng: np.random.Generator,
+                            index: int) -> ScenarioSpec:
+    """One random small scenario whose churn program samples the
+    beyond-fail-stop fault classes (optionally mixed with crashes)."""
+    topology = "geo" if rng.uniform() < 0.5 else "synthetic"
+    spec = ScenarioSpec(
+        name=f"adv-fuzz-{index}",
+        seed=int(rng.integers(0, 2 ** 16)),
+        topology=topology,
+        num_stages=int(rng.integers(2, 4)),
+        relays_per_stage=int(rng.integers(2, 5)),
+        num_data_nodes=1,
+        data_capacity=int(rng.integers(2, 5)),
+        capacity_range=(1, int(rng.integers(2, 5))),
+        iterations=2,
+        objective="sum" if rng.uniform() < 0.5 else "minmax",
+    )
+    first_relay = spec.num_data_nodes
+    relays = list(range(first_relay, first_relay + spec.num_relays))
+    clauses: List[Dict[str, Any]] = []
+    if rng.uniform() < 0.7:
+        k = int(rng.integers(1, max(2, len(relays) // 3)))
+        nodes = sorted(int(n) for n in
+                       rng.choice(relays, size=k, replace=False))
+        clauses.append({"kind": "straggler", "nodes": nodes,
+                        "factor": float(rng.uniform(1.5, 30.0)),
+                        "hang": bool(rng.uniform() < 0.4),
+                        "at_iteration": int(rng.integers(0, 2)),
+                        "duration": int(rng.integers(0, 3))})
+    if rng.uniform() < 0.6:
+        k = int(rng.integers(1, max(2, len(relays) // 4)))
+        nodes = sorted(int(n) for n in
+                       rng.choice(relays, size=k, replace=False))
+        clauses.append({"kind": "corrupt_gradient", "nodes": nodes,
+                        "mode": ["perturb", "zero",
+                                 "sign_flip"][int(rng.integers(0, 3))],
+                        "scale": float(rng.uniform(0.5, 4.0)),
+                        "seed": int(rng.integers(0, 2 ** 16)),
+                        "at_iteration": int(rng.integers(0, 2)),
+                        "duration": int(rng.integers(0, 3))})
+    if rng.uniform() < 0.5:
+        clauses.append({"kind": "flaky_link",
+                        "p": float(rng.uniform(0.0, 0.4)),
+                        "seed": int(rng.integers(0, 2 ** 16))})
+    if rng.uniform() < 0.3:
+        clauses.append({"kind": "bernoulli",
+                        "p": float(rng.uniform(0.0, 0.2))})
+    if not clauses:
+        clauses.append({"kind": "flaky_link", "p": 0.2,
+                        "seed": int(rng.integers(0, 2 ** 16))})
+    return spec.replace(churn=clauses)
+
+
 def random_scale_spec(rng: np.random.Generator, index: int) -> ScenarioSpec:
     """One random *internet-scale* scenario (1000+ relays, mostly
     geo-abstract) for the scale-tier fuzz loop.  Cost ranges stay in
@@ -823,6 +1070,9 @@ def _fails(spec: ScenarioSpec, checks: Sequence[str]
 
 _SHRINK_PASSES: Tuple[Tuple[str, Callable[[ScenarioSpec], Dict]], ...] = (
     ("drop-compression", lambda s: {"compression": None}),
+    ("drop-adversarial", lambda s: {
+        "churn": [c for c in s.churn
+                  if c["kind"] not in ADVERSARIAL_CLAUSES]}),
     ("drop-churn", lambda s: {"churn": s.churn[:-1],
                               "spare_nodes": 0
                               if not any(c["kind"] == "flash_crowd"

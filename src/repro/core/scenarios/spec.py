@@ -57,11 +57,38 @@ CHURN_CLAUSES: Dict[str, Tuple[Tuple[str, ...], Dict[str, Any]]] = {
     # restored `duration` iterations later (0 = permanent)
     "link_degradation": (("at_iteration", "factor"),
                          {"duration": 0, "inter_region_only": True}),
+    # beyond fail-stop (adversarial fault classes, PR 9) -----------------
+    # `nodes` stay alive but compute `factor`x slower (hang=True: stall
+    # forever — only a sender-side deadline catches them) inside the
+    # window [at_iteration, at_iteration+duration) (duration 0 = forever)
+    "straggler": (("nodes",),
+                  {"factor": 4.0, "hang": False,
+                   "at_iteration": 0, "duration": 0}),
+    # `nodes` complete backward on time but return perturbed gradients
+    # (mode: "sign_flip" | "zero" | "perturb"; "perturb" adds
+    # N(0, scale^2) noise seeded on (seed, iteration, microbatch, stage))
+    "corrupt_gradient": (("nodes",),
+                         {"mode": "perturb", "scale": 1.0, "seed": 0,
+                          "at_iteration": 0, "duration": 0}),
+    # every relay-to-relay transfer leg independently fails to arrive
+    # with probability `p` (counter-based coin on (seed, iteration,
+    # microbatch, leg), so replay is exact and no shared stream is read)
+    "flaky_link": (("p",),
+                   {"seed": 0, "at_iteration": 0, "duration": 0}),
 }
 
 #: clause kinds that draw no randomness (replayable / analyzable exactly)
+#: — the adversarial clauses qualify because their noise/coins are
+#: counter-based on their own embedded seeds, not the shared policy
+#: stream
 DETERMINISTIC_CLAUSES = frozenset(
-    {"trace", "regional_blackout", "flash_crowd", "link_degradation"})
+    {"trace", "regional_blackout", "flash_crowd", "link_degradation",
+     "straggler", "corrupt_gradient", "flaky_link"})
+
+#: the beyond-fail-stop fault classes (ISSUE 9): clauses the defense
+#: layer (deadline + gradient screen + reputation quarantine) targets
+ADVERSARIAL_CLAUSES = frozenset(
+    {"straggler", "corrupt_gradient", "flaky_link"})
 
 #: clause kinds that need real link bandwidth (geo topology only)
 GEO_ONLY_CLAUSES = frozenset({"link_degradation"})
@@ -278,6 +305,52 @@ class ScenarioSpec:
             if kind == "link_degradation" and clause["factor"] <= 0:
                 raise ValueError(f"{self.name}: churn[{i}] factor must be "
                                  f"positive")
+            if kind in ("straggler", "corrupt_gradient"):
+                nodes = clause["nodes"]
+                if (not isinstance(nodes, (list, tuple)) or not nodes
+                        or not all(isinstance(n, int) and 0 <= n
+                                   for n in nodes)):
+                    raise ValueError(
+                        f"{self.name}: churn[{i}] ({kind}) nodes must be a "
+                        f"non-empty list of node ids (ints >= 0)")
+                hi_id = self.base_nodes + self.spare_nodes
+                bad = [n for n in nodes if n >= hi_id]
+                if bad:
+                    raise ValueError(
+                        f"{self.name}: churn[{i}] ({kind}) names node(s) "
+                        f"{bad} outside the topology's {hi_id} node ids")
+            if kind in ADVERSARIAL_CLAUSES:
+                at = clause.get("at_iteration", 0)
+                dur = clause.get("duration", 0)
+                if not isinstance(at, int) or at < 0:
+                    raise ValueError(f"{self.name}: churn[{i}] ({kind}) "
+                                     f"at_iteration={at!r} must be an "
+                                     f"int >= 0")
+                if not isinstance(dur, int) or dur < 0:
+                    raise ValueError(f"{self.name}: churn[{i}] ({kind}) "
+                                     f"duration={dur!r} must be an "
+                                     f"int >= 0")
+            if kind == "straggler":
+                factor = clause.get("factor", 4.0)
+                if not isinstance(factor, (int, float)) or factor < 1.0:
+                    raise ValueError(f"{self.name}: churn[{i}] (straggler) "
+                                     f"factor={factor!r} must be >= 1")
+            if kind == "corrupt_gradient":
+                from repro.core.sim.faults import CorruptGradientChurn
+                mode = clause.get("mode", "perturb")
+                if mode not in CorruptGradientChurn.MODES:
+                    raise ValueError(
+                        f"{self.name}: churn[{i}] (corrupt_gradient) "
+                        f"mode={mode!r} not in "
+                        f"{sorted(CorruptGradientChurn.MODES)}")
+                scale = clause.get("scale", 1.0)
+                if not isinstance(scale, (int, float)) or scale <= 0:
+                    raise ValueError(
+                        f"{self.name}: churn[{i}] (corrupt_gradient) "
+                        f"scale={scale!r} must be > 0")
+            if kind == "flaky_link" and not 0.0 <= clause["p"] <= 1.0:
+                raise ValueError(f"{self.name}: churn[{i}] p={clause['p']} "
+                                 f"out of [0, 1]")
         if flash_total > self.spare_nodes:
             raise ValueError(
                 f"{self.name}: flash_crowd clauses join {flash_total} nodes "

@@ -20,17 +20,25 @@ Layers, each its own module:
 """
 from repro.core.sim.engine import SimulationEngine
 from repro.core.sim.facade import TrainingSimulator
-from repro.core.sim.faults import (BernoulliChurn, ChurnContext, ChurnModel,
-                                   ComposedChurn, LinkDegradationChurn,
-                                   RegionalOutageChurn, TraceChurn)
+from repro.core.sim.faults import (AdversarialPlan, BernoulliChurn,
+                                   ChurnContext, ChurnModel, ComposedChurn,
+                                   CorruptGradientChurn, FlakyLinkChurn,
+                                   LinkDegradationChurn, RegionalOutageChurn,
+                                   StragglerChurn, TraceChurn,
+                                   adversarial_plan)
 from repro.core.sim.metrics import IterationMetrics, ModelProfile, summarize
 from repro.core.sim.policies import (FixedPolicy, GWTFPolicy, RoutingPolicy,
                                      SwarmPolicy, make_policy)
+from repro.core.sim.timeline import (FaultRecord, FaultTimeline,
+                                     record_injections)
 
 __all__ = [
     "SimulationEngine", "TrainingSimulator",
-    "BernoulliChurn", "ChurnContext", "ChurnModel", "ComposedChurn",
-    "LinkDegradationChurn", "RegionalOutageChurn", "TraceChurn",
+    "AdversarialPlan", "BernoulliChurn", "ChurnContext", "ChurnModel",
+    "ComposedChurn", "CorruptGradientChurn", "FlakyLinkChurn",
+    "LinkDegradationChurn", "RegionalOutageChurn", "StragglerChurn",
+    "TraceChurn", "adversarial_plan",
+    "FaultRecord", "FaultTimeline", "record_injections",
     "IterationMetrics", "ModelProfile", "summarize",
     "FixedPolicy", "GWTFPolicy", "RoutingPolicy", "SwarmPolicy",
     "make_policy",

@@ -98,9 +98,11 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.flow.graph import FlowNetwork
-from repro.core.sim.faults import BernoulliChurn, ChurnContext, ChurnModel
+from repro.core.sim.faults import (BernoulliChurn, ChurnContext, ChurnModel,
+                                   adversarial_plan)
 from repro.core.sim.metrics import IterationMetrics, ModelProfile
 from repro.core.sim.policies import FaultView, RoutingPolicy
+from repro.core.sim.timeline import FaultTimeline, record_injections
 
 # Typed event kinds (ints: cheap compares, no string dispatch)
 ARRIVE, DONE, CHECK = 0, 1, 2
@@ -133,6 +135,12 @@ class _MB:
     # state sideways (rerouted away, failed, stranded at a crashed
     # node) instead of only when their queue entry is popped
     wait_node: int = -1
+    # adversarial per-leg markers: the leg whose delivery was dropped
+    # by a flaky link / whose receiver is a deadline-catchable
+    # straggler (-1 = none).  Lets the CHECK handler attribute the
+    # fired deadline to its cause without payload-tuple changes.
+    dropped_leg: int = -1
+    slow_leg: int = -1
 
 
 class SimulationEngine:
@@ -153,13 +161,22 @@ class SimulationEngine:
                  rng: Optional[np.random.Generator] = None,
                  max_events: int = 500_000,
                  plan_overrun_factor: float = 100.0,
-                 plan_overrun_min_seconds: float = 0.5):
+                 plan_overrun_min_seconds: float = 0.5,
+                 deadline_defense: bool = True,
+                 corrupt_screen: bool = True):
         self.net = net
         self.policy = policy
         self.churn_model = churn_model or BernoulliChurn(0.0)
         self.profile = profile or ModelProfile(fwd_compute=2.0)
         self.timeout = timeout
         self.max_retries = max_retries
+        # adversarial defenses: deadline-triggered re-dispatch for
+        # hung/straggling/dropped legs, and the (modelled) gradient
+        # screen for corrupt contributions.  Both are inert unless the
+        # churn model publishes an AdversarialPlan.
+        self.deadline_defense = deadline_defense
+        self.corrupt_screen = corrupt_screen
+        self.timeline = FaultTimeline()
         self.rng = rng or np.random.default_rng(0)
         self.max_events = max_events
         self.plan_overrun_factor = plan_overrun_factor
@@ -227,10 +244,21 @@ class SimulationEngine:
         m = IterationMetrics()
 
         # ---- fault layer: sample crashes/rejoins ----------------------
+        it = self._iteration
         crash_times = self.churn_model.sample(ChurnContext(
             net=net, rng=self.rng, horizon=self._estimate_iteration(),
-            iteration=self._iteration, on_rejoin=self.policy.on_rejoin))
+            iteration=it, on_rejoin=self.policy.on_rejoin))
         self._iteration += 1
+        # adversarial side channel (None for plain fail-stop models —
+        # every branch it gates below is then skipped, keeping the
+        # fail-stop event stream bit-identical to the reference loop)
+        adv = adversarial_plan(self.churn_model, it)
+        record_injections(self.timeline, it, crash_times, adv)
+        slow = adv.slow if adv is not None else {}
+        hung = adv.hung if adv is not None else frozenset()
+        corrupt = adv.corrupt if adv is not None else {}
+        flaky = adv is not None and bool(adv.flaky)
+        deadline_defense = self.deadline_defense
 
         # ---- scheduler layer: build this iteration's paths ------------
         plan_t0 = time.perf_counter()
@@ -260,6 +288,18 @@ class SimulationEngine:
             self._caps = caps
             self._node_tables_key = nt_key
         fwd_t, bwd_t, caps = self._fwd_t, self._bwd_t, self._caps
+        # effective compute times under straggler slowdowns; deadlines
+        # keep being stamped from the *healthy* tables (fwd_t/bwd_t in
+        # send()), which is exactly what lets the deadline catch a
+        # pathological slowdown
+        if slow:
+            eff_fwd, eff_bwd = list(fwd_t), list(bwd_t)
+            for s_nid, s_f in slow.items():
+                if s_nid < N:
+                    eff_fwd[s_nid] *= s_f
+                    eff_bwd[s_nid] *= s_f
+        else:
+            eff_fwd, eff_bwd = fwd_t, bwd_t
         alive = [False] * N
         for nid, node in net.nodes.items():
             alive[nid] = node.alive
@@ -275,7 +315,24 @@ class SimulationEngine:
         view = FaultView()
         view.net = net
         view.activation_bytes = self.profile.activation_bytes
-        view.alive, view.crash = alive, crash
+        # hung nodes (and stragglers slow enough that the deadline is
+        # guaranteed to fire on any forward leg) are alive but useless
+        # this iteration: mark them crashed-at-0 in the *policy's* view
+        # (not the engine's own liveness tables) so recovery never
+        # substitutes a microbatch onto one.  The runtime's
+        # RecoveryManager applies the same predicate to its view.
+        blocked = set(hung)
+        for s_nid, s_f in slow.items():
+            if s_nid < N and fwd_t[s_nid] * (s_f - 1.0) > self.timeout:
+                blocked.add(s_nid)
+        if blocked:
+            vcrash = list(crash)
+            for b_nid in blocked:
+                if b_nid < N:
+                    vcrash[b_nid] = 0.0
+            view.alive, view.crash = alive, vcrash
+        else:
+            view.alive, view.crash = alive, crash
         view.busy, view.queues = busy, queues
         view.fwd_t, view.bwd_t = fwd_t, bwd_t
         view.comm_rows, view.edge_rows = comm, edge
@@ -301,6 +358,9 @@ class SimulationEngine:
         comm_total = 0.0
         qdepth = 0
         sends = 0
+        timeouts_ctr = 0
+        retries_ctr = 0
+        rep_reports: List[int] = []       # detection-attributed nodes
         wire_bytes = 0.0
         codec_rows, legb = self._codec_rows, self._legbytes_rows
         codec_hist = [0] * len(self._codec_names)
@@ -322,7 +382,6 @@ class SimulationEngine:
                 # on the wire, encode/decode delay already inside c
                 wire_bytes += legb[frm][to]
                 codec_hist[codec_rows[frm][to]] += 1
-            push((t + c, next(seq), ARRIVE, mb, to, mb.leg, frm))
             # sender expects a COMPLETE within comm+compute+timeout; a slow
             # (overloaded) peer is indistinguishable from a dead one.  The
             # CHECK record itself is materialized lazily, at the stall.
@@ -330,6 +389,16 @@ class SimulationEngine:
                           else fwd_t[to]) + timeout
             mb.deadline = t + expect
             mb.sent_from = frm
+            if (flaky and to != mb.data_node
+                    and not adv.leg_ok(it, mb.id, mb.direction, mb.pos,
+                                       mb.retries)):
+                # delivery dropped on the wire (bytes were still spent):
+                # the receiver never sees the ARRIVE, so the stall point
+                # is known immediately — materialize the CHECK now
+                mb.dropped_leg = mb.leg
+                push((mb.deadline, next(seq), CHECK, mb, to, mb.leg, frm))
+                return
+            push((t + c, next(seq), ARRIVE, mb, to, mb.leg, frm))
 
         def release_slot(mb: _MB, nid: int, t: float):
             nonlocal qdepth
@@ -346,8 +415,8 @@ class SimulationEngine:
                 qmb.wait_node = -1
                 busy[nid] += 1
                 qmb.slots.add(nid)
-                push((t + (bwd_t[nid] if qmb.direction == "bwd"
-                           else fwd_t[nid]),
+                push((t + (eff_bwd[nid] if qmb.direction == "bwd"
+                           else eff_fwd[nid]),
                       next(seq), DONE, qmb, nid, qleg, -1))
                 break
 
@@ -359,7 +428,7 @@ class SimulationEngine:
 
         def recover(mb: _MB, frm: int, dead: int, t: float):
             """Sender `frm` noticed `dead` is unresponsive."""
-            nonlocal qdepth
+            nonlocal qdepth, retries_ctr
             if mb.wait_node >= 0:
                 # leaving the waiting state sideways: the queue entry
                 # goes stale (popped-and-skipped later, or stranded at a
@@ -370,6 +439,7 @@ class SimulationEngine:
                 fail(mb, t)
                 return
             mb.retries += 1
+            retries_ctr += 1
             decision = self.policy.recover(view, mb, frm, dead, t)
             kind = decision[0]
             if kind == "substitute":
@@ -456,20 +526,31 @@ class SimulationEngine:
                         if t > end_time:
                             end_time = t
                     continue
+                if nid in hung:
+                    # hung relay: accepts the microbatch (and holds its
+                    # memory slot — queued work behind it wedges, which
+                    # is the cascade an undefended swarm suffers) but
+                    # never completes it; only the deadline catches it
+                    if nid not in mb.slots and busy[nid] < caps[nid]:
+                        busy[nid] += 1
+                        mb.slots.add(nid)
+                    push((mb.deadline, next(seq), CHECK, mb, nid, leg, frm))
+                    continue
+                done_at = -1.0
                 if mb.direction == "bwd":
                     if nid not in mb.slots and busy[nid] < caps[nid]:
                         busy[nid] += 1
                         mb.slots.add(nid)
-                    push((t + bwd_t[nid], next(seq),
-                          DONE, mb, nid, leg, -1))
+                    done_at = t + eff_bwd[nid]
+                    push((done_at, next(seq), DONE, mb, nid, leg, -1))
                 elif nid in mb.slots:
-                    push((t + fwd_t[nid], next(seq),
-                          DONE, mb, nid, leg, -1))
+                    done_at = t + eff_fwd[nid]
+                    push((done_at, next(seq), DONE, mb, nid, leg, -1))
                 elif busy[nid] < caps[nid]:
                     busy[nid] += 1
                     mb.slots.add(nid)
-                    push((t + fwd_t[nid], next(seq),
-                          DONE, mb, nid, leg, -1))
+                    done_at = t + eff_fwd[nid]
+                    push((done_at, next(seq), DONE, mb, nid, leg, -1))
                 else:
                     # wait for a free slot; may outlive the sender's
                     # patience — materialize the CHECK record
@@ -480,6 +561,14 @@ class SimulationEngine:
                     qdepth += 1
                     if qdepth > qdepth_peak:
                         qdepth_peak = qdepth
+                if (done_at >= 0.0 and deadline_defense and nid in slow
+                        and done_at > mb.deadline):
+                    # deadline-catchable straggler: hedge by
+                    # materializing the CHECK at the (healthy-estimate)
+                    # deadline; the re-dispatch fires there and the
+                    # straggling DONE later pops stale (work wasted)
+                    mb.slow_leg = leg
+                    push((mb.deadline, next(seq), CHECK, mb, nid, leg, frm))
             elif kind == DONE:
                 if leg != mb.leg:
                     # we were rerouted away while this node was computing:
@@ -490,24 +579,24 @@ class SimulationEngine:
                     # inherited verbatim from the pre-refactor loop; a fix
                     # must change reference.py in lockstep or the CI
                     # bit-equivalence gate breaks.
-                    m.wasted_gpu += (bwd_t[nid] if mb.direction == "bwd"
-                                     else fwd_t[nid])
+                    m.wasted_gpu += (eff_bwd[nid] if mb.direction == "bwd"
+                                     else eff_fwd[nid])
                     release_slot(mb, nid, t)
                     continue
                 if not (alive[nid] and t < crash[nid]):
                     # crashed mid-compute: work lost; the sender's
                     # timeout recovers — materialize the CHECK record
-                    m.wasted_gpu += (bwd_t[nid] if mb.direction == "bwd"
-                                     else fwd_t[nid])
+                    m.wasted_gpu += (eff_bwd[nid] if mb.direction == "bwd"
+                                     else eff_fwd[nid])
                     push((mb.deadline, next(seq), CHECK,
                           mb, nid, leg, mb.sent_from))
                     continue
                 if mb.direction == "bwd":
-                    mb.compute_history.append((nid, bwd_t[nid]))
+                    mb.compute_history.append((nid, eff_bwd[nid]))
                     release_slot(mb, nid, t)
                     mb.pos -= 1
                 else:
-                    mb.compute_history.append((nid, fwd_t[nid]))
+                    mb.compute_history.append((nid, eff_fwd[nid]))
                     mb.pos += 1
                 pos = mb.pos
                 nxt = (mb.data_node if (pos <= 0 or pos >= len(mb.path) - 1)
@@ -521,8 +610,48 @@ class SimulationEngine:
                 # no COMPLETE for this leg: the receiver is dead OR too
                 # slow (queued behind an over-committed node) — the sender
                 # cannot tell the difference and reroutes either way.
-                if not (alive[nid] and t < crash[nid]):
+                timeouts_ctr += 1
+                dead_recv = not (alive[nid] and t < crash[nid])
+                if dead_recv:
                     mb.slots.discard(nid)
+                elif nid in hung or mb.slow_leg == leg or \
+                        mb.dropped_leg == leg:
+                    # adversarial stall on an alive receiver
+                    if not deadline_defense:
+                        continue          # undefended: the mb is stuck
+                    if nid in hung or mb.slow_leg == leg:
+                        mb.slow_leg = -1
+                        self.timeline.record(it, "straggler",
+                                             "detection", nid)
+                        rep_reports.append(nid)
+                        if nid in hung and nid in mb.slots:
+                            # free the wedged slot without waking the
+                            # queue — anything queued at a hung node
+                            # must deadline out on its own
+                            mb.slots.discard(nid)
+                            busy[nid] -= 1
+                        recover(mb, frm, nid, t)
+                        if not mb.failed:
+                            self.timeline.record(it, "straggler",
+                                                 "repair", nid)
+                        if t > end_time:
+                            end_time = t
+                        continue
+                    # dropped delivery: bounded retry with linear
+                    # backoff on the same leg before rerouting
+                    mb.dropped_leg = -1
+                    self.timeline.record(it, "flaky_link",
+                                         "detection", nid)
+                    if mb.retries < self.max_retries:
+                        mb.retries += 1
+                        retries_ctr += 1
+                        send(mb, frm, nid, t + 0.5 * mb.retries)
+                        if mb.dropped_leg != mb.leg:
+                            self.timeline.record(it, "flaky_link",
+                                                 "repair", nid)
+                        if t > end_time:
+                            end_time = t
+                        continue
                 recover(mb, frm, nid, t)
                 if t > end_time:
                     end_time = t
@@ -532,6 +661,8 @@ class SimulationEngine:
         m.comm_time = comm_total
         m.queue_depth_peak = qdepth_peak
         m.queue_enqueues = enqueues
+        m.timeouts = timeouts_ctr
+        m.retries = retries_ctr
         if legb is not None:
             m.bytes_on_wire = wire_bytes
             m.codec_legs = {self._codec_names[k]: codec_hist[k]
@@ -575,6 +706,24 @@ class SimulationEngine:
                 mb.failed = True
                 m.wasted_gpu += sum(c for _, c in mb.compute_history)
 
+        # ---- modelled gradient screen (corrupt contributions) ----------
+        # the simulator carries no gradients; it models the runtime's
+        # norm/cosine screen as catching every completed contribution
+        # whose (final, post-reroute) chain crossed a corrupt node — the
+        # harness' detection precision/recall check pins the runtime
+        # screen to exactly this on deterministic programs
+        if corrupt and self.corrupt_screen:
+            cset = frozenset(corrupt)
+            for mb in mbs:
+                if not mb.done:
+                    continue
+                for c_nid in sorted(cset.intersection(mb.path)):
+                    self.timeline.record(it, "corrupt_gradient",
+                                         "detection", c_nid)
+                    self.timeline.record(it, "corrupt_gradient",
+                                         "repair", c_nid)
+                    rep_reports.append(c_nid)
+
         # ---- aggregation phase (Sec. V-E) ------------------------------
         m.aggregation_time = self._aggregation_time(crash_times)
         m.duration = end_time + m.aggregation_time
@@ -583,6 +732,14 @@ class SimulationEngine:
         for nid in crash_times:
             net.kill_node(nid)
             self.policy.on_crash(nid)
+
+        # ---- reputation: decay first (rehabilitation), then charge this
+        # iteration's detections, so the next plan prices fresh faults at
+        # full strength.  Both are exact no-ops on an all-1.0 network.
+        if rep_reports or net.reputation_active():
+            net.decay_reputations()
+            for r_nid in rep_reports:
+                net.report_fault(r_nid)
         return m
 
     # ------------------------------------------------------------------

@@ -53,7 +53,9 @@ class TrainingSimulator:
                  policy: Optional[RoutingPolicy] = None,
                  max_events: int = 500_000,
                  plan_overrun_factor: float = 100.0,
-                 plan_overrun_min_seconds: float = 0.5):
+                 plan_overrun_min_seconds: float = 0.5,
+                 deadline_defense: bool = True,
+                 corrupt_screen: bool = True):
         """scheduler: 'gwtf' (default) | 'swarm' | 'fixed' (preset paths
         — used for the DT-FM optimal-schedule baseline of Table VI)."""
         if churn and churn_model is not None:
@@ -96,7 +98,9 @@ class TrainingSimulator:
             profile=self.profile, timeout=timeout, max_retries=max_retries,
             rng=self.rng, max_events=max_events,
             plan_overrun_factor=plan_overrun_factor,
-            plan_overrun_min_seconds=plan_overrun_min_seconds)
+            plan_overrun_min_seconds=plan_overrun_min_seconds,
+            deadline_defense=deadline_defense,
+            corrupt_screen=corrupt_screen)
 
     def run_iteration(self) -> IterationMetrics:
         return self.engine.run_iteration()

@@ -81,6 +81,10 @@ class IterationMetrics:
     codec_legs: Optional[Dict[str, int]] = None
     #   chosen-codec histogram over comm legs ({codec name: leg count});
     #   None when the menu is trivial (every leg fp32)
+    timeouts: int = 0             # deadline (CHECK) fires that found a
+    #   stalled microbatch — dead, hung, or dropped-delivery receiver
+    retries: int = 0              # recovery attempts spent (bounded by
+    #   max_retries per microbatch; includes flaky-leg resends)
 
     @property
     def time_per_microbatch(self) -> float:
@@ -102,6 +106,8 @@ _COLUMNS = (
     ("queue_depth_peak", lambda m: float(m.queue_depth_peak)),
     ("queue_enqueues", lambda m: float(m.queue_enqueues)),
     ("bytes_on_wire", lambda m: m.bytes_on_wire),
+    ("timeouts", lambda m: float(m.timeouts)),
+    ("retries", lambda m: float(m.retries)),
 )
 
 

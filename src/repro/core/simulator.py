@@ -17,14 +17,18 @@ refactored into the layered engine package `repro.core.sim` —
 Import from `repro.core.sim` in new code; this module stays for the
 existing callers (tests, benchmarks, examples).
 """
-from repro.core.sim import (BernoulliChurn, ComposedChurn, IterationMetrics,
+from repro.core.sim import (BernoulliChurn, ComposedChurn,
+                            CorruptGradientChurn, FaultTimeline,
+                            FlakyLinkChurn, IterationMetrics,
                             LinkDegradationChurn, ModelProfile,
-                            RegionalOutageChurn, SimulationEngine, TraceChurn,
-                            TrainingSimulator, summarize)
+                            RegionalOutageChurn, SimulationEngine,
+                            StragglerChurn, TraceChurn, TrainingSimulator,
+                            summarize)
 
 __all__ = [
     "TrainingSimulator", "SimulationEngine", "ModelProfile",
     "IterationMetrics", "BernoulliChurn", "TraceChurn",
     "RegionalOutageChurn", "ComposedChurn", "LinkDegradationChurn",
-    "summarize",
+    "StragglerChurn", "CorruptGradientChurn", "FlakyLinkChurn",
+    "FaultTimeline", "summarize",
 ]

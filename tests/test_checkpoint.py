@@ -86,3 +86,36 @@ def test_shape_mismatch_still_detected(tmp_path):
     store.save(path, {"a": np.zeros((3, 3))})
     with pytest.raises(ValueError, match="shape mismatch"):
         store.restore(path, {"a": np.zeros((4, 3))})
+
+
+def test_save_leaves_no_temp_residue(tmp_path):
+    """A completed save leaves exactly the final npz + sidecar — the
+    temp files the atomic write goes through are always renamed away."""
+    import os
+
+    path = str(tmp_path / "ck.npz")
+    store.save(path, {"a": np.zeros(3)})
+    assert sorted(os.listdir(tmp_path)) == ["ck.npz", "ck.npz.json"]
+
+
+def test_crashed_save_preserves_previous_checkpoint(tmp_path, monkeypatch):
+    """A save killed mid-archive-write (any churn model can kill a node
+    at an arbitrary time) must leave the previous checkpoint readable
+    under the final name, not a truncated archive."""
+    import os
+
+    path = str(tmp_path / "ck.npz")
+    store.save(path, {"a": np.zeros(3)}, step=1)
+
+    def dying_savez(f, **kw):
+        f.write(b"\x00" * 16)            # truncated garbage, then die
+        raise RuntimeError("killed mid-write")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(RuntimeError, match="killed mid-write"):
+        store.save(path, {"a": np.ones(3)}, step=2)
+    monkeypatch.undo()
+    restored, step = store.restore(path, {"a": np.zeros(3)})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.zeros(3))
+    assert sorted(os.listdir(tmp_path)) == ["ck.npz", "ck.npz.json"]

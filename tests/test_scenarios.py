@@ -14,15 +14,19 @@ from repro.core.flow.mincost import MinCostFlow, solve_training_flow
 from repro.core.scenarios import generate
 from repro.core.scenarios.corpus import (GOLDEN_PINNED, get_scenario,
                                          load_corpus, load_golden)
-from repro.core.scenarios.harness import (FUZZ_CHECKS, SCALE_FUZZ_CHECKS,
+from repro.core.scenarios.harness import (ADVERSARIAL_FUZZ_CHECKS,
+                                          FUZZ_CHECKS, SCALE_FUZZ_CHECKS,
                                           ScenarioDiscrepancy,
                                           check_capacity_monotonicity,
                                           check_codec_agreement,
+                                          check_detection_precision_recall,
+                                          check_fault_timeline,
                                           check_flow_equivalence,
                                           check_optimal_consistency,
                                           check_permutation_invariance,
                                           check_sim_runtime_consistency,
                                           check_zero_churn, fuzz, minimize,
+                                          random_adversarial_spec,
                                           random_scale_spec, run_checks,
                                           scale_checks)
 from repro.core.scenarios.spec import ScenarioSpec
@@ -477,6 +481,45 @@ class TestRuntimeDifferentials:
         out = check_codec_agreement(get_scenario("geo-wan-compress"))
         assert out["flow_codec_hist"]           # someone chose a codec
         assert out["runtime_wire_bytes"] > 0
+
+
+@pytest.mark.scenarios
+class TestAdversarialTier:
+    """Beyond-fail-stop corpus scenarios: the simulator and the
+    real-compute runtime must produce the *same* fault timeline, and
+    on certainly-detectable corruption the runtime screen must hit
+    exact precision and recall."""
+
+    @pytest.mark.parametrize("name", ["adversarial-corrupt",
+                                      "adversarial-straggler",
+                                      "adversarial-flaky"])
+    def test_fault_timeline_cross_layer(self, name):
+        out = check_fault_timeline(get_scenario(name))
+        # non-vacuous: the committed scenarios were chosen so their
+        # fault programs actually fire on both layers
+        assert min(out["records"]) > 0
+        if name in ("adversarial-corrupt", "adversarial-straggler"):
+            assert out["cross_layer_detections"] > 0
+
+    def test_detection_precision_recall(self):
+        out = check_detection_precision_recall(
+            get_scenario("adversarial-corrupt"))
+        assert sum(out["detected"]) > 0
+
+    def test_seeded_adversarial_fuzz(self, tmp_path):
+        """Randomized adversarial fault programs (stragglers/hangs,
+        corrupt gradients, flaky links, optional Bernoulli crashes on
+        top) against the simulator invariants (default 5 s locally;
+        CI sets SCENARIO_ADVERSARIAL_FUZZ_SECONDS=30)."""
+        budget = float(os.environ.get(
+            "SCENARIO_ADVERSARIAL_FUZZ_SECONDS", "5"))
+        rep = fuzz(seed=20260809, budget_seconds=budget,
+                   corpus_dir=str(tmp_path),
+                   checks=ADVERSARIAL_FUZZ_CHECKS,
+                   spec_factory=random_adversarial_spec)
+        assert rep.cases > 0
+        assert rep.ok, "\n\n".join(
+            f"[{f.check}] {f.detail}" for f in rep.failures)
 
 
 @pytest.mark.scenarios
