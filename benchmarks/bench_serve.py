@@ -1,0 +1,200 @@
+"""Serving-plane benchmark: tail latency under churn, defended vs not.
+
+Every committed serving corpus scenario (`spec.has_arrivals`) is run
+through the numpy serving simulator in three configurations:
+
+* **churn0** — the same arrival program with churn stripped (the
+  undisturbed baseline),
+* **defended** — the spec's churn program (plus the overlay below),
+  with the requeue-instead-of-drop defense on: interrupted requests
+  migrate their KV cache to a surviving chain and re-prefill only the
+  crashed stage's slice,
+* **undefended** — identical churn, `reroute=False`: the classic
+  drop-and-retry serving baseline that restarts a victim request from
+  scratch.
+
+All latency numbers are **simulated seconds** — a deterministic
+function of the spec and seed, bit-identical across hosts — so the
+``--smoke`` CI gate needs no host normalization: it requires the
+defended tail metrics to match the committed JSON *exactly* and pins
+the defended-vs-undefended p99-TTFT ratio at >= 2x on the scenarios
+whose churn interrupts requests mid-decode.  (``serve-steady-poisson``
+is kept ungated on purpose: its short decode means the crash lands
+during *prefill*, the k=0 regime where requeue buys nothing over a
+restart — the honest boundary of the defense.)  Wall-clock columns are
+informational only.
+
+``--json PATH`` (default ``BENCH_serve.json``) writes the table.
+Numpy-only; never imports JAX.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.core.scenarios import generate
+from repro.core.scenarios.corpus import load_corpus
+from repro.core.sim.metrics import summarize_serving
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_OUT = REPO_ROOT / "BENCH_serve.json"
+
+#: churn overlays: make every scenario's churn variant actually fault a
+#: planned serving chain (crash nodes chosen on the seed's chain plans).
+CHURN_OVERLAYS = {
+    "serve-steady-poisson": [
+        {"kind": "trace", "events": [(0, "crash", 6, 0.7)]}],
+    "serve-flash-spike": [
+        {"kind": "flash_crowd", "at_iteration": 1, "nodes": 2},
+        {"kind": "trace", "events": [(1, "crash", 5, 0.5)]}],
+}
+
+#: scenarios whose churn interrupts requests mid-decode (k > 0) / mid
+#: assignment — where the requeue defense must beat drop-and-retry.
+GATED = ("serve-flash-spike", "serve-churn-under-load")
+RATIO_FLOOR = 2.0
+
+
+def _tails(ms) -> dict:
+    s = summarize_serving(ms)
+    return {k: round(s[k], 4) for k in
+            ("p50_ttft", "p99_ttft", "p50_tpot", "p99_tpot",
+             "admitted", "completed", "dropped", "requeues", "restarts",
+             "migrated_kv_bytes")}
+
+
+def _run(spec, **kw) -> dict:
+    t0 = time.perf_counter()
+    eng = generate.build_serving_sim(spec, **kw)
+    ms = eng.run(spec.iterations)
+    row = _tails(ms)
+    row["wall_s"] = round(time.perf_counter() - t0, 4)
+    return row
+
+
+def bench_scenario(spec) -> dict:
+    churn = dataclasses.replace(
+        spec, churn=CHURN_OVERLAYS.get(spec.name, spec.churn))
+    churn.validate()
+    crashed = {e[2] for c in churn.churn if c["kind"] == "trace"
+               for e in c["events"] if e[1] == "crash"}
+    nodes = spec.base_nodes + spec.spare_nodes
+    row = {
+        "name": spec.name,
+        "nodes": nodes,
+        "gen_tokens": spec.gen_tokens,
+        "churn_frac": round(len(crashed) / nodes, 4),
+        "churn0": _run(dataclasses.replace(spec, churn=[])),
+        "defended": _run(churn),
+        "undefended": _run(churn, reroute=False),
+    }
+    row["p99_ttft_ratio"] = round(
+        row["undefended"]["p99_ttft"]
+        / max(row["defended"]["p99_ttft"], 1e-9), 4)
+    return row
+
+
+def run_sweep() -> list:
+    rows = []
+    hdr = (f"{'scenario':24s} {'nodes':>5s} {'churn%':>6s} "
+           f"{'p99ttft@0':>9s} {'def p99':>8s} {'und p99':>8s} "
+           f"{'ratio':>6s} {'rq':>4s} {'rs':>4s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for spec in load_corpus():
+        if not spec.has_arrivals:
+            continue
+        r = bench_scenario(spec)
+        rows.append(r)
+        print(f"{r['name']:24s} {r['nodes']:5d} "
+              f"{100 * r['churn_frac']:6.1f} "
+              f"{r['churn0']['p99_ttft']:9.2f} "
+              f"{r['defended']['p99_ttft']:8.2f} "
+              f"{r['undefended']['p99_ttft']:8.2f} "
+              f"{r['p99_ttft_ratio']:6.2f} "
+              f"{r['defended']['requeues']:4.0f} "
+              f"{r['undefended']['restarts']:4.0f}")
+    return rows
+
+
+def _payload(rows) -> dict:
+    return {
+        "meta": {
+            "metric": ("simulated-seconds TTFT/TPOT tails from the "
+                       "serving event simulator; defended = requeue + "
+                       "KV migration, undefended = drop-and-retry "
+                       "(reroute=False); deterministic per spec seed"),
+            "ratio_floor": RATIO_FLOOR,
+            "gated": list(GATED),
+        },
+        "results": rows,
+    }
+
+
+def smoke(committed_path: Path) -> int:
+    """CI gate: simulated tails must match the committed JSON exactly
+    (they are host-independent), and on every gated scenario the
+    defended p99 TTFT must stay >= RATIO_FLOOR x better than the
+    undefended drop-and-retry baseline."""
+    rows = run_sweep()
+    failures = []
+    committed = {}
+    floor = RATIO_FLOOR
+    if committed_path.exists():
+        data = json.loads(committed_path.read_text())
+        committed = {r["name"]: r for r in data["results"]}
+        floor = data["meta"].get("ratio_floor", RATIO_FLOOR)
+    else:
+        print(f"no committed {committed_path.name}; ratio gate only")
+    for r in rows:
+        name = r["name"]
+        if name in GATED and r["p99_ttft_ratio"] < floor:
+            failures.append(
+                f"{name}: defended p99 TTFT advantage "
+                f"{r['p99_ttft_ratio']:.2f}x under churn fell below the "
+                f"pinned {floor}x floor")
+        base = committed.get(name)
+        if base is None:
+            continue
+        for variant in ("churn0", "defended", "undefended"):
+            got = dict(r[variant])
+            want = dict(base[variant])
+            got.pop("wall_s", None)
+            want.pop("wall_s", None)
+            if got != want:
+                failures.append(
+                    f"{name}/{variant}: simulated serving tails diverged "
+                    f"from committed {committed_path.name} "
+                    f"(got {got}, committed {want})")
+    if failures:
+        print("SMOKE FAILURES:")
+        for f in failures:
+            print(" -", f)
+        return 1
+    print(f"smoke ok: {len(rows)} scenarios, gated {list(GATED)} "
+          f">= {floor}x")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", type=Path, default=DEFAULT_OUT,
+                    help="write the table to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate against the committed JSON; writes "
+                         "nothing")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke(DEFAULT_OUT)
+    rows = run_sweep()
+    args.json.write_text(json.dumps(_payload(rows), indent=2) + "\n")
+    print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,6 +50,25 @@ matrix *objects* — are bit-identical to the reputation-free
 implementation.  Reputation survives ``kill_node``/rejoin: quarantine
 is about trust, not liveness.
 
+KV-residency pricing (serving plane)
+------------------------------------
+When the same stage graph carries decode traffic, a node holding N
+resident KV-cache sequences is the serving analogue of a loaded
+activation store: every edge INTO node j pays an extra
+
+    kv_weight * residency_j
+
+on ``cost_matrix()``/``edge_matrix()``/``edge_cost()`` (planner-facing
+matrices only, like reputation — residency does not move bytes slower,
+it just makes loaded nodes less attractive to *new* chains).  The
+default ``kv_weight = 0`` / empty residency keeps the trivial ``None``
+storage whose arithmetic and cached matrix objects are bit-identical to
+the serving-free implementation.  Evicting/migrating a resident
+sequence to another node pays ``kv_migration_cost(i, j, kv_bytes)`` —
+the KV payload priced through the same admissible-wire-codec
+communication model as activations (FusionLLM's compressed geo-links
+apply to KV-boundary traffic verbatim).
+
 Scale notes
 -----------
 ``edge_cost``/``comm_cost`` are the innermost calls of both the protocol
@@ -162,6 +181,8 @@ class FlowNetwork:
     fidelity_weight: float = 1.0  # seconds-equivalent per unit penalty
     reputation_weight: float = 50.0  # seconds-equivalent per unit of
     #   distrust (1/rep - 1) on edges into a suspected node
+    kv_weight: float = 0.0       # seconds-equivalent per KV-resident
+    #   sequence on edges into a loaded node (serving plane; 0 = off)
 
     # ------------------------------------------------------------------
     # Cached Eq. 1 cost model
@@ -174,7 +195,7 @@ class FlowNetwork:
         # invalidate_costs().
         if name in ("latency", "bandwidth", "activation_size",
                     "codec_menu", "fidelity_budget", "fidelity_weight",
-                    "reputation_weight"):
+                    "reputation_weight", "kv_weight"):
             object.__setattr__(self, "_cost_version",
                                getattr(self, "_cost_version", 0) + 1)
 
@@ -333,10 +354,115 @@ class FlowNetwork:
         self._rep_pen = (cc["version"], vec)
         return vec
 
+    # -- KV-cache residency (serving plane) -----------------------------
+    def _kv_trivial(self) -> bool:
+        """True when no sequence is resident anywhere (storage ``None``)
+        or the surcharge is off; pricing reduces to the exact
+        serving-free arithmetic."""
+        return (getattr(self, "_kv_residency", None) is None
+                or self.kv_weight == 0.0)
+
+    def kv_active(self) -> bool:
+        """True while any node carries resident sequences (and the
+        surcharge weight is non-zero)."""
+        return not self._kv_trivial()
+
+    def _kv_array(self) -> np.ndarray:
+        """Materialize (and grow) the residency vector for mutation."""
+        n = (max(self.nodes) + 1) if self.nodes else 0
+        res = getattr(self, "_kv_residency", None)
+        if res is None:
+            res = np.zeros(n)
+        elif res.shape[0] < n:
+            grown = np.zeros(n)         # joiners start empty
+            grown[:res.shape[0]] = res
+            res = grown
+        self._kv_residency = res
+        return res
+
+    def kv_residency(self, nid: int) -> int:
+        """Resident-sequence count the planner prices on node ``nid``."""
+        res = getattr(self, "_kv_residency", None)
+        if res is None or nid >= res.shape[0]:
+            return 0
+        return int(res[nid])
+
+    def set_kv_residency(self, nid: int, count: int):
+        """Pin one node's resident-sequence count."""
+        if count < 0:
+            raise ValueError(f"kv residency must be >= 0, got {count}")
+        res = self._kv_array()
+        res[nid] = count
+        self._maybe_snap_kv_trivial()
+        self.invalidate_costs()
+
+    def update_kv_residency(self, counts: Dict[int, int]):
+        """Replace the whole residency map in one cache epoch (the
+        serving engine's per-iteration bulk update).  An empty map snaps
+        storage back to the trivial ``None`` state."""
+        res = self._kv_array()
+        res[:] = 0.0
+        for nid, count in counts.items():
+            if count < 0:
+                raise ValueError(
+                    f"kv residency must be >= 0, got {count} for {nid}")
+            if count and nid < res.shape[0]:
+                res[nid] = count
+        self._maybe_snap_kv_trivial()
+        self.invalidate_costs()
+
+    def _maybe_snap_kv_trivial(self):
+        res = getattr(self, "_kv_residency", None)
+        if res is not None and float(np.max(res)) < 1e-9:
+            self._kv_residency = None
+
+    def _kv_penalty(self, cc: dict) -> Optional[np.ndarray]:
+        """Per-destination surcharge vector ``kv_weight * residency``,
+        or ``None`` in the trivial state.  Cached per cost-cache epoch
+        (residency mutators bump the version)."""
+        if self._kv_trivial():
+            return None
+        cached = getattr(self, "_kv_pen", None)
+        if cached is not None and cached[0] == cc["version"]:
+            return cached[1]
+        res = self._kv_residency
+        n = cc["lat_avg"].shape[0]
+        r = np.zeros(n)
+        m = min(n, res.shape[0])
+        r[:m] = res[:m]
+        vec = self.kv_weight * r
+        self._kv_pen = (cc["version"], vec)
+        return vec
+
+    def kv_migration_cost(self, i: int, j: int, kv_bytes: float) -> float:
+        """Price of migrating one resident sequence's KV slice from
+        node ``i`` to node ``j``: the KV payload moved through the same
+        admissible-wire-codec communication model as activations."""
+        return self.comm_cost(i, j, kv_bytes)
+
+    # -- combined per-destination planner penalty -----------------------
+    def _dest_penalty(self, cc: dict) -> Optional[np.ndarray]:
+        """Reputation + KV-residency penalty per destination column, or
+        ``None`` when both layers are trivial (the bit-identical path).
+        Epoch-cached; when only one layer is active its vector is
+        returned untouched (no ``+ 0.0`` pass over it)."""
+        rep = self._rep_penalty(cc)
+        kv = self._kv_penalty(cc)
+        if kv is None:
+            return rep
+        if rep is None:
+            return kv
+        cached = getattr(self, "_dest_pen", None)
+        if cached is not None and cached[0] == cc["version"]:
+            return cached[1]
+        vec = rep + kv
+        self._dest_pen = (cc["version"], vec)
+        return vec
+
     def _cost_with_rep(self, cc: dict) -> np.ndarray:
-        """``cc["cost"]`` plus the reputation penalty, epoch-cached;
+        """``cc["cost"]`` plus the destination penalties, epoch-cached;
         returns the untouched legacy object in the trivial state."""
-        pen = self._rep_penalty(cc)
+        pen = self._dest_penalty(cc)
         if pen is None:
             return cc["cost"]
         cached = getattr(self, "_cost_rep", None)
@@ -447,7 +573,7 @@ class FlowNetwork:
         per-epoch size dict; treat as read-only.
         """
         cc = self._cost_cache()
-        pen = self._rep_penalty(cc)
+        pen = self._dest_penalty(cc)
         if self._wire_trivial():
             if size is None:
                 return self._cost_with_rep(cc)
@@ -491,7 +617,7 @@ class FlowNetwork:
         """Eq. 1 cost of moving one microbatch between nodes i and j."""
         cc = self._cost_cache()
         if self._wire_trivial():
-            pen = self._rep_penalty(cc)
+            pen = self._dest_penalty(cc)
             if size is None:
                 if pen is None:
                     return float(cc["cost"][i, j])

@@ -1,0 +1,396 @@
+"""ServeTrainer: real-compute decode executor over the flow engine's chains.
+
+The serving analogue of `runtime/trainer.py`: where `RuntimeTrainer`
+executes the simulator's *training* plans with real JAX compute, the
+`ServeTrainer` executes the :class:`ServingEngine`'s per-request decode
+schedules with real token streams.  The trainer embeds its own
+`ServingEngine` instance — constructed from an independently built
+policy/churn stream mirroring `build_serving_sim` — so the serving
+differential check can pin per-iteration chain plans, request
+conservation, and TTFT/TPOT to exact equality between the two layers.
+
+Continuous batching reuses the same-stage stacking trick from
+`stages.py`: sequences decoding at the same token index on the same
+chain are stacked along the batch axis into ONE `decode_step` dispatch
+(caches stacked/split with `tree_map`), which on this backend is
+bit-identical to decoding each row alone — the same property the
+training runtime's per-stage microbatch stacking rests on.  Dispatch
+counters (`decode_dispatches`, `stacked_rows`) are the ground truth
+for the batching tests, exactly like `StageCompute.fwd_calls`.
+
+Crash-mid-decode recovery is requeue-instead-of-drop: the engine
+reroutes the in-flight sequence to a surviving chain, and the executor
+rebuilds the migrated KV cache by *teacher-forced replay* — prefill
+the prompt, then re-run `decode_step` over the already-generated
+tokens.  Replay repeats the exact ops the original incremental decode
+ran, so the rebuilt cache (and every subsequent logit) is bit-identical
+by construction and the token stream continues exactly where it left
+off.  (Re-prefilling prompt+tokens in one `prefill` call is *not*
+bitwise-stable against incremental decode — full-sequence attention
+associates differently — which is why replay is the repair primitive,
+mirroring `StageCompute.backward`'s replay-the-same-programs
+discipline.)  `FaultTimeline` records the serving crashes verbatim
+through the embedded engine.
+
+Seeding: `serving_keys`/`serving_inputs` split one root PRNGKey into
+independent params / prompt / aux-input / sampling keys — shared with
+`launch/serve.py`, so a zero-churn ServeTrainer run decodes the exact
+token streams of the standalone serving CLI on the same reduced config.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.flow.graph import FlowNetwork
+from repro.core.sim.engine import ServingEngine
+from repro.core.sim.faults import ChurnModel
+from repro.core.sim.metrics import ModelProfile, ServingIterationMetrics
+from repro.core.sim.policies import RoutingPolicy
+
+
+def serving_keys(seed: int):
+    """Independent RNG keys for the serving setup.
+
+    One root `PRNGKey(seed)` split four ways: parameter init, prompt
+    synthesis, auxiliary modality inputs (vision tokens / audio
+    embeddings), and sampling.  `launch/serve.py` and `ServeTrainer`
+    both consume exactly this split, which is what makes their decode
+    paths bit-comparable under one seed.
+    """
+    import jax
+
+    root = jax.random.PRNGKey(seed)
+    k_params, k_prompt, k_aux, k_sample = jax.random.split(root, 4)
+    return k_params, k_prompt, k_aux, k_sample
+
+
+def serving_inputs(cfg, *, seed: int, batch: int, prompt_len: int):
+    """Seeded `(params, prompt, vision, embeds, sample_key)` setup.
+
+    Each draw consumes its own key from :func:`serving_keys` — the
+    pre-fix serving driver reused one unsplit key for all four, which
+    correlated the parameter init with the synthetic prompts.
+    """
+    import jax
+
+    from repro.models.transformer import init_params
+
+    k_params, k_prompt, k_aux, k_sample = serving_keys(seed)
+    params = init_params(cfg, k_params)
+    prompt = jax.random.randint(k_prompt, (batch, prompt_len), 0,
+                                cfg.vocab_size)
+    vision = (jax.random.normal(k_aux, (batch, cfg.num_image_tokens,
+                                        cfg.vision_dim))
+              if cfg.arch_type == "vlm" else None)
+    embeds = (jax.random.normal(k_aux, (batch, prompt_len, cfg.d_model))
+              if cfg.audio_frontend else None)
+    return params, prompt, vision, embeds, k_sample
+
+
+class _Seq:
+    """One request's executor-side decode state."""
+
+    __slots__ = ("rid", "chain", "stream", "cache", "live")
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self.chain: Optional[Tuple[int, ...]] = None
+        self.stream: List[int] = []        # greedy tokens generated so far
+        self.cache: Any = None             # batch-1 KV cache pytree
+        self.live = False                  # cache currently valid
+
+
+class ServeTrainer:
+    """Staged decode executor driven by an embedded `ServingEngine`.
+
+    Each `iteration()` first advances the engine (churn sample, chain
+    plan, analytic request schedule), then executes the schedule with
+    real compute: batched prefills for admission cohorts, stacked
+    `decode_step` dispatches for same-index same-chain cohorts, and
+    teacher-forced cache replay for requeued sequences.  Token streams
+    land in `token_stream(rid)`; scheduling metrics pass through from
+    the engine unchanged (the executor adds no timing of its own —
+    simulated time is the engine's job, real compute is ours).
+    """
+
+    def __init__(self, cfg, net: FlowNetwork, *,
+                 policy: RoutingPolicy,
+                 arrival_program: List[List[float]],
+                 churn_model: Optional[ChurnModel] = None,
+                 profile: Optional[ModelProfile] = None,
+                 prompt_len: int = 8, gen_tokens: int = 8,
+                 serve_batch: int = 4, tokens_per_mb: int = 128,
+                 timeout: float = 5.0, reroute: bool = True,
+                 max_restarts: int = 5,
+                 rng: Optional[np.random.Generator] = None,
+                 seed: int = 0, max_requests: int = 64):
+        self.cfg = cfg
+        self.net = net
+        self.engine = ServingEngine(
+            net, policy, arrival_program=arrival_program,
+            churn_model=churn_model, profile=profile,
+            prompt_len=prompt_len, gen_tokens=gen_tokens,
+            serve_batch=serve_batch, tokens_per_mb=tokens_per_mb,
+            timeout=timeout, reroute=reroute, max_restarts=max_restarts,
+            rng=rng)
+        self.timeline = self.engine.timeline
+        self.prompt_len = int(prompt_len)
+        self.gen_tokens = int(gen_tokens)
+        self.cache_len = self.prompt_len + self.gen_tokens
+        self.seed = int(seed)
+        self.max_requests = int(max_requests)
+        self.params, self._prompts, _, _, _ = serving_inputs(
+            cfg, seed=seed, batch=max_requests, prompt_len=prompt_len)
+        self._seqs: Dict[int, _Seq] = {}
+        self._cache_axes = None            # per-leaf batch axis, lazy
+        # dispatch accounting (the batching tests' ground truth)
+        self.prefill_calls = 0
+        self.decode_dispatches = 0
+        self.stacked_rows = 0
+        self.replay_steps = 0              # teacher-forced cache rebuilds
+
+    # ------------------------------------------------------------------
+    def _prompt_row(self, rid: int):
+        """Prompt tokens for request ``rid`` (row of the shared seeded
+        batch; overflow requests fold the rid into the prompt key so
+        arbitrarily many arrivals stay deterministic)."""
+        import jax
+
+        if rid < self.max_requests:
+            return self._prompts[rid:rid + 1]
+        _, k_prompt, _, _ = serving_keys(self.seed)
+        return jax.random.randint(jax.random.fold_in(k_prompt, rid),
+                                  (1, self.prompt_len), 0,
+                                  self.cfg.vocab_size)
+
+    def _seq(self, rid: int) -> _Seq:
+        s = self._seqs.get(rid)
+        if s is None:
+            s = self._seqs[rid] = _Seq(rid)
+        return s
+
+    def _stack(self, rows: List[Any]):
+        """Stack batch-1 cache pytrees along each leaf's batch axis."""
+        import jax
+        import jax.numpy as jnp
+
+        if self._cache_axes is None:
+            self._cache_axes = _batch_axes(self.cfg, self.cache_len)
+        flat = [jax.tree_util.tree_flatten(r) for r in rows]
+        treedef = flat[0][1]
+        leaves = [jnp.concatenate([f[0][i] for f in flat], axis=ax)
+                  for i, ax in enumerate(self._cache_axes)]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def _split(self, cache: Any, batch: int) -> List[Any]:
+        """Split a batch-B cache pytree back into B batch-1 rows."""
+        import jax
+        import jax.numpy as jnp
+
+        if self._cache_axes is None:
+            self._cache_axes = _batch_axes(self.cfg, self.cache_len)
+        leaves, treedef = jax.tree_util.tree_flatten(cache)
+        return [jax.tree_util.tree_unflatten(
+                    treedef,
+                    [jax.lax.slice_in_dim(x, b, b + 1, axis=ax)
+                     for x, ax in zip(leaves, self._cache_axes)])
+                for b in range(batch)]
+
+    # -- stacked primitives ---------------------------------------------
+    def _prefill_cohort(self, seqs: List[_Seq]):
+        """One stacked prefill dispatch for an admission cohort."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.transformer import init_cache, prefill
+
+        B = len(seqs)
+        tokens = jnp.concatenate([self._prompt_row(s.rid) for s in seqs],
+                                 axis=0)
+        cache = init_cache(self.cfg, B, self.cache_len, dtype=jnp.float32)
+        logits, cache = prefill(self.params, self.cfg, tokens=tokens,
+                                cache=cache)
+        self.prefill_calls += 1
+        first = jnp.argmax(logits, -1)
+        rows = self._split(cache, B)
+        for b, s in enumerate(seqs):
+            s.cache = rows[b]
+            s.live = True
+            s.stream = [int(first[b])]
+
+    def _decode_cohort(self, seqs: List[_Seq], index: int):
+        """ONE stacked `decode_step` dispatch: every sequence in the
+        cohort sits at the same token index (the same-stage stacking
+        trick applied to serving)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.transformer import decode_step
+
+        B = len(seqs)
+        tok = jnp.asarray([[s.stream[-1]] for s in seqs], dtype=jnp.int32)
+        cache = self._stack([s.cache for s in seqs])
+        logits, cache = decode_step(self.params, self.cfg, tokens=tok,
+                                    cache=cache, index=jnp.int32(index))
+        self.decode_dispatches += 1
+        self.stacked_rows += B
+        nxt = jnp.argmax(logits, -1)
+        rows = self._split(cache, B)
+        for b, s in enumerate(seqs):
+            s.cache = rows[b]
+            s.stream.append(int(nxt[b]))
+
+    def _replay_cache(self, s: _Seq):
+        """Rebuild a migrated/evicted sequence's KV cache bit-exactly:
+        prefill the prompt, then teacher-force the generated tokens
+        through the same `decode_step` programs the original run used.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.transformer import decode_step, init_cache, prefill
+
+        cache = init_cache(self.cfg, 1, self.cache_len, dtype=jnp.float32)
+        _, cache = prefill(self.params, self.cfg,
+                           tokens=self._prompt_row(s.rid), cache=cache)
+        self.prefill_calls += 1
+        for j in range(len(s.stream) - 1):
+            tok = jnp.asarray([[s.stream[j]]], dtype=jnp.int32)
+            _, cache = decode_step(self.params, self.cfg, tokens=tok,
+                                   cache=cache,
+                                   index=jnp.int32(self.prompt_len + j))
+            self.replay_steps += 1
+        s.cache = cache
+        s.live = True
+
+    # ------------------------------------------------------------------
+    def _advance(self, targets: Dict[int, int]):
+        """Decode every sequence up to its target token count with
+        same-index same-chain cohorts stacked into single dispatches."""
+        pending = {rid: tgt for rid, tgt in targets.items()
+                   if tgt > len(self._seq(rid).stream)}
+        # admissions first: fresh sequences need their prefill token
+        fresh: Dict[Tuple[int, ...], List[_Seq]] = {}
+        for rid in sorted(pending):
+            s = self._seq(rid)
+            if not s.stream and not s.live:
+                fresh.setdefault(s.chain or (), []).append(s)
+        for cohort in fresh.values():
+            self._prefill_cohort(cohort)
+        # then decode rounds: group by (chain, current index)
+        while True:
+            groups: Dict[Tuple[Tuple[int, ...], int], List[_Seq]] = {}
+            for rid, tgt in sorted(pending.items()):
+                s = self._seq(rid)
+                if len(s.stream) >= tgt:
+                    continue
+                if not s.live:
+                    self._replay_cache(s)
+                idx = self.prompt_len + len(s.stream) - 1
+                groups.setdefault((s.chain or (), idx), []).append(s)
+            if not groups:
+                break
+            for (_, idx), cohort in groups.items():
+                self._decode_cohort(cohort, idx)
+
+    # ------------------------------------------------------------------
+    def iteration(self) -> ServingIterationMetrics:
+        """Advance the engine one iteration, then execute its schedule
+        with real compute."""
+        m = self.engine.run_iteration()
+        trace = self.engine.traces[-1]
+        # process schedule incidents in chronological order: requeues
+        # need the victim advanced to its crash-time token count before
+        # the migration replays its cache on the new chain
+        for op in trace:
+            kind = op[0]
+            if kind == "start":
+                _, _, rid, chain, pre = op
+                s = self._seq(rid)
+                s.chain = chain
+                if pre == 0 and s.stream and not s.live:
+                    s.stream = []          # drop-and-retry restart landed
+                if pre > 0:
+                    self._advance({rid: pre})
+                    s.live = False         # queued eviction lost the KV
+            elif kind == "requeue":
+                _, _, rid, _old, new, k = op
+                s = self._seq(rid)
+                if k > 0:
+                    self._advance({rid: k})
+                else:
+                    s.stream = []
+                s.chain = new
+                s.live = False             # migration re-materializes it
+            elif kind == "requeue_wait":
+                _, _, rid, k = op
+                s = self._seq(rid)
+                if k > 0:
+                    self._advance({rid: k})
+                else:
+                    s.stream = []
+                s.chain = None
+                s.live = False
+            elif kind == "restart":
+                s = self._seq(op[2])
+                s.stream = []
+                s.cache = None
+                s.live = False
+                s.chain = None
+        # advance everything to the engine's end-of-iteration census
+        targets: Dict[int, int] = {}
+        for rid, rec in self.engine.requests.items():
+            if rec.dropped:
+                continue
+            tgt = self.engine.tokens_now(rid)
+            if tgt:
+                targets[rid] = tgt
+        self._advance(targets)
+        # completed sequences release their executor cache
+        for rid, rec in self.engine.requests.items():
+            if rec.completion is not None:
+                s = self._seqs.get(rid)
+                if s is not None and s.cache is not None:
+                    s.cache = None
+                    s.live = False
+        return m
+
+    def run(self, iterations: int) -> List[ServingIterationMetrics]:
+        return [self.iteration() for _ in range(iterations)]
+
+    # ------------------------------------------------------------------
+    def token_stream(self, rid: int) -> List[int]:
+        """Greedy token stream decoded so far for request ``rid``."""
+        s = self._seqs.get(rid)
+        return list(s.stream) if s is not None else []
+
+
+def _batch_axes(cfg, cache_len: int) -> List[int]:
+    """Per-leaf batch-axis index of the decode cache pytree.
+
+    Cache layouts differ by architecture (attention leaves are
+    ``(layers, batch, len, kvd)``, VLM cross-attention adds a
+    cross-layer axis, SSM state has its own shape), so the batch axis
+    is *detected*: allocate a batch-1 and a batch-2 cache and find the
+    one axis where each leaf's shape differs.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.transformer import init_cache
+
+    l1 = jax.tree_util.tree_leaves(init_cache(cfg, 1, cache_len,
+                                              dtype=jnp.float32))
+    l2 = jax.tree_util.tree_leaves(init_cache(cfg, 2, cache_len,
+                                              dtype=jnp.float32))
+    axes = []
+    for a, b in zip(l1, l2):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                if x != y]
+        if len(diff) != 1:  # pragma: no cover - cache layout invariant
+            raise ValueError(f"ambiguous cache batch axis: "
+                             f"{a.shape} vs {b.shape}")
+        axes.append(diff[0])
+    return axes

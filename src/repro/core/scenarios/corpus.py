@@ -37,7 +37,8 @@ GOLDEN_PATH = os.path.join(_HERE, "golden.json")
 #: scenarios whose sim `summarize` columns the golden regression test
 #: pins tolerance-free (GWTF runs are bit-deterministic per seed)
 GOLDEN_PINNED = ("table2-het-churn10", "geo-regional-blackout",
-                 "adversarial-straggler", "adversarial-flaky")
+                 "adversarial-straggler", "adversarial-flaky",
+                 "serve-steady-poisson", "serve-churn-under-load")
 
 
 def _corpus() -> List[ScenarioSpec]:
@@ -152,6 +153,53 @@ def _corpus() -> List[ScenarioSpec]:
                      seq_len=16, microbatch_size=1,
                      churn=[{"kind": "flaky_link", "p": 0.15,
                              "seed": 3}]),
+        # ---- serving plane: decode traffic over the flow engine ------
+        # steady open-loop Poisson load, zero churn, KV-residency
+        # pricing on: the baseline serving regime whose TTFT/TPOT row
+        # the golden table pins and whose zero-churn decode must be
+        # bit-identical to the standalone launch/serve.py path
+        # (harness.check_serving_consistency)
+        ScenarioSpec(name="serve-steady-poisson", seed=26,
+                     topology="geo", num_stages=3, relays_per_stage=3,
+                     num_data_nodes=1, data_capacity=4,
+                     capacity_range=(2, 4), iterations=4, microbatches=4,
+                     model_layers=2, model_d=32, model_vocab=128,
+                     seq_len=16, microbatch_size=1,
+                     prompt_len=8, gen_tokens=8, serve_batch=4,
+                     kv_weight=0.5,
+                     arrivals=[{"kind": "poisson", "rate": 2.0}]),
+        # the geo-flash-crowd shape reused as a serving spike: spare
+        # relays rejoin exactly when the request flash crowd lands, so
+        # admission pressure and fresh capacity hit the planner in the
+        # same iteration
+        ScenarioSpec(name="serve-flash-spike", seed=27,
+                     topology="geo", num_stages=3, relays_per_stage=3,
+                     num_data_nodes=1, data_capacity=4,
+                     capacity_range=(2, 4), iterations=4, microbatches=4,
+                     model_layers=2, model_d=32, model_vocab=128,
+                     seq_len=16, microbatch_size=1, spare_nodes=2,
+                     prompt_len=8, gen_tokens=8, serve_batch=2,
+                     arrivals=[{"kind": "poisson", "rate": 1.0},
+                               {"kind": "spike", "at_iteration": 1,
+                                "requests": 6, "when": 0.3}],
+                     churn=[{"kind": "flash_crowd", "at_iteration": 1,
+                             "nodes": 2}]),
+        # deterministic crash while decodes are in flight: the
+        # requeue-instead-of-drop path (KV migration + crashed-stage
+        # re-prefill) pinned by the golden table and replayed with real
+        # compute by the serving differential
+        ScenarioSpec(name="serve-churn-under-load", seed=28,
+                     topology="geo", num_stages=3, relays_per_stage=3,
+                     num_data_nodes=1, data_capacity=4,
+                     capacity_range=(2, 4), iterations=4, microbatches=4,
+                     model_layers=2, model_d=32, model_vocab=128,
+                     seq_len=16, microbatch_size=1,
+                     prompt_len=8, gen_tokens=48, serve_batch=4,
+                     arrivals=[{"kind": "spike", "at_iteration": 1,
+                                "requests": 4, "when": 0.2},
+                               {"kind": "poisson", "rate": 1.0}],
+                     churn=[{"kind": "trace",
+                             "events": [[1, "crash", 5, 0.4]]}]),
         # ---- abstract flow settings (paper Tables IV/V) --------------
         ScenarioSpec(name="flow-tableV-1", seed=22, topology="synthetic",
                      num_stages=8, relays_per_stage=5, num_data_nodes=1,
@@ -241,18 +289,23 @@ def get_scenario(name: str) -> ScenarioSpec:
 # ---------------------------------------------------------------------------
 
 def compute_golden(spec: ScenarioSpec) -> Dict:
-    """The pinned observables for one scenario: flow-layer outcome and
-    the simulator's summarize() table."""
-    from repro.core.sim.metrics import summarize
+    """The pinned observables for one scenario: flow-layer outcome,
+    the simulator's summarize() table, and — for specs with an arrival
+    program — the serving plane's summarize_serving() row (request
+    counters + p50/p99 TTFT/TPOT, bit-deterministic per seed)."""
+    from repro.core.sim.metrics import summarize, summarize_serving
 
     flow = generate.run_flow(spec, "batched")
     table = summarize(generate.run_sim(spec), warmup=1)
-    return {
+    out = {
         "flow": {"chains": len(flow.flows),
                  "total_cost": flow.total_cost,
                  "rounds": flow.rounds},
         "sim": {k: list(v) for k, v in table.items()},
     }
+    if spec.has_arrivals:
+        out["serving"] = summarize_serving(generate.run_serving_sim(spec))
+    return out
 
 
 def load_golden() -> Dict[str, Dict]:

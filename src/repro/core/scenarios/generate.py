@@ -50,6 +50,7 @@ _SALT_NET = 2         # topology link/jitter draw
 _SALT_SPARE = 3       # spare-node (flash crowd) attribute draw
 _SALT_FLOW = 4        # flow-protocol annealing stream
 _SALT_POLICY = 5      # sim/runtime policy + churn stream (shared!)
+_SALT_ARRIVALS = 6    # serving request-arrival program compilation
 
 
 def _rng(spec: ScenarioSpec, salt: int) -> np.random.Generator:
@@ -537,3 +538,124 @@ def run_runtime(spec: ScenarioSpec, iterations: Optional[int] = None,
     trainer, batches = build_runtime(spec, **kw)
     its = iterations if iterations is not None else spec.iterations
     return [trainer.iteration(batches) for _ in range(its)]
+
+
+# ---------------------------------------------------------------------------
+# Serving plane: arrival programs + the serving sim/runtime builders
+# ---------------------------------------------------------------------------
+
+def _arrivals_rng(spec: ScenarioSpec, clause_seed: int, clause_idx: int,
+                  iteration: int) -> np.random.Generator:
+    """Counter-based generator for one (clause, iteration) cell — the
+    flaky-link seeding pattern, so arrival programs are a pure function
+    of the spec with no cross-iteration or cross-clause stream
+    coupling (clauses can be added/removed without reshuffling the
+    others' draws)."""
+    return np.random.default_rng(
+        [spec.seed, _SALT_ARRIVALS, clause_seed, clause_idx, iteration])
+
+
+def _clause_active(clause: Dict[str, Any], it: int) -> bool:
+    at = int(clause.get("at_iteration", 0))
+    dur = int(clause.get("duration", 0))
+    return it >= at and (dur == 0 or it < at + dur)
+
+
+def compile_arrivals(spec: ScenarioSpec) -> List[List[float]]:
+    """Compile the spec's ``arrivals`` clauses into the open-loop
+    request program: per-iteration sorted lists of arrival offsets in
+    ``[0, 1)`` (fractions of the iteration horizon).
+
+    ``poisson`` draws ``Poisson(rate)`` arrivals per active iteration
+    at sorted-uniform offsets; ``diurnal`` modulates the rate with a
+    raised cosine (trough at ``low_scale * rate``, period in
+    iterations); ``spike`` lands ``requests`` simultaneous arrivals at
+    fraction ``when`` of one iteration (the flash-crowd shape).  An
+    empty program compiles to empty lists (RNG-free).
+    """
+    program: List[List[float]] = []
+    for it in range(spec.iterations):
+        offs: List[float] = []
+        for idx, clause in enumerate(spec.arrivals):
+            kind = clause["kind"]
+            if not _clause_active(clause, it):
+                continue
+            if kind == "poisson":
+                rng = _arrivals_rng(spec, int(clause.get("seed", 0)),
+                                    idx, it)
+                n = int(rng.poisson(float(clause["rate"])))
+                offs.extend(float(u) for u in np.sort(rng.uniform(0, 1, n)))
+            elif kind == "diurnal":
+                low = float(clause.get("low_scale", 0.25))
+                period = int(clause["period"])
+                phase = (it - int(clause.get("at_iteration", 0))) % period
+                scale = low + (1.0 - low) * 0.5 * (
+                    1.0 + np.cos(2.0 * np.pi * phase / period))
+                rng = _arrivals_rng(spec, int(clause.get("seed", 0)),
+                                    idx, it)
+                n = int(rng.poisson(float(clause["rate"]) * scale))
+                offs.extend(float(u) for u in np.sort(rng.uniform(0, 1, n)))
+            elif kind == "spike":
+                if it == int(clause["at_iteration"]):
+                    offs.extend([float(clause.get("when", 0.25))]
+                                * int(clause["requests"]))
+            else:  # pragma: no cover - validate() rejects unknown kinds
+                raise ValueError(f"unknown arrival clause kind {kind!r}")
+        offs.sort()
+        program.append(offs)
+    return program
+
+
+def build_serving_sim(spec: ScenarioSpec, policy_wrapper=None, **kw):
+    """`ServingEngine` over the spec: same topology draw, same policy +
+    churn RNG stream as `build_sim`/`build_runtime` (construction order
+    mirrored), decode requests from the compiled arrival program.  The
+    spec's ``kv_weight`` lands on the network so residency feedback
+    prices the next plan; ``kw`` reaches the engine (the bench uses
+    ``reroute=False`` for the drop-and-retry baseline)."""
+    from repro.core.sim.engine import ServingEngine
+
+    net, _ = build_network(spec)
+    net.kv_weight = spec.kv_weight
+    rng = _rng(spec, _SALT_POLICY)
+    policy = make_policy(spec.scheduler, net, rng=rng)
+    if policy_wrapper is not None:
+        policy = policy_wrapper(policy)
+    return ServingEngine(
+        net, policy, arrival_program=compile_arrivals(spec),
+        churn_model=build_churn_model(spec, net),
+        profile=model_profile(spec),
+        prompt_len=spec.prompt_len, gen_tokens=spec.gen_tokens,
+        serve_batch=spec.serve_batch,
+        tokens_per_mb=spec.microbatch_size * spec.seq_len,
+        rng=rng, **kw)
+
+
+def run_serving_sim(spec: ScenarioSpec,
+                    iterations: Optional[int] = None) -> List[Any]:
+    eng = build_serving_sim(spec)
+    return eng.run(iterations if iterations is not None else spec.iterations)
+
+
+def build_serving_runtime(spec: ScenarioSpec, policy_wrapper=None, **kw):
+    """`ServeTrainer` over the spec — real decode compute following the
+    embedded engine's schedule, constructed with the *same* RNG stream
+    discipline as `build_serving_sim` so the serving differential
+    check can pin chain plans and TTFT/TPOT to exact equality."""
+    from repro.core.runtime.serving import ServeTrainer
+
+    net, _ = build_network(spec)
+    net.kv_weight = spec.kv_weight
+    rng = _rng(spec, _SALT_POLICY)
+    policy = make_policy(spec.scheduler, net, rng=rng)
+    if policy_wrapper is not None:
+        policy = policy_wrapper(policy)
+    return ServeTrainer(
+        model_config(spec), net, policy=policy,
+        arrival_program=compile_arrivals(spec),
+        churn_model=build_churn_model(spec, net),
+        profile=model_profile(spec),
+        prompt_len=spec.prompt_len, gen_tokens=spec.gen_tokens,
+        serve_batch=spec.serve_batch,
+        tokens_per_mb=spec.microbatch_size * spec.seq_len,
+        rng=rng, seed=spec.seed, **kw)

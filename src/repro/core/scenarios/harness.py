@@ -810,6 +810,178 @@ def check_codec_agreement(spec: ScenarioSpec,
 
 
 # ---------------------------------------------------------------------------
+# Serving plane: invariants + the sim<->runtime serving differential
+# ---------------------------------------------------------------------------
+
+def check_serving_invariants(spec: ScenarioSpec,
+                             iterations: Optional[int] = None
+                             ) -> Dict[str, Any]:
+    """Numpy-only serving invariants (the serve-fuzz loop's check).
+
+    * exact request conservation after every iteration:
+      ``sum(admitted) == sum(completed) + sum(dropped) + in_flight``;
+    * every admitted arrival is accounted for (admissions equal the
+      compiled arrival program's request count);
+    * latency sanity: TTFT/TPOT non-negative, first token after
+      arrival, completion after first token;
+    * seeded-rerun determinism: a second engine on the same spec
+      reproduces the summary row and the chain plans exactly;
+    * KV-residency triviality: with ``kv_weight == 0`` the network's
+      residency state must never materialize (the serving-free
+      bit-identity guarantee).
+    """
+    from repro.core.sim.metrics import summarize_serving
+
+    check = "serving-invariants"
+    its = iterations if iterations is not None else spec.iterations
+    eng = generate.build_serving_sim(spec)
+    ms = eng.run(its)
+    cum_adm = cum_done = cum_drop = 0
+    for i, m in enumerate(ms):
+        cum_adm += m.admitted
+        cum_done += m.completed
+        cum_drop += m.dropped
+        _require(cum_adm == cum_done + cum_drop + m.in_flight, spec, check,
+                 f"iteration {i}: conservation violated ({cum_adm} != "
+                 f"{cum_done} + {cum_drop} + {m.in_flight})")
+        _require(m.queued <= m.in_flight, spec, check,
+                 f"iteration {i}: queued {m.queued} > in_flight "
+                 f"{m.in_flight}")
+        _require(all(t >= 0.0 for t in m.ttfts)
+                 and all(t >= 0.0 for t in m.tpots), spec, check,
+                 f"iteration {i}: negative TTFT/TPOT")
+    expected = sum(len(p) for p in generate.compile_arrivals(spec)[:its])
+    _require(cum_adm == expected, spec, check,
+             f"admissions {cum_adm} != compiled arrivals {expected}")
+    for rid, rec in eng.requests.items():
+        if rec.first_token is not None:
+            _require(rec.first_token >= rec.arrival, spec, check,
+                     f"request {rid}: first token before arrival")
+        if rec.completion is not None:
+            _require(rec.first_token is not None
+                     and rec.completion >= rec.first_token, spec, check,
+                     f"request {rid}: completion before first token")
+    eng2 = generate.build_serving_sim(spec)
+    ms2 = eng2.run(its)
+    _require(summarize_serving(ms) == summarize_serving(ms2), spec, check,
+             "seeded rerun changed the serving summary")
+    _require(eng.chain_plans == eng2.chain_plans, spec, check,
+             "seeded rerun changed the serving chain plans")
+    if spec.kv_weight == 0.0:
+        _require(not eng.net.kv_active(), spec, check,
+                 "kv_weight == 0 but residency state materialized on "
+                 "the network")
+    return {"iterations": its, "admitted": cum_adm,
+            "completed": cum_done, "dropped": cum_drop,
+            "summary": summarize_serving(ms)}
+
+
+def check_serving_consistency(spec: ScenarioSpec,
+                              iterations: Optional[int] = None
+                              ) -> Dict[str, Any]:
+    """The serving simulator and the real-compute decode executor,
+    driven by the same spec, must agree *exactly*.
+
+    * identical per-iteration planned chain sets (both the recorded
+      ``policy.plan()`` output and the engines' deduplicated serving
+      chains) — decode requests ride the same flow plans on both
+      layers;
+    * bit-identical per-iteration serving ledgers and TTFT/TPOT lists
+      (the executor adds no timing of its own, so any divergence is a
+      scheduling bug);
+    * identical fault timelines (serving crashes recorded verbatim);
+    * every request the engine marks completed holds a full
+      ``gen_tokens`` decoded stream in the executor;
+    * zero-churn specs: the executor's token streams are bit-identical
+      to the standalone ``launch/serve.py``-style sequential decode on
+      the same reduced config and seed (text architectures).
+    """
+    from repro.core.sim.metrics import summarize_serving
+
+    check = "serving-consistency"
+    its = iterations if iterations is not None else spec.iterations
+
+    sim_rec: Dict[str, RecordingPolicy] = {}
+
+    def wrap_sim(p):
+        sim_rec["p"] = RecordingPolicy(p)
+        return sim_rec["p"]
+
+    eng = generate.build_serving_sim(spec, policy_wrapper=wrap_sim)
+    sim_ms = eng.run(its)
+
+    rt_rec: Dict[str, RecordingPolicy] = {}
+
+    def wrap_rt(p):
+        rt_rec["p"] = RecordingPolicy(p)
+        return rt_rec["p"]
+
+    tr = generate.build_serving_runtime(spec, policy_wrapper=wrap_rt)
+    rt_ms = tr.run(its)
+
+    if spec.scheduler == "gwtf":
+        for i, (a, b) in enumerate(zip(sim_rec["p"].plans,
+                                       rt_rec["p"].plans)):
+            _require(a == b, spec, check,
+                     f"iteration {i}: planned chain sets diverged "
+                     f"(sim {len(a)} vs runtime {len(b)})")
+        _require(eng.chain_plans == tr.engine.chain_plans, spec, check,
+                 "serving chain plans diverged between layers")
+    for i, (a, b) in enumerate(zip(sim_ms, rt_ms)):
+        _require(a == b, spec, check,
+                 f"iteration {i}: serving ledgers diverged "
+                 f"(sim {a} vs runtime {b})")
+    _require(summarize_serving(sim_ms) == summarize_serving(rt_ms), spec,
+             check, "serving summaries diverged")
+    _require(eng.timeline.records == tr.engine.timeline.records, spec,
+             check, "serving fault timelines diverged")
+    for rid, rec in tr.engine.requests.items():
+        if rec.completion is not None:
+            got = len(tr.token_stream(rid))
+            _require(got == spec.gen_tokens, spec, check,
+                     f"request {rid}: completed with {got} of "
+                     f"{spec.gen_tokens} tokens decoded")
+    streams_checked = 0
+    if not spec.churn:
+        import jax.numpy as jnp
+
+        from repro.core.runtime.serving import serving_inputs
+        from repro.models.transformer import (decode_step, init_cache,
+                                              prefill)
+
+        cfg = generate.model_config(spec)
+        params, prompt, _, _, _ = serving_inputs(
+            cfg, seed=spec.seed, batch=tr.max_requests,
+            prompt_len=spec.prompt_len)
+        done = sorted(rid for rid, rec in tr.engine.requests.items()
+                      if rec.completion is not None
+                      and rid < tr.max_requests)[:2]
+        for rid in done:
+            cache = init_cache(cfg, 1, spec.prompt_len + spec.gen_tokens,
+                               dtype=jnp.float32)
+            logits, cache = prefill(params, cfg,
+                                    tokens=prompt[rid:rid + 1],
+                                    cache=cache)
+            toks = [int(jnp.argmax(logits, -1)[0])]
+            for j in range(spec.gen_tokens - 1):
+                logits, cache = decode_step(
+                    params, cfg,
+                    tokens=jnp.asarray([[toks[-1]]], jnp.int32),
+                    cache=cache, index=jnp.int32(spec.prompt_len + j))
+                toks.append(int(jnp.argmax(logits, -1)[0]))
+            _require(toks == tr.token_stream(rid), spec, check,
+                     f"request {rid}: zero-churn stream diverged from "
+                     f"the standalone decode path")
+            streams_checked += 1
+    return {"iterations": its, "summary": summarize_serving(sim_ms),
+            "prefill_calls": tr.prefill_calls,
+            "decode_dispatches": tr.decode_dispatches,
+            "stacked_rows": tr.stacked_rows,
+            "replay_steps": tr.replay_steps,
+            "streams_checked": streams_checked}
+
+
+# ---------------------------------------------------------------------------
 # Check registry / corpus sweep
 # ---------------------------------------------------------------------------
 
@@ -845,6 +1017,11 @@ CHECKS: Dict[str, Tuple[Callable[[ScenarioSpec], Dict], Callable]] = {
                       lambda s: s.topology == "geo-abstract"),
     "codec-agreement": (check_codec_agreement,
                         lambda s: s.compression is not None),
+    "serving-invariants": (check_serving_invariants,
+                           lambda s: s.has_arrivals),
+    "serving-consistency": (check_serving_consistency,
+                            lambda s: (s.has_arrivals
+                                       and s.scheduler == "gwtf")),
 }
 
 #: checks cheap enough for the fuzz loop (no real JAX compute).
@@ -1013,6 +1190,61 @@ def random_adversarial_spec(rng: np.random.Generator,
     return spec.replace(churn=clauses)
 
 
+#: checks for the serving fuzz loop: `serving-invariants` pushes the
+#: sampled arrival programs + churn through the ServingEngine
+#: (conservation, latency sanity, seeded-rerun determinism) without
+#: real compute.  `serving-consistency` stays out — it decodes real
+#: tokens per case.
+SERVE_FUZZ_CHECKS = ("serving-invariants",)
+
+
+def random_serving_spec(rng: np.random.Generator,
+                        index: int) -> ScenarioSpec:
+    """One random small serving scenario: an arrival program (always at
+    least a Poisson clause, optionally spike/diurnal), a decode shape,
+    sometimes KV-residency pricing, sometimes churn hitting mid-run."""
+    topology = "geo" if rng.uniform() < 0.6 else "synthetic"
+    spec = ScenarioSpec(
+        name=f"serve-fuzz-{index}",
+        seed=int(rng.integers(0, 2 ** 16)),
+        topology=topology,
+        num_stages=int(rng.integers(2, 4)),
+        relays_per_stage=int(rng.integers(2, 5)),
+        num_data_nodes=1,
+        data_capacity=int(rng.integers(2, 5)),
+        iterations=2,
+        prompt_len=int(rng.integers(4, 17)),
+        gen_tokens=int(rng.integers(2, 33)),
+        serve_batch=int(rng.integers(1, 5)),
+        kv_weight=float(rng.choice([0.0, 0.0, 0.5, 2.0])),
+    )
+    arrivals: List[Dict[str, Any]] = [
+        {"kind": "poisson", "rate": float(rng.uniform(0.5, 4.0)),
+         "seed": int(rng.integers(0, 2 ** 16))}]
+    if rng.uniform() < 0.4:
+        arrivals.append({"kind": "spike",
+                         "at_iteration": int(rng.integers(0, 2)),
+                         "requests": int(rng.integers(1, 9)),
+                         "when": float(rng.uniform(0.05, 1.0))})
+    if rng.uniform() < 0.3:
+        arrivals.append({"kind": "diurnal",
+                         "rate": float(rng.uniform(1.0, 4.0)),
+                         "period": int(rng.integers(1, 5)),
+                         "low_scale": float(rng.uniform(0.0, 1.0)),
+                         "seed": int(rng.integers(0, 2 ** 16))})
+    clauses: List[Dict[str, Any]] = []
+    if rng.uniform() < 0.6:
+        clauses.append({"kind": "bernoulli",
+                        "p": float(rng.uniform(0.0, 0.3))})
+    if rng.uniform() < 0.3:
+        relay = int(rng.integers(spec.num_data_nodes,
+                                 spec.num_data_nodes + spec.num_relays))
+        clauses.append({"kind": "trace", "events": [
+            (int(rng.integers(0, 2)), "crash", relay,
+             float(rng.uniform(0.1, 0.9)))]})
+    return spec.replace(arrivals=arrivals, churn=clauses)
+
+
 def random_scale_spec(rng: np.random.Generator, index: int) -> ScenarioSpec:
     """One random *internet-scale* scenario (1000+ relays, mostly
     geo-abstract) for the scale-tier fuzz loop.  Cost ranges stay in
@@ -1070,6 +1302,9 @@ def _fails(spec: ScenarioSpec, checks: Sequence[str]
 
 _SHRINK_PASSES: Tuple[Tuple[str, Callable[[ScenarioSpec], Dict]], ...] = (
     ("drop-compression", lambda s: {"compression": None}),
+    ("drop-arrivals", lambda s: {"arrivals": s.arrivals[:-1]}),
+    ("fewer-gen-tokens", lambda s: {"gen_tokens":
+                                    max(1, s.gen_tokens // 2)}),
     ("drop-adversarial", lambda s: {
         "churn": [c for c in s.churn
                   if c["kind"] not in ADVERSARIAL_CLAUSES]}),

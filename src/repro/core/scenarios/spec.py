@@ -99,6 +99,30 @@ LOCATION_CLAUSES = frozenset({"regional_blackout", "regional_outage"})
 #: topologies whose nodes carry a real Node.location
 LOCATED_TOPOLOGIES = frozenset({"geo", "geo-abstract"})
 
+#: arrival clause schema: kind -> (required fields, {optional: default}).
+#: Arrival programs describe the *open-loop* decode request traffic the
+#: serving plane must absorb (the serving analogue of the churn
+#: program).  Every clause is deterministic by construction: the random
+#: kinds draw from ``np.random.default_rng([clause seed, iteration,
+#: clause index])`` — counter-based, never the shared policy stream —
+#: so the same spec always replays the same request trace across the
+#: sim and runtime layers (the serving differential tier depends on
+#: this).  ``at_iteration``/``duration`` window a clause the same way
+#: the adversarial churn clauses are windowed (duration 0 = forever).
+ARRIVAL_CLAUSES: Dict[str, Tuple[Tuple[str, ...], Dict[str, Any]]] = {
+    # Poisson(rate) new requests per iteration, offsets ~ U[0, 1)
+    "poisson": (("rate",),
+                {"seed": 0, "at_iteration": 0, "duration": 0}),
+    # diurnal load: Poisson whose rate swings sinusoidally between
+    # `low_scale`*rate and rate with period `period` iterations
+    "diurnal": (("rate", "period"),
+                {"low_scale": 0.25, "seed": 0,
+                 "at_iteration": 0, "duration": 0}),
+    # flash-crowd spike: exactly `requests` arrivals at `at_iteration`,
+    # evenly spread over the first `when` fraction of the iteration
+    "spike": (("at_iteration", "requests"), {"when": 0.25}),
+}
+
 
 @dataclass
 class ScenarioSpec:
@@ -145,6 +169,19 @@ class ScenarioSpec:
     #: codec pricing would be degenerate there.
     compression: Optional[Dict[str, Any]] = None
 
+    # ---- serving plane (decode traffic routed through the flow engine)
+    #: open-loop request-arrival program (see ARRIVAL_CLAUSES); an empty
+    #: list means the spec has no serving plane and none of the serving
+    #: layers/checks apply — bit-identical to the pre-serving stack.
+    arrivals: List[Dict[str, Any]] = field(default_factory=list)
+    prompt_len: int = 8            # tokens prefilled per request
+    gen_tokens: int = 8            # tokens decoded per request
+    serve_batch: int = 4           # continuous-batching width per chain
+    #: Eq. 1 surcharge (seconds-equivalent) per KV-resident sequence on
+    #: a destination node — prices loaded nodes out of new chain plans.
+    #: 0.0 keeps the flow network's trivial (bit-identical) state.
+    kv_weight: float = 0.0
+
     # ---- run shape ----------------------------------------------------
     iterations: int = 6
     scheduler: str = "gwtf"                     # "gwtf" | "swarm"
@@ -175,6 +212,11 @@ class ScenarioSpec:
         return all(c.get("kind") in DETERMINISTIC_CLAUSES
                    for c in self.churn)
 
+    @property
+    def has_arrivals(self) -> bool:
+        """True iff the spec carries a serving plane (arrival program)."""
+        return bool(self.arrivals)
+
     # ------------------------------------------------------------------
     def validate(self) -> "ScenarioSpec":
         """Raise ``ValueError`` on any inconsistent field; returns self."""
@@ -198,7 +240,9 @@ class ScenarioSpec:
                         ("num_data_nodes", 1), ("data_capacity", 1),
                         ("num_locations", 1), ("iterations", 1),
                         ("microbatches", 1), ("microbatch_size", 1),
-                        ("seq_len", 1), ("spare_nodes", 0)):
+                        ("seq_len", 1), ("spare_nodes", 0),
+                        ("prompt_len", 1), ("gen_tokens", 1),
+                        ("serve_batch", 1)):
             v = getattr(self, fld)
             if not isinstance(v, int) or v < lo:
                 raise ValueError(f"{self.name}: {fld}={v!r} must be an "
@@ -225,8 +269,12 @@ class ScenarioSpec:
         if self.spare_nodes and self.topology != "geo":
             raise ValueError(f"{self.name}: spare_nodes (flash crowd) "
                              f"requires the geo topology")
+        if not isinstance(self.kv_weight, (int, float)) or self.kv_weight < 0:
+            raise ValueError(f"{self.name}: kv_weight={self.kv_weight!r} "
+                             f"must be a number >= 0")
         self._validate_compression()
         self._validate_churn()
+        self._validate_arrivals()
         return self
 
     def _validate_compression(self) -> None:
@@ -355,6 +403,64 @@ class ScenarioSpec:
             raise ValueError(
                 f"{self.name}: flash_crowd clauses join {flash_total} nodes "
                 f"but only spare_nodes={self.spare_nodes} are provisioned")
+
+    def _validate_arrivals(self) -> None:
+        for i, clause in enumerate(self.arrivals):
+            if not isinstance(clause, dict):
+                raise ValueError(f"{self.name}: arrivals[{i}] must be a "
+                                 f"dict")
+            kind = clause.get("kind")
+            if kind not in ARRIVAL_CLAUSES:
+                raise ValueError(
+                    f"{self.name}: arrivals[{i}] has unknown kind {kind!r} "
+                    f"(expected one of {sorted(ARRIVAL_CLAUSES)})")
+            required, optional = ARRIVAL_CLAUSES[kind]
+            fields = set(clause) - {"kind"}
+            missing = set(required) - fields
+            unknown = fields - set(required) - set(optional)
+            if missing:
+                raise ValueError(f"{self.name}: arrivals[{i}] ({kind}) is "
+                                 f"missing field(s) {sorted(missing)}")
+            if unknown:
+                raise ValueError(f"{self.name}: arrivals[{i}] ({kind}) has "
+                                 f"unknown field(s) {sorted(unknown)}")
+            if kind in ("poisson", "diurnal"):
+                rate = clause["rate"]
+                if not isinstance(rate, (int, float)) or rate < 0:
+                    raise ValueError(f"{self.name}: arrivals[{i}] ({kind}) "
+                                     f"rate={rate!r} must be a number >= 0")
+                at = clause.get("at_iteration", 0)
+                dur = clause.get("duration", 0)
+                for fld, v in (("at_iteration", at), ("duration", dur)):
+                    if not isinstance(v, int) or v < 0:
+                        raise ValueError(
+                            f"{self.name}: arrivals[{i}] ({kind}) "
+                            f"{fld}={v!r} must be an int >= 0")
+            if kind == "diurnal":
+                period = clause["period"]
+                if not isinstance(period, int) or period < 1:
+                    raise ValueError(f"{self.name}: arrivals[{i}] (diurnal) "
+                                     f"period={period!r} must be an "
+                                     f"int >= 1")
+                low = clause.get("low_scale", 0.25)
+                if not isinstance(low, (int, float)) or not 0 <= low <= 1:
+                    raise ValueError(f"{self.name}: arrivals[{i}] (diurnal) "
+                                     f"low_scale={low!r} out of [0, 1]")
+            if kind == "spike":
+                at = clause["at_iteration"]
+                reqs = clause["requests"]
+                if not isinstance(at, int) or at < 0:
+                    raise ValueError(f"{self.name}: arrivals[{i}] (spike) "
+                                     f"at_iteration={at!r} must be an "
+                                     f"int >= 0")
+                if not isinstance(reqs, int) or reqs < 1:
+                    raise ValueError(f"{self.name}: arrivals[{i}] (spike) "
+                                     f"requests={reqs!r} must be an "
+                                     f"int >= 1")
+                when = clause.get("when", 0.25)
+                if not isinstance(when, (int, float)) or not 0 < when <= 1:
+                    raise ValueError(f"{self.name}: arrivals[{i}] (spike) "
+                                     f"when={when!r} out of (0, 1]")
 
     # ------------------------------------------------------------------
     # dict / JSON round-trip

@@ -100,7 +100,8 @@ import numpy as np
 from repro.core.flow.graph import FlowNetwork
 from repro.core.sim.faults import (BernoulliChurn, ChurnContext, ChurnModel,
                                    adversarial_plan)
-from repro.core.sim.metrics import IterationMetrics, ModelProfile
+from repro.core.sim.metrics import (IterationMetrics, ModelProfile,
+                                    RequestMetrics, ServingIterationMetrics)
 from repro.core.sim.policies import FaultView, RoutingPolicy
 from repro.core.sim.timeline import FaultTimeline, record_injections
 
@@ -770,4 +771,460 @@ class SimulationEngine:
 
     # ------------------------------------------------------------------
     def run(self, iterations: int) -> List[IterationMetrics]:
+        return [self.run_iteration() for _ in range(iterations)]
+
+
+# ---------------------------------------------------------------------------
+# Serving plane: decode requests routed as flow units over the stage graph
+# ---------------------------------------------------------------------------
+
+# serving event kinds (same tie-break discipline as the training core:
+# completions at exactly a crash instant beat the crash)
+_S_ARRIVE, _S_DONE, _S_CRASH = 0, 1, 2
+
+
+@dataclass(slots=True)
+class _Req:
+    """One decode request's scheduling state (analytic segments).
+
+    A *segment* is a crash-free run of decoding on one chain: token
+    ``k0 + j`` lands at ``seg_t0 + j * step`` (``k0`` tokens are in
+    hand at ``seg_t0``).  A fresh segment has ``pre = 0, k0 = 1,
+    seg_t0 = first-token time``; a post-requeue segment resumes with
+    the ``k0`` tokens that survived the migration.  ``epoch``
+    invalidates stale completion events after a reschedule.
+    """
+    rid: int
+    rec: RequestMetrics
+    chain: Optional[Tuple[int, ...]] = None   # (dn, s0..s_{S-1}, dn)
+    epoch: int = 0
+    pre: int = 0                  # tokens in hand before seg_t0
+    k0: int = 0                   # tokens in hand at seg_t0
+    seg_t0: float = 0.0
+    step: float = 0.0
+    t_complete: float = float("inf")
+    done: bool = False
+    dropped: bool = False
+
+    def tokens_at(self, t: float, gen: int) -> int:
+        if self.chain is None:
+            return self.pre
+        if t < self.seg_t0:
+            return self.pre
+        if self.step <= 0.0:
+            return gen
+        return min(gen, self.k0 + int((t - self.seg_t0) / self.step))
+
+
+class ServingEngine:
+    """Open-loop serving simulator over the planned flow chains.
+
+    Each iteration: sample churn, let the routing policy plan its
+    complete-flow chains (the same ``policy.plan()`` the training
+    engine consumes — decode requests ride the *identical* chain sets,
+    which is what the serving differential tier pins), admit the
+    iteration's compiled arrivals, and schedule decode analytically:
+    a request occupies one of ``serve_batch`` continuous-batching slots
+    on a chain from prefill start to last token.  Per-request TTFT/TPOT
+    land in :class:`RequestMetrics`; the per-iteration conservation
+    ledger (``admitted == completed + dropped + in_flight``
+    cumulatively) lands in :class:`ServingIterationMetrics`.
+
+    Crash handling is the serving analogue of requeue-instead-of-drop
+    (``reroute=True``): in-flight sequences migrate to a surviving
+    planned chain, paying crash-detection delay + KV migration at the
+    link's admissible wire codec for the surviving stages + re-prefill
+    of only the crashed stage — the mirror of the runtime's one-stage
+    activation replay.  ``reroute=False`` is the drop-and-retry
+    baseline: the sequence restarts from scratch (TTFT re-measured at
+    the attempt that completes), and ``max_restarts`` failures drop it.
+
+    KV-cache residency feeds back into planning: at iteration end the
+    engine publishes per-node resident-sequence counts into
+    ``FlowNetwork.update_kv_residency`` (when ``net.kv_weight > 0``),
+    so the next ``plan()`` prices loaded nodes per Eq. 1.  Timing
+    itself only reads the physics matrices (``comm_matrix``/compute),
+    which the surcharge never touches.
+
+    All arithmetic is a deterministic function of (spec seed, arrival
+    program, churn program), so metrics pin byte-for-byte in golden
+    files and the runtime executor can replay identical schedules.
+    """
+
+    def __init__(self, net: FlowNetwork, policy: RoutingPolicy, *,
+                 arrival_program: List[List[float]],
+                 churn_model: Optional[ChurnModel] = None,
+                 profile: Optional[ModelProfile] = None,
+                 prompt_len: int = 8, gen_tokens: int = 8,
+                 serve_batch: int = 4, tokens_per_mb: int = 128,
+                 timeout: float = 5.0, reroute: bool = True,
+                 max_restarts: int = 5,
+                 rng: Optional[np.random.Generator] = None,
+                 timeline: Optional[FaultTimeline] = None):
+        self.net = net
+        self.policy = policy
+        self.churn_model = churn_model or BernoulliChurn(0.0)
+        self.profile = profile or ModelProfile(fwd_compute=2.0)
+        self.arrival_program = arrival_program
+        self.prompt_len = int(prompt_len)
+        self.gen_tokens = int(gen_tokens)
+        self.serve_batch = int(serve_batch)
+        self.tokens_per_mb = max(1, int(tokens_per_mb))
+        self.timeout = float(timeout)       # crash-detection delay
+        self.reroute = bool(reroute)
+        self.max_restarts = int(max_restarts)
+        self.rng = rng or np.random.default_rng(0)
+        self.timeline = timeline if timeline is not None else FaultTimeline()
+        # bytes per token crossing a stage boundary / resident per stage
+        self.token_bytes = self.profile.activation_bytes / self.tokens_per_mb
+        self.kv_token_bytes = 2.0 * self.token_bytes     # K and V slices
+        self._iteration = 0
+        self._clock = 0.0
+        self._rid = itertools.count()
+        self.requests: Dict[int, RequestMetrics] = {}
+        self._reqs: Dict[int, _Req] = {}
+        self._active: Dict[int, _Req] = {}       # on a chain right now
+        self._queue: deque = deque()             # admitted, waiting
+        self._load: Dict[Tuple[int, ...], int] = {}
+        self._kv_counts: Dict[int, int] = {}
+        self.chain_plans: List[List[Tuple[int, ...]]] = []
+        self.traces: List[List[tuple]] = []      # runtime replay script
+        self.metrics: List[ServingIterationMetrics] = []
+
+    # -- per-chain timing (physics only; the KV surcharge never lands
+    # here — it steers planning, not transfer speed) --------------------
+    def _chain_times(self, chain: Tuple[int, ...],
+                     fwd_t: List[float]) -> Tuple[float, float]:
+        comm_p = self.net.comm_matrix(self.prompt_len * self.token_bytes)
+        comm_t = self.net.comm_matrix(self.token_bytes)
+        prefill = 0.0
+        step = 0.0
+        for frm, to in zip(chain, chain[1:]):
+            prefill += float(comm_p[frm][to])
+            step += float(comm_t[frm][to])
+        per_tok = [fwd_t[nid] / self.tokens_per_mb for nid in chain[1:-1]]
+        prefill += sum(per_tok) * self.prompt_len
+        step += sum(per_tok)
+        return prefill, step
+
+    def _resume_time(self, chain: Tuple[int, ...], fwd_t: List[float],
+                     tokens: int) -> float:
+        """Time to re-materialize ``tokens`` of KV on ``chain`` (the
+        prefill formula at an arbitrary token count — used when a
+        queued eviction finally lands a slot and must rebuild its
+        prompt + generated-token cache before decoding resumes)."""
+        comm = self.net.comm_matrix(tokens * self.token_bytes)
+        t = 0.0
+        for frm, to in zip(chain, chain[1:]):
+            t += float(comm[frm][to])
+        t += sum(fwd_t[nid] / self.tokens_per_mb
+                 for nid in chain[1:-1]) * tokens
+        return t
+
+    def _estimate_iteration(self) -> float:
+        S = self.net.num_stages
+        costs = [n.compute_cost for n in self.net.alive_nodes()
+                 if not n.is_data]
+        mean_c = float(np.mean(costs)) if costs else 1.0
+        per_hop = mean_c * (1 + self.profile.bwd_mult)
+        return max(60.0, S * (per_hop + 10.0))
+
+    # ------------------------------------------------------------------
+    def run_iteration(self) -> ServingIterationMetrics:
+        net = self.net
+        it = self._iteration
+        self._iteration += 1
+        m = ServingIterationMetrics()
+        horizon = self._estimate_iteration()
+        t_start, t_end = self._clock, self._clock + horizon
+
+        # ---- fault layer ----------------------------------------------
+        crash_local = self.churn_model.sample(ChurnContext(
+            net=net, rng=self.rng, horizon=horizon,
+            iteration=it, on_rejoin=self.policy.on_rejoin))
+        record_injections(self.timeline, it, crash_local,
+                          adversarial_plan(self.churn_model, it))
+        crash_at = {nid: t_start + ct for nid, ct in crash_local.items()}
+
+        # ---- scheduler layer ------------------------------------------
+        paths = self.policy.plan()
+        chains: List[Tuple[int, ...]] = []
+        for p in paths:
+            key = tuple(p)
+            if key not in chains:
+                chains.append(key)
+        self.chain_plans.append(list(chains))
+
+        N = (max(net.nodes) + 1) if net.nodes else 0
+        fwd_t = [0.05] * N
+        for nid, node in net.nodes.items():
+            fwd_t[nid] = max(0.05, node.compute_cost)
+        times = {c: self._chain_times(c, fwd_t) for c in chains}
+        for r in self._active.values():
+            if r.chain is not None and r.chain not in times:
+                times[r.chain] = self._chain_times(r.chain, fwd_t)
+
+        # loads rebuilt from the live census (plans change every
+        # iteration; stale keys must not pin phantom slots)
+        load: Dict[Tuple[int, ...], int] = {}
+        for r in self._active.values():
+            load[r.chain] = load.get(r.chain, 0) + 1
+        self._load = load
+        kv_counts = self._kv_counts
+        kv_peak = max(kv_counts.values(), default=0)
+        dead = {nid for nid, node in net.nodes.items() if not node.alive}
+        trace: List[tuple] = []
+
+        heap: List[tuple] = []
+        seq = itertools.count()
+        for nid, ct in sorted(crash_at.items()):
+            heappush = heapq.heappush
+            heappush(heap, (ct, next(seq), _S_CRASH, nid))
+        for r in self._active.values():
+            if r.t_complete <= t_end:
+                heapq.heappush(heap, (r.t_complete, next(seq), _S_DONE,
+                                      (r.rid, r.epoch)))
+        offsets = (self.arrival_program[it]
+                   if it < len(self.arrival_program) else [])
+        for u in offsets:
+            rid = next(self._rid)
+            rec = RequestMetrics(rid=rid, arrival=t_start + u * horizon,
+                                 prompt_len=self.prompt_len,
+                                 gen_tokens=self.gen_tokens)
+            self.requests[rid] = rec
+            self._reqs[rid] = _Req(rid=rid, rec=rec)
+            heapq.heappush(heap, (rec.arrival, next(seq), _S_ARRIVE, rid))
+
+        gen = self.gen_tokens
+
+        def chain_crashed(chain: Tuple[int, ...], t: float) -> bool:
+            return any(nid in dead or crash_at.get(nid, float("inf")) <= t
+                       for nid in chain[1:-1])
+
+        def bump_kv(chain: Tuple[int, ...], delta: int):
+            nonlocal kv_peak
+            for nid in chain[1:-1]:
+                c = kv_counts.get(nid, 0) + delta
+                if c:
+                    kv_counts[nid] = c
+                else:
+                    kv_counts.pop(nid, None)
+                if c > kv_peak:
+                    kv_peak = c
+
+        def start(r: _Req, t: float) -> bool:
+            """Begin (or resume) service on the first surviving planned
+            chain with a free slot.  ``r.pre == 0`` is a fresh prefill;
+            ``r.pre > 0`` resumes a queued eviction — the prompt plus
+            the surviving tokens re-materialize first (prefill formula
+            at prompt_len + pre tokens), the first-token time is NOT
+            re-measured, and decode continues from token ``pre``."""
+            for chain in chains:
+                if self._load.get(chain, 0) >= self.serve_batch:
+                    continue
+                if chain_crashed(chain, t):
+                    continue
+                prefill, step = times[chain]
+                r.chain = chain
+                r.epoch += 1
+                r.step = step
+                if r.pre > 0:
+                    r.k0 = r.pre
+                    r.seg_t0 = t + self._resume_time(
+                        chain, fwd_t, self.prompt_len + r.pre)
+                else:
+                    r.k0 = 1
+                    r.seg_t0 = t + prefill
+                    r.rec.first_token = r.seg_t0
+                r.t_complete = r.seg_t0 + (gen - r.k0) * step
+                self._load[chain] = self._load.get(chain, 0) + 1
+                self._active[r.rid] = r
+                bump_kv(chain, +1)
+                trace.append(("start", t, r.rid, chain, r.pre))
+                if r.t_complete <= t_end:
+                    heapq.heappush(heap, (r.t_complete, next(seq), _S_DONE,
+                                          (r.rid, r.epoch)))
+                return True
+            return False
+
+        def release(r: _Req):
+            if r.chain is not None:
+                self._load[r.chain] = self._load.get(r.chain, 1) - 1
+                bump_kv(r.chain, -1)
+                r.chain = None
+
+        def drain_queue(t: float):
+            while self._queue:
+                r = self._reqs[self._queue[0]]
+                if r.done or r.dropped:
+                    self._queue.popleft()
+                    continue
+                if not start(r, t):
+                    break
+                self._queue.popleft()
+
+        def interrupt(r: _Req, nid: int, ct: float):
+            """Chain member ``nid`` crashed at ``ct`` mid-service."""
+            nonlocal kv_peak
+            k = r.tokens_at(ct, gen)
+            old = r.chain
+            release(r)
+            # invalidate the scheduled completion immediately: every
+            # interrupt outcome (requeue, queue-wait, restart, drop)
+            # reschedules or abandons it, and a stale _S_DONE firing on
+            # a queued request would double-count it as completed
+            r.epoch += 1
+            r.t_complete = float("inf")
+            td = ct + self.timeout        # crash-detection delay
+            self.timeline.record(it, "crash", "detection", nid)
+            if not self.reroute:
+                # drop-and-retry baseline: all decode state is lost
+                r.rec.restarts += 1
+                m.restarts += 1
+                r.pre = r.k0 = 0
+                r.rec.first_token = None
+                trace.append(("restart", td, r.rid))
+                if r.rec.restarts > self.max_restarts:
+                    r.dropped = True
+                    r.rec.dropped = True
+                    self._active.pop(r.rid, None)
+                    m.dropped += 1
+                    trace.append(("drop", td, r.rid))
+                    return
+                if not start(r, td):
+                    self._active.pop(r.rid, None)
+                    self._queue.append(r.rid)
+                return
+            # defended: requeue-instead-of-drop.  Find a surviving
+            # planned chain with a free slot; migrate the KV slices of
+            # the surviving stages (priced at the links' admissible
+            # wire codec) and re-prefill only the crashed stage(s).
+            target = None
+            for chain in chains:
+                if self._load.get(chain, 0) >= self.serve_batch:
+                    continue
+                if chain_crashed(chain, td):
+                    continue
+                target = chain
+                break
+            if target is None:
+                # no capacity anywhere yet: keep the tokens, wait
+                r.pre = r.k0 = k
+                self._active.pop(r.rid, None)
+                self._queue.append(r.rid)
+                trace.append(("requeue_wait", td, r.rid, k))
+                return
+            kv_tokens = self.prompt_len + k
+            kv_bytes = self.kv_token_bytes * kv_tokens
+            mig = 0.0
+            reprefill = 0.0
+            moved = 0.0
+            for s_idx in range(1, len(target) - 1):
+                o_nid, n_nid = old[s_idx], target[s_idx]
+                o_dead = (o_nid in dead
+                          or crash_at.get(o_nid, float("inf")) <= td)
+                if o_dead:
+                    # crashed stage: KV is gone — re-prefill it from
+                    # the surviving boundary activations
+                    reprefill += (fwd_t[n_nid] / self.tokens_per_mb
+                                  * kv_tokens)
+                elif o_nid != n_nid:
+                    mig = max(mig, net.kv_migration_cost(
+                        o_nid, n_nid, kv_bytes))
+                    moved += kv_bytes
+            t2 = td + mig + reprefill
+            prefill, step = times[target]
+            r.chain = target
+            r.epoch += 1
+            r.step = step
+            r.rec.requeues += 1
+            r.rec.migrated_kv_bytes += moved
+            m.requeues += 1
+            m.migrated_kv_bytes += moved
+            if k == 0:
+                # crashed during prefill: first token still pending
+                r.pre = 0
+                r.k0 = 1
+                r.seg_t0 = t2 + prefill
+                r.rec.first_token = r.seg_t0
+            else:
+                r.pre = r.k0 = k
+                r.seg_t0 = t2
+            r.t_complete = r.seg_t0 + (gen - r.k0) * r.step
+            self._load[target] = self._load.get(target, 0) + 1
+            bump_kv(target, +1)
+            self.timeline.record(it, "crash", "repair", nid)
+            trace.append(("requeue", td, r.rid, old, target, k))
+            if r.t_complete <= t_end:
+                heapq.heappush(heap, (r.t_complete, next(seq), _S_DONE,
+                                      (r.rid, r.epoch)))
+
+        # requests stranded in the queue from earlier iterations get
+        # first claim on the fresh plan
+        drain_queue(t_start)
+
+        while heap:
+            t, _, kind, payload = heapq.heappop(heap)
+            if t > t_end:
+                break
+            if kind == _S_ARRIVE:
+                r = self._reqs[payload]
+                m.admitted += 1
+                if not start(r, t):
+                    self._queue.append(payload)
+            elif kind == _S_DONE:
+                rid, epoch = payload
+                r = self._reqs[rid]
+                if r.done or r.dropped or r.epoch != epoch:
+                    continue
+                r.done = True
+                r.rec.completion = r.t_complete
+                release(r)
+                self._active.pop(rid, None)
+                m.completed += 1
+                m.ttfts.append(r.rec.ttft)
+                m.tpots.append(r.rec.tpot)
+                trace.append(("complete", t, rid))
+                drain_queue(t)
+            else:                                  # _S_CRASH
+                nid = payload
+                hit = [r for r in self._active.values()
+                       if r.chain is not None and nid in r.chain[1:-1]]
+                hit.sort(key=lambda r: r.rid)
+                for r in hit:
+                    interrupt(r, nid, t)
+                drain_queue(t)
+
+        # ---- iteration close-out --------------------------------------
+        m.in_flight = len(self._active) + len(self._queue)
+        m.queued = len(self._queue)
+        m.kv_peak = kv_peak
+        self._clock = t_end
+        self.traces.append(trace)
+
+        # commit crashes for the next iteration (same order as training)
+        for nid in crash_local:
+            net.kill_node(nid)
+            self.policy.on_crash(nid)
+
+        # publish residency so the next plan prices loaded nodes; the
+        # trivial (kv_weight == 0) network never sees an update, so its
+        # cost epochs stay bit-identical to the serving-free stack
+        if net.kv_weight > 0.0:
+            net.update_kv_residency(dict(kv_counts))
+        self.metrics.append(m)
+        return m
+
+    # ------------------------------------------------------------------
+    def tokens_now(self, rid: int) -> int:
+        """Tokens the request holds at the engine's current clock (the
+        runtime executor advances real decoding to exactly this)."""
+        r = self._reqs[rid]
+        if r.done:
+            return self.gen_tokens
+        if r.dropped:
+            return 0
+        return r.tokens_at(self._clock, self.gen_tokens)
+
+    def run(self, iterations: int) -> List[ServingIterationMetrics]:
         return [self.run_iteration() for _ in range(iterations)]

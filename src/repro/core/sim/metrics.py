@@ -12,6 +12,12 @@ queue depth, and a `truncated` flag set when the event budget
 (`max_events`) was exhausted before the calendar drained — a truncated
 iteration reports a *lower bound* on duration, not a clean result.
 
+The serving plane adds `RequestMetrics` (per-decode-request lifecycle:
+arrival, first token, completion — TTFT/TPOT derive from these) and
+`ServingIterationMetrics` (the per-iteration conservation ledger);
+`summarize_serving` pools them into the p50/p99 TTFT/TPOT row the
+serving bench and golden files pin.
+
 `summarize` folds a run's iteration list into table-style mean/std
 pairs — the Table II/III columns plus the queue-depth and
 reroute-count series (used by `examples/churn_recovery.py`; the crash
@@ -109,6 +115,108 @@ _COLUMNS = (
     ("timeouts", lambda m: float(m.timeouts)),
     ("retries", lambda m: float(m.retries)),
 )
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    """Deterministic linear-interpolation percentile (numpy default)."""
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, dtype=float), q))
+
+
+@dataclass
+class RequestMetrics:
+    """One decode request's lifecycle through the serving plane.
+
+    All times are simulated seconds on the engine's global clock.
+    ``first_token``/``completion`` stay ``None`` while the request is
+    in flight; under the drop-and-retry baseline a restart resets
+    ``first_token``, so TTFT always measures arrival to the first token
+    of the attempt that ultimately completed (the latency a client
+    actually observes).
+    """
+    rid: int
+    arrival: float
+    prompt_len: int
+    gen_tokens: int
+    first_token: Optional[float] = None
+    completion: Optional[float] = None
+    requeues: int = 0             # defended chain migrations survived
+    restarts: int = 0             # drop-and-retry from-scratch attempts
+    migrated_kv_bytes: float = 0.0
+    dropped: bool = False
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (arrival -> first decoded token)."""
+        if self.first_token is None:
+            return None
+        return self.first_token - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token after the first (steady decode rate)."""
+        if self.completion is None or self.first_token is None:
+            return None
+        if self.gen_tokens <= 1:
+            return 0.0
+        return (self.completion - self.first_token) / (self.gen_tokens - 1)
+
+
+@dataclass
+class ServingIterationMetrics:
+    """Per-iteration serving ledger (the request-conservation unit).
+
+    ``admitted``/``completed``/``dropped`` count events *within* the
+    iteration; ``in_flight`` is the end-of-iteration census, so the
+    cumulative invariant ``sum(admitted) == sum(completed) +
+    sum(dropped) + in_flight`` must hold exactly after every iteration.
+    """
+    admitted: int = 0
+    completed: int = 0
+    dropped: int = 0
+    in_flight: int = 0            # end-of-iteration census
+    queued: int = 0               # subset of in_flight not yet on a chain
+    requeues: int = 0             # defended reroutes of live sequences
+    restarts: int = 0             # drop-and-retry from-scratch attempts
+    migrated_kv_bytes: float = 0.0
+    kv_peak: int = 0              # max resident sequences on any node
+    ttfts: List[float] = None     # TTFTs of requests completed this iter
+    tpots: List[float] = None
+
+    def __post_init__(self):
+        if self.ttfts is None:
+            self.ttfts = []
+        if self.tpots is None:
+            self.tpots = []
+
+
+def summarize_serving(
+        metrics: List["ServingIterationMetrics"]) -> Dict[str, float]:
+    """Fold a serving run into the bench/golden scalar row.
+
+    Latency percentiles (p50/p99 TTFT and TPOT, simulated seconds) pool
+    every completed request across iterations; the counters are run
+    totals.  All values are deterministic functions of the spec, so the
+    row pins byte-for-byte in golden files.
+    """
+    ttfts = [t for m in metrics for t in m.ttfts]
+    tpots = [t for m in metrics for t in m.tpots]
+    return {
+        "admitted": float(sum(m.admitted for m in metrics)),
+        "completed": float(sum(m.completed for m in metrics)),
+        "dropped": float(sum(m.dropped for m in metrics)),
+        "in_flight": float(metrics[-1].in_flight) if metrics else 0.0,
+        "requeues": float(sum(m.requeues for m in metrics)),
+        "restarts": float(sum(m.restarts for m in metrics)),
+        "migrated_kv_bytes": float(
+            sum(m.migrated_kv_bytes for m in metrics)),
+        "kv_peak": float(max((m.kv_peak for m in metrics), default=0)),
+        "p50_ttft": _percentile(ttfts, 50.0),
+        "p99_ttft": _percentile(ttfts, 99.0),
+        "p50_tpot": _percentile(tpots, 50.0),
+        "p99_tpot": _percentile(tpots, 99.0),
+    }
 
 
 def summarize(metrics: List[IterationMetrics], *,

@@ -38,8 +38,7 @@ def main():
     args = ap.parse_args()
 
     from repro.configs import get_config
-    from repro.models.transformer import (decode_step, init_cache,
-                                          init_params, prefill)
+    from repro.models.transformer import decode_step, init_cache, prefill
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -47,18 +46,18 @@ def main():
     window = args.window if args.long else None
     cache_len = window if args.long else args.prompt_len + args.gen
 
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
+    # independent keys per purpose (params / prompt / aux / sampling) —
+    # the shared split with the flow-routed serving runtime, so its
+    # zero-churn decode is bit-comparable to this driver on one seed
+    from repro.core.runtime.serving import serving_inputs
+
     B = args.batch
-    prompt = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
-    vision = (jax.random.normal(key, (B, cfg.num_image_tokens,
-                                      cfg.vision_dim))
-              if cfg.arch_type == "vlm" else None)
+    params, prompt, vision, embeds, k_sample = serving_inputs(
+        cfg, seed=args.seed, batch=B, prompt_len=args.prompt_len)
 
     cache = init_cache(cfg, B, cache_len, dtype=jnp.float32)
     t0 = time.time()
     if cfg.audio_frontend:
-        embeds = jax.random.normal(key, (B, args.prompt_len, cfg.d_model))
         logits, cache = prefill(params, cfg, embeds=embeds, cache=cache)
     else:
         logits, cache = prefill(params, cfg, tokens=prompt, vision=vision,
@@ -75,11 +74,12 @@ def main():
         return jax.random.categorical(
             k, logits / args.temperature)[:, None]
 
-    tok = sample(logits, key)
+    k_sample, k0 = jax.random.split(k_sample)
+    tok = sample(logits, k0)
     out = [tok]
     t0 = time.time()
     for i in range(args.gen):
-        key, sk = jax.random.split(key)
+        k_sample, sk = jax.random.split(k_sample)
         logits, cache = step(params, tok, cache,
                              jnp.int32(args.prompt_len + i))
         tok = sample(logits, sk)

@@ -16,6 +16,7 @@ from repro.core.scenarios.corpus import (GOLDEN_PINNED, get_scenario,
                                          load_corpus, load_golden)
 from repro.core.scenarios.harness import (ADVERSARIAL_FUZZ_CHECKS,
                                           FUZZ_CHECKS, SCALE_FUZZ_CHECKS,
+                                          SERVE_FUZZ_CHECKS,
                                           ScenarioDiscrepancy,
                                           check_capacity_monotonicity,
                                           check_codec_agreement,
@@ -24,13 +25,15 @@ from repro.core.scenarios.harness import (ADVERSARIAL_FUZZ_CHECKS,
                                           check_flow_equivalence,
                                           check_optimal_consistency,
                                           check_permutation_invariance,
+                                          check_serving_invariants,
                                           check_sim_runtime_consistency,
                                           check_zero_churn, fuzz, minimize,
                                           random_adversarial_spec,
-                                          random_scale_spec, run_checks,
+                                          random_scale_spec,
+                                          random_serving_spec, run_checks,
                                           scale_checks)
 from repro.core.scenarios.spec import ScenarioSpec
-from repro.core.sim.metrics import summarize
+from repro.core.sim.metrics import summarize, summarize_serving
 from tests._hypothesis_compat import given, settings, st
 
 CORPUS = load_corpus()
@@ -303,6 +306,9 @@ class TestGoldenMetrics:
         assert flow.rounds == golden["flow"]["rounds"]
         table = summarize(generate.run_sim(spec), warmup=1)
         assert {k: list(v) for k, v in table.items()} == golden["sim"]
+        if "serving" in golden:
+            row = summarize_serving(generate.run_serving_sim(spec))
+            assert row == golden["serving"]
 
     def test_golden_covers_whole_corpus(self):
         golden = load_golden()
@@ -551,6 +557,34 @@ class TestScaleTier:
         assert rep.cases > 0
         assert rep.ok, "\n\n".join(
             f"[{f.check}] {f.detail}" for f in rep.failures)
+
+
+@pytest.mark.scenarios
+class TestServingTier:
+    """Serving-plane corpus scenarios: numpy-only invariants for every
+    spec with an arrival program, plus the seeded serve-fuzz session.
+    The real-compute serving differential lives in
+    tests/test_serving.py (it decodes actual tokens)."""
+
+    @pytest.mark.parametrize("name", ["serve-steady-poisson",
+                                      "serve-flash-spike",
+                                      "serve-churn-under-load"])
+    def test_serving_invariants_corpus(self, name):
+        out = check_serving_invariants(get_scenario(name))
+        assert out["admitted"] > 0 and out["completed"] > 0
+
+    def test_seeded_serving_fuzz(self, tmp_path):
+        """Randomized arrival programs + decode shapes + churn against
+        the ServingEngine invariants (default 5 s locally; CI sets
+        SCENARIO_SERVE_FUZZ_SECONDS=30)."""
+        budget = float(os.environ.get("SCENARIO_SERVE_FUZZ_SECONDS", "5"))
+        rep = fuzz(seed=20260809, budget_seconds=budget,
+                   corpus_dir=str(tmp_path), checks=SERVE_FUZZ_CHECKS,
+                   spec_factory=random_serving_spec)
+        assert rep.cases > 0
+        assert rep.ok, "\n\n".join(
+            f"[{f.check}] {f.detail}\nminimized: {f.minimized.to_json()}"
+            for f in rep.failures)
 
 
 @pytest.mark.scenarios
